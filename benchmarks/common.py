@@ -1,0 +1,83 @@
+"""Shared benchmark plumbing: cached FL campaign runs + CSV emission.
+
+Campaign results are cached as JSON under results/fl/ keyed by their
+parameters, so `python -m benchmarks.run` is cheap after a cache-filling
+pass and every table reads consistent runs.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+FL_DIR = os.path.join(ROOT, "results", "fl")
+DRYRUN_DIR = os.path.join(ROOT, "results", "dryrun")
+
+# Benchmark-scale targets for the synthetic tasks (paper targets are for
+# the real datasets; see DESIGN.md §Assumption-changes #2).
+TARGETS = {"cnn@mnist": 0.90, "cnn@cifar10": 0.62, "cnn@har": 0.55,
+           "lstm@shakespeare": 0.30}
+QUICK_TASKS = ["cnn@mnist", "cnn@har"]
+ALL_TASKS = ["cnn@mnist", "cnn@cifar10", "cnn@har", "lstm@shakespeare"]
+
+
+def _key(params: Dict) -> str:
+    s = json.dumps(params, sort_keys=True)
+    return hashlib.md5(s.encode()).hexdigest()[:16]
+
+
+def cached_run(task: str, method: str, *, rounds: int = 50,
+               lam: float = 0.8, alpha: float = 1.0, beta: float = 1.0,
+               seed: int = 0, target_acc: Optional[float] = None,
+               force: bool = False) -> Dict:
+    """Run (or load) one FL campaign; returns a JSON-able summary dict."""
+    target = TARGETS[task] if target_acc is None else target_acc
+    params = dict(task=task, method=method, rounds=rounds, lam=lam,
+                  alpha=alpha, beta=beta, seed=seed, target=target, v=3)
+    os.makedirs(FL_DIR, exist_ok=True)
+    path = os.path.join(FL_DIR, f"{task.replace('@','_')}__{method}__"
+                                f"{_key(params)}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    from repro.launch.fl_run import run_fl
+    t0 = time.time()
+    r = run_fl(task, method, rounds=rounds, lam=lam, alpha=alpha, beta=beta,
+               seed=seed, target_acc=target, eval_every=4)
+    wall = time.time() - t0
+    h = r.history
+    out = {
+        "params": params,
+        "rounds_run": r.rounds_run,
+        "reached_round": r.reached_round,
+        "final_acc": float(r.acc_curve[-1]),
+        "dropout_ratio": float(r.dropout_ratio),
+        "overall_latency_h": r.overall_latency_s / 3600.0,
+        "overall_energy_kj": r.overall_energy_j / 1e3,
+        "mean_H_final": float(h["mean_H_selected"][-1]),
+        "wall_s": wall,
+        "us_per_round": wall / max(r.rounds_run, 1) * 1e6,
+        "sel_count": h["sel_count"].tolist(),
+        "residual_energy": h["residual_energy"].tolist(),
+        "init_energy": h["init_energy"].tolist(),
+        "type_id": h["type_id"].tolist(),
+        "rate_mean": h["rate_mean"].tolist(),
+        "H_trace_last": h["H_trace"][-1].tolist(),
+        "H_trace_q": h["H_trace"][:: max(1, len(h["H_trace"]) // 10)].tolist(),
+        "n_dropped_curve": h["n_dropped"].tolist(),
+        "acc_curve": r.acc_curve.tolist(),
+    }
+    with open(path, "w") as f:
+        json.dump(out, f)
+    return out
+
+
+def emit(rows: List[tuple]) -> None:
+    """Print ``name,us_per_call,derived`` CSV rows."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

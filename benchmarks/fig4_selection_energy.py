@@ -1,0 +1,33 @@
+"""Fig. 4: per-device #selections and residual energy vs initial energy —
+REA utility spares low-battery high-end devices; Oort/Random drain them."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import cached_run, emit
+
+
+def run(methods=("rewafl", "oort", "random")):
+    rows = []
+    for method in methods:
+        r = cached_run("cnn@mnist", method)
+        init = np.array(r["init_energy"])
+        res = np.array(r["residual_energy"])
+        sel = np.array(r["sel_count"])
+        tid = np.array(r["type_id"])
+        # high-end devices (type 0 = Xiaomi 12S), split by initial energy
+        hi = tid == 0
+        lo_init = hi & (init <= np.median(init[hi]))
+        hi_init = hi & ~lo_init
+        for name, mask in (("low_init", lo_init), ("high_init", hi_init)):
+            rows.append((
+                f"fig4/{method}/xiaomi12s_{name}", r["us_per_round"],
+                f"mean_selections={sel[mask].mean():.1f};"
+                f"mean_residual_frac="
+                f"{(res[mask] / np.maximum(init[mask], 1)).mean():.2f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Fig. 5: REWAFL's H dynamics — growth frequency/increment/saturation by
+device type (high-end vs low-end) and uplink rate."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import cached_run, emit
+
+
+def run():
+    r = cached_run("cnn@mnist", "rewafl")
+    tid = np.array(r["type_id"])
+    rate = np.array(r["rate_mean"])
+    H_final = np.array(r["H_trace_last"])
+    Hq = np.array(r["H_trace_q"])  # (T', S) snapshots over training
+    rows = []
+    for t, name in ((0, "xiaomi12s_highend"), (2, "honorplay6t_lowend")):
+        mask = tid == t
+        early = Hq[: len(Hq) // 2, mask].mean()
+        late = Hq[len(Hq) // 2:, mask].mean()
+        rows.append((f"fig5/type/{name}", r["us_per_round"],
+                     f"H_final={H_final[mask].mean():.1f};"
+                     f"H_early={early:.1f};H_late={late:.1f}"))
+    fast = rate > np.median(rate)
+    rows.append((f"fig5/rate/fast_uplink", r["us_per_round"],
+                 f"H_final={H_final[fast].mean():.1f}"))
+    rows.append((f"fig5/rate/slow_uplink", r["us_per_round"],
+                 f"H_final={H_final[~fast].mean():.1f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Fig. 6: staleness — low-end, slow-uplink devices' participation and
+residual energy across PS designs (REWAFL's self-contained mechanism vs
+Oort's bolt-on temporal uncertainty)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import cached_run, emit
+
+
+def run(methods=("rewafl", "oort", "random", "autofl")):
+    rows = []
+    for method in methods:
+        r = cached_run("cnn@mnist", method)
+        tid = np.array(r["type_id"])
+        rate = np.array(r["rate_mean"])
+        sel = np.array(r["sel_count"])
+        res = np.array(r["residual_energy"])
+        init = np.array(r["init_energy"])
+        lowend = (tid == 2) & (rate < 1e6)  # Honor Play 6T @ 0.64 Mbps
+        if not lowend.any():
+            lowend = tid == 2
+        rows.append((f"fig6/{method}/lowend_slow", r["us_per_round"],
+                     f"mean_selections={sel[lowend].mean():.1f};"
+                     f"residual_frac="
+                     f"{(res[lowend]/np.maximum(init[lowend],1)).mean():.2f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

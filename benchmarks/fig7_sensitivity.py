@@ -1,0 +1,22 @@
+"""Fig. 7: α/β sensitivity — larger α favours latency, larger β favours
+energy efficiency / residual-energy balance."""
+from __future__ import annotations
+
+from benchmarks.common import cached_run, emit
+
+
+def run(grid=((1.0, 1.0), (2.0, 1.0), (1.0, 2.0))):
+    rows = []
+    for alpha, beta in grid:
+        r = cached_run("cnn@har", "rewafl", alpha=alpha, beta=beta)
+        rows.append((f"fig7/alpha{alpha}_beta{beta}", r["us_per_round"],
+                     f"OL_h={r['overall_latency_h']:.3f};"
+                     f"OEC_kJ={r['overall_energy_kj']:.1f};"
+                     f"DR={r['dropout_ratio']:.2f};"
+                     f"reached={r['reached_round']}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

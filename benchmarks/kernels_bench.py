@@ -1,0 +1,63 @@
+"""Kernel microbenchmarks: wall-time per call of the public ops on this
+backend (CPU ref path here; the Pallas path engages on TPU) + interpret-
+mode correctness deltas vs the oracle."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels.fedavg import ops as fa_ops, ref as fa_ref
+from repro.kernels.flash_attention import flash_attention as fl_k, ref as fl_ref
+from repro.kernels.stat_util import ops as su_ops
+
+
+def _time(fn, *args, n=20):
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    # fedavg: K=20 clients × 1M params (FL server aggregation hot loop)
+    stack = jax.random.normal(key, (20, 1_000_000))
+    w = jnp.ones((20,)) / 20
+    f = jax.jit(fa_ops.weighted_aggregate)
+    us = _time(f, stack, w)
+    err = float(jnp.abs(f(stack, w) - fa_ref.weighted_aggregate(stack, w)).max())
+    rows.append(("kernels/fedavg_20x1M", us, f"backend={jax.default_backend()};"
+                 f"max_err_vs_ref={err:.2e}"))
+
+    # stat utility: 1024 candidates × 64 probe losses
+    losses = jax.random.uniform(key, (1024, 64)) * 3
+    sizes = jnp.arange(1024.0) + 1
+    g = jax.jit(su_ops.stat_utility)
+    us = _time(g, losses, sizes)
+    rows.append(("kernels/stat_util_1024x64", us, "fused_reduction"))
+
+    # flash attention interpret-mode correctness (kernel-path numerics)
+    q = jax.random.normal(key, (1, 256, 4, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 256, 2, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 256, 2, 64))
+    t0 = time.time()
+    got = fl_k.flash_attention(q, k, v, causal=True, interpret=True)
+    us_i = (time.time() - t0) * 1e6
+    err = float(jnp.abs(got - fl_ref.attention(q, k, v, causal=True)).max())
+    rows.append(("kernels/flash_attn_interp_256", us_i,
+                 f"max_err_vs_ref={err:.2e};blocks=128x128"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Roofline report: reads results/dryrun/*.json (written by
+repro.launch.dryrun) and emits one row per (arch × shape × mesh) with the
+three roofline terms, the dominant bottleneck, and MODEL/HLO flop ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import DRYRUN_DIR, emit
+
+
+def load_records(mesh: str = None):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def run(mesh: str = "16x16"):
+    rows = []
+    for r in load_records(mesh):
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] == "skipped":
+            rows.append((name, 0.0, "skipped=" + r["reason"][:60].replace(",", ";")))
+            continue
+        if r["status"] != "ok":
+            rows.append((name, 0.0, "ERROR"))
+            continue
+        rf = r["roofline"]
+        us = rf["step_time_lower_bound_s"] * 1e6  # roofline-bound step time
+        rows.append((name, us,
+                     f"dom={rf['dominant']};"
+                     f"compute_s={rf['compute_s']:.3g};"
+                     f"memory_s={rf['memory_s']:.3g};"
+                     f"collective_s={rf['collective_s']:.3g};"
+                     f"useful_flops={rf['useful_flops_ratio']:.2f};"
+                     f"peak_GiB={r['memory']['peak_bytes']/2**30:.2f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()
+    run("2x16x16")

@@ -1,0 +1,64 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. FL campaigns are cached under
+results/fl/ (first full run fills the cache; CI re-runs are cheap).
+
+  python -m benchmarks.run            # quick set (2 tasks per table)
+  python -m benchmarks.run --full     # all 4 paper tasks + full λ/αβ grids
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", help="comma-separated bench names")
+    args = ap.parse_args()
+
+    from benchmarks import (fig4_selection_energy, fig5_H_dynamics,
+                            fig6_staleness, fig7_sensitivity, kernels_bench,
+                            roofline_report, table1_dropout,
+                            table2_ps_comparison, table3_local_policy,
+                            table4_heterogeneity)
+    from benchmarks.common import ALL_TASKS, QUICK_TASKS
+
+    tasks = ALL_TASKS if args.full else QUICK_TASKS
+    benches = {
+        "table1": lambda: table1_dropout.run(tasks),
+        "table2": lambda: table2_ps_comparison.run(tasks),
+        "table3": lambda: table3_local_policy.run(tasks),
+        "table4": (lambda: table4_heterogeneity.run(
+            methods=("rewafl", "oort", "autofl", "random") if args.full
+            else ("rewafl", "oort"))),
+        "fig4": fig4_selection_energy.run,
+        "fig5": fig5_H_dynamics.run,
+        "fig6": fig6_staleness.run,
+        "fig7": fig7_sensitivity.run,
+        "kernels": kernels_bench.run,
+        "roofline": roofline_report.run,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:
+            failures += 1
+            print(f"{name},0,ERROR={type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

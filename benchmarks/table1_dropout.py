@@ -1,0 +1,23 @@
+"""Table I: dropout ratio of residual-energy-UNAWARE PS designs (Oort,
+AutoFL, Random) at target accuracy — the paper's motivating observation."""
+from __future__ import annotations
+
+from benchmarks.common import QUICK_TASKS, ALL_TASKS, cached_run, emit
+
+
+def run(tasks=None):
+    tasks = tasks or QUICK_TASKS
+    rows = []
+    for task in tasks:
+        for method in ("oort", "autofl", "random"):
+            r = cached_run(task, method)
+            rows.append((f"table1/{task}/{method}", r["us_per_round"],
+                         f"dropout_ratio={r['dropout_ratio']:.2f};"
+                         f"reached={r['reached_round']};"
+                         f"acc={r['final_acc']:.3f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(ALL_TASKS)

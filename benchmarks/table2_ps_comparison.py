@@ -1,0 +1,26 @@
+"""Table II: DR / OL / OEC to target accuracy for Random, Oort, AutoFL vs
+REAFL (the REA PS utility function, Eqn 2)."""
+from __future__ import annotations
+
+from benchmarks.common import QUICK_TASKS, ALL_TASKS, cached_run, emit
+
+METHODS = ("random", "oort", "autofl", "reafl")
+
+
+def run(tasks=None):
+    tasks = tasks or QUICK_TASKS
+    rows = []
+    for task in tasks:
+        for method in METHODS:
+            r = cached_run(task, method)
+            rows.append((f"table2/{task}/{method}", r["us_per_round"],
+                         f"DR={r['dropout_ratio']:.2f};"
+                         f"OL_h={r['overall_latency_h']:.3f};"
+                         f"OEC_kJ={r['overall_energy_kj']:.1f};"
+                         f"reached={r['reached_round']}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(ALL_TASKS)

@@ -1,0 +1,26 @@
+"""Table III: REWA local computing policy ablation — REAFL (fixed H) vs
+REAFL+LUPA (AdaH) vs REWAFL (Eqn 3 + Eqn 4)."""
+from __future__ import annotations
+
+from benchmarks.common import QUICK_TASKS, ALL_TASKS, cached_run, emit
+
+METHODS = ("reafl", "reafl_lupa", "rewafl")
+
+
+def run(tasks=None):
+    tasks = tasks or QUICK_TASKS
+    rows = []
+    for task in tasks:
+        for method in METHODS:
+            r = cached_run(task, method)
+            rows.append((f"table3/{task}/{method}", r["us_per_round"],
+                         f"OL_h={r['overall_latency_h']:.3f};"
+                         f"OEC_kJ={r['overall_energy_kj']:.1f};"
+                         f"reached={r['reached_round']};"
+                         f"meanH={r['mean_H_final']:.1f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(ALL_TASKS)

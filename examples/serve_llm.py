@@ -1,0 +1,64 @@
+"""Serve a (reduced) assigned architecture: batched prefill + greedy decode
+through the production serving stack (ring KV caches, prefill/decode steps).
+
+    PYTHONPATH=src python examples/serve_llm.py --arch llama3.2-3b --tokens 16
+"""
+import argparse
+import sys
+import time
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import get_model_api
+from repro.nn.sharding import UNSHARDED
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)  # CPU-sized variant
+    api = get_model_api(cfg)
+    key = jax.random.PRNGKey(0)
+    print(f"serving {cfg.name} ({cfg.family}), vocab={cfg.vocab}")
+    params = api.init_params(key, cfg, UNSHARDED)
+
+    batch = {"tokens": jax.random.randint(key, (args.batch, args.prompt_len),
+                                          0, cfg.vocab)}
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(
+            key, (args.batch, cfg.n_img_tokens, cfg.d_model))
+    if cfg.family == "audio":
+        batch["audio_embeds"] = jax.random.normal(
+            key, (args.batch, cfg.enc_seq, cfg.d_model))
+
+    t0 = time.time()
+    logits, state = api.prefill(params, batch, cfg, UNSHARDED)
+    tok = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)[:, None]
+    print(f"prefill({args.prompt_len} tokens x {args.batch} reqs): "
+          f"{time.time()-t0:.2f}s")
+
+    decode = jax.jit(lambda p, b, s: api.decode_step(p, b, s, cfg, UNSHARDED))
+    out_tokens = [tok]
+    t0 = time.time()
+    for _ in range(args.tokens):
+        logits, state = decode(params, {"tokens": tok}, state)
+        tok = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)[:, None]
+        out_tokens.append(tok)
+    dt = time.time() - t0
+    seqs = jnp.concatenate(out_tokens, axis=1)
+    print(f"decoded {args.tokens} tokens/request in {dt:.2f}s "
+          f"({args.tokens*args.batch/dt:.1f} tok/s batched)")
+    for i, row in enumerate(seqs.tolist()):
+        print(f"  req{i}: {row}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Demonstrate REWAFL's self-contained staleness solution (paper Sec.
+III-D / Fig. 5): H grows for frequently-selected fast-uplink devices until
+their utility sinks below neglected slow-uplink devices, which then get
+picked — no bolt-on 'temporal uncertainty' term.
+
+    PYTHONPATH=src python examples/staleness_demo.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.launch.fl_run import run_fl
+
+
+def sparkline(xs, width=40):
+    xs = np.asarray(xs, float)
+    if xs.max() <= xs.min():
+        return "-" * width
+    q = np.interp(np.linspace(0, len(xs) - 1, width),
+                  np.arange(len(xs)), xs)
+    chars = " .:-=+*#%@"
+    lo, hi = q.min(), q.max()
+    return "".join(chars[int((v - lo) / (hi - lo) * (len(chars) - 1))]
+                   for v in q)
+
+
+def main():
+    r = run_fl("cnn@mnist", "rewafl", rounds=30, n_clients=30, n_select=6,
+               per_client=32, target_acc=0.999, eval_every=10)
+    h = r.history
+    H = h["H_trace"]            # (T, S)
+    rate = h["rate_mean"]
+    fast = rate > np.median(rate)
+    print("mean H over rounds (fast uplinks): ",
+          sparkline(H[:, fast].mean(1)))
+    print("mean H over rounds (slow uplinks): ",
+          sparkline(H[:, ~fast].mean(1)))
+    sel = h["sel_count"]
+    print(f"\nselection spread: {np.count_nonzero(sel)}/{len(sel)} devices "
+          f"participated; top device {sel.max()}x, median {np.median(sel):.0f}x")
+    print("fast-uplink devices grow H early; slow ones catch up later —")
+    print("the growth itself rebalances utilities (no staleness bonus).")
+
+
+if __name__ == "__main__":
+    main()

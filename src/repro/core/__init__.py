@@ -1,0 +1,14 @@
+"""REWAFL core: the paper's contribution as composable JAX modules.
+
+  utility.py   — Eqn (1) Oort utility, Eqn (2) REA utility, AutoFL reward
+  policy.py    — Eqn (3) wireless-aware H, Eqn (4) stopping criterion,
+                 AdaH / fixed baselines
+  selection.py — top-K ranking, ε-greedy & temporal-uncertainty baselines
+  state.py     — fleet state pytree
+  round.py     — Algorithm 1 as a single jitted round step
+  methods.py   — named method registry (Random/Oort/AutoFL/REAFL/
+                 REAFL+LUPA/REWAFL)
+"""
+from repro.core.state import FleetState, init_fleet_state  # noqa: F401
+from repro.core.methods import METHODS, MethodSpec  # noqa: F401
+from repro.core.round import FLConfig, make_round_fn, make_eval_fn  # noqa: F401

@@ -1,0 +1,238 @@
+"""Algorithm 1 — one FL round as a single jitted function.
+
+Per round: sample uplink rates → per-device candidate H (policy) →
+latency/energy estimates → PS utilities → top-K selection → masked
+vmapped local SGD on the K selected clients (lax.fori_loop to the static
+H_max with per-client iteration masks — TPU-style static shapes instead
+of ragged loops) → FedAvg (Pallas-kernel-backed weighted aggregation) →
+fleet-state update (Algorithm 1 lines 18–27).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import policy as pol
+from repro.core import selection as sel
+from repro.core import utility as util
+from repro.core.methods import MethodSpec
+from repro.core.state import FleetState
+from repro.models.fl_models import FLModel
+from repro.sim.devices import DeviceFleet
+from repro.sim.energy import round_costs
+from repro.sim.wireless import sample_rates
+
+
+@dataclasses.dataclass(frozen=True)
+class FLConfig:
+    n_select: int = 20
+    alpha: float = 1.0          # latency-utility exponent (paper default 1)
+    beta: float = 1.0           # energy-utility exponent (paper default 1)
+    T_round: float = 60.0       # developer-preferred round duration (s)
+    batch_size: int = 32
+    probe_size: int = 32        # per-client samples for loss estimation
+    lr: float = 0.05
+    # uplink payload (bits). None -> the trained model's true size; the
+    # benchmark scale trains a width-reduced proxy model but simulates the
+    # paper-scale payload (~2 MB CNN / ~5 MB LSTM) so comm latency/energy
+    # keep their real-testbed balance (DESIGN.md §Assumption-changes #1)
+    uplink_bits: Optional[float] = None
+    policy: pol.PolicyCfg = dataclasses.field(default_factory=pol.PolicyCfg)
+    autofl_eta: float = 1.0
+    autofl_ema: float = 0.5
+
+
+def _probe_losses(model: FLModel, params, cx, cy, probe: int) -> jax.Array:
+    """(S,) mean loss and (S,) mean squared loss of the global model on a
+    per-client probe subsample. cx: (S, n, ...), cy: (S, n)."""
+    px, py = cx[:, :probe], cy[:, :probe]
+
+    def one(x, y):
+        ls = model.per_sample_loss(params, {"x": x, "y": y})
+        return jnp.mean(ls), jnp.mean(ls ** 2)
+
+    return jax.vmap(one)(px, py)
+
+
+def _local_sgd(model: FLModel, params, x, y, H, key, cfg: FLConfig):
+    """Masked local SGD: fori_loop to H_max; iterations ≥ H are no-ops."""
+    n = x.shape[0]
+    grad_fn = jax.grad(model.loss)
+
+    def body(it, p):
+        k = jax.random.fold_in(key, it)
+        idx = jax.random.randint(k, (cfg.batch_size,), 0, n)
+        g = grad_fn(p, {"x": x[idx], "y": y[idx]})
+        live = (it < H).astype(jnp.float32)
+        return jax.tree.map(lambda pp, gg: pp - cfg.lr * live * gg, p, g)
+
+    return jax.lax.fori_loop(0, cfg.policy.H_max, body, params)
+
+
+def _fedavg(global_params, client_params, weights):
+    """θ' = θ + Σ w_k·(θ_k − θ)/Σw — via the fedavg kernel op."""
+    from repro.kernels.fedavg import ops as fedavg_ops
+    wsum = jnp.maximum(jnp.sum(weights), 1e-9)
+    wn = weights / wsum
+    has = jnp.sum(weights) > 0
+
+    def combine(g, c):
+        agg = fedavg_ops.weighted_aggregate(c, wn)  # (K,...)·(K,) -> (...)
+        return jnp.where(has, agg.astype(g.dtype), g)
+
+    return jax.tree.map(combine, global_params, client_params)
+
+
+def make_round_fn(model: FLModel, fleet: DeviceFleet, cx, cy,
+                  cfg: FLConfig, method: MethodSpec):
+    """Returns jitted round(params, state, key, round_idx) ->
+    (params', state', metrics). cx/cy: stacked client data (S, n, ...)."""
+    S = fleet.n
+    K = cfg.n_select
+    model_bits = float(cfg.uplink_bits or model.param_bits)
+    pcfg = cfg.policy
+    if method.policy == "fixed":
+        # fixed-H baselines never exceed H0 — shrink the static loop bound
+        cfg = dataclasses.replace(
+            cfg, policy=dataclasses.replace(pcfg, H_max=pcfg.H0))
+
+    def round_fn(params, state: FleetState, key, round_idx):
+        k_rate, k_sel, k_train = jax.random.split(key, 3)
+        rates = sample_rates(k_rate, fleet)
+
+        # --- candidate H per policy (Algorithm 1 line 8) -----------------
+        g_loss, g_loss_sq = _probe_losses(model, params, cx, cy,
+                                          cfg.probe_size)
+        if method.policy == "fixed":
+            H_cand = state.H  # stays at H0
+        elif method.policy == "adah":
+            H_cand = pol.h_adah(round_idx, S, pcfg)
+        else:  # rewa — Eqn (3) growth gated by Eqn (4)
+            eps = pol.stopping_eps(state.last_local_loss, g_loss,
+                                   state.last_energy, fleet.e0_reserve,
+                                   state.last_ecp)
+            H_cand = pol.h_rewa(state.H, rates, eps, pcfg)
+
+        # --- cost estimates (line 9) -------------------------------------
+        costs = round_costs(fleet, H_cand, rates, model_bits)
+
+        # --- utilities + selection (lines 13–16) -------------------------
+        available = ~state.dropped
+        stat = state.last_stat
+        if method.selector == "random":
+            selected = sel.random_select(k_sel, K, available)
+        elif method.selector == "oort":
+            stat_tu = sel.temporal_uncertainty(stat, round_idx,
+                                               state.last_round)
+            utils = util.oort_utility(stat_tu, costs.t_total,
+                                      T_round=cfg.T_round, alpha=cfg.alpha)
+            selected = sel.epsilon_greedy(k_sel, utils, K, available,
+                                          method.exploration)
+        elif method.selector == "autofl":
+            selected = sel.epsilon_greedy(k_sel, state.q_value, K, available,
+                                          method.exploration)
+        else:  # "rea": Eqn (2) — REAFL / REAFL+LUPA / REWAFL
+            utils = util.rewafl_utility(
+                stat, costs.t_total, costs.e_total, state.residual_energy,
+                fleet.e0_reserve, T_round=cfg.T_round, alpha=cfg.alpha,
+                beta=cfg.beta)
+            selected = sel.top_k_select(utils, K, available)
+
+        # --- feasibility: selected devices without enough battery fail ---
+        feasible = costs.e_total < (state.residual_energy - fleet.e0_reserve)
+        participating = selected & feasible
+        failed = selected & ~feasible
+
+        # --- local training on the K selected slots ----------------------
+        sel_idx = jnp.nonzero(selected, size=K, fill_value=0)[0]
+        part_k = participating[sel_idx]
+        Hk = H_cand[sel_idx]
+        xk, yk = cx[sel_idx], cy[sel_idx]
+        keys = jax.random.split(k_train, K)
+        client_params = jax.vmap(
+            lambda x, y, H, kk: _local_sgd(model, params, x, y, H, kk, cfg)
+        )(xk, yk, Hk, keys)
+        weights = (fleet.data_size[sel_idx].astype(jnp.float32)
+                   * part_k.astype(jnp.float32))
+        new_params = _fedavg(params, client_params, weights)
+
+        # --- post-training local losses (stat-utility refresh) -----------
+        def local_probe(p, x, y):
+            ls = model.per_sample_loss(
+                p, {"x": x[:cfg.probe_size], "y": y[:cfg.probe_size]})
+            return jnp.mean(ls), jnp.mean(ls ** 2)
+
+        l_loss_k, l_sq_k = jax.vmap(local_probe)(client_params, xk, yk)
+
+        # --- state update (lines 18–27) ----------------------------------
+        e_spent = jnp.where(participating, costs.e_total, 0.0)
+        new_E = state.residual_energy - e_spent
+        new_u = jnp.where(participating, 0, state.u + 1)
+        new_H = jnp.where(participating, H_cand, state.H)
+        new_last_round = jnp.where(participating, round_idx, state.last_round)
+
+        def scatter(base, vals_k, mask_k):
+            upd = base.at[sel_idx].set(jnp.where(mask_k, vals_k,
+                                                 base[sel_idx]))
+            return upd
+
+        stat_k = util.statistical_utility(fleet.data_size[sel_idx], l_sq_k)
+        new_stat = scatter(state.last_stat, stat_k, part_k)
+        new_lll = scatter(state.last_local_loss, l_loss_k, part_k)
+        new_ecp = jnp.where(participating, costs.e_comp, state.last_ecp)
+        new_lastE = jnp.where(participating, state.residual_energy,
+                              state.last_energy)
+
+        # AutoFL bandit value: EMA of (global-loss drop proxy)/energy
+        loss_drop_k = jnp.maximum(g_loss[sel_idx] - l_loss_k, 0.0)
+        reward_k = util.autofl_reward(loss_drop_k, costs.e_total[sel_idx],
+                                      eta=cfg.autofl_eta)
+        q_sel = (cfg.autofl_ema * state.q_value[sel_idx]
+                 + (1 - cfg.autofl_ema) * reward_k * 1e3)
+        new_q = scatter(state.q_value, q_sel, part_k)
+
+        # permanent dropout: can no longer afford even H=1 + uplink at its
+        # mean rate (paper: depleted devices disabled from participation)
+        min_cost = (fleet.t_iter * fleet.p_compute
+                    + model_bits / jnp.maximum(fleet.rate_mean, 1.0)
+                    * fleet.p_tx)
+        new_dropped = state.dropped | failed | (
+            new_E - fleet.e0_reserve <= min_cost)
+
+        new_state = FleetState(
+            residual_energy=new_E, H=new_H, u=new_u,
+            last_round=new_last_round, last_stat=new_stat,
+            last_local_loss=new_lll, last_ecp=new_ecp,
+            last_energy=new_lastE, dropped=new_dropped, q_value=new_q,
+            n_participations=state.n_participations
+            + participating.astype(jnp.int32),
+            n_selected=state.n_selected + selected.astype(jnp.int32),
+        )
+        n_part = jnp.sum(participating)
+        metrics = {
+            "round_latency": jnp.max(jnp.where(participating,
+                                               costs.t_total, 0.0)),
+            "round_energy": jnp.sum(e_spent),
+            "n_participating": n_part,
+            "n_failed": jnp.sum(failed),
+            "n_dropped": jnp.sum(new_dropped),
+            "mean_H_selected": jnp.sum(jnp.where(selected, H_cand, 0)
+                                       ) / jnp.maximum(jnp.sum(selected), 1),
+            "global_loss": jnp.mean(g_loss),
+            "selected": selected,
+        }
+        return new_params, new_state, metrics
+
+    return jax.jit(round_fn)
+
+
+def make_eval_fn(model: FLModel, test_x, test_y):
+    @jax.jit
+    def evaluate(params):
+        return model.accuracy(params, {"x": test_x, "y": test_y})
+
+    return evaluate

@@ -1,0 +1,42 @@
+"""Participant selection: top-K ranking + baseline selection mechanisms."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def top_k_select(utils: jax.Array, k: int, available: jax.Array) -> jax.Array:
+    """Boolean (S,) selection mask of the top-k available devices
+    (Algorithm 1, line 15: RankingDevice)."""
+    masked = jnp.where(available, utils, NEG)
+    _, idx = jax.lax.top_k(masked, k)
+    sel = jnp.zeros(utils.shape, bool).at[idx].set(True)
+    return sel & available
+
+
+def random_select(key: jax.Array, k: int, available: jax.Array) -> jax.Array:
+    """Uniform-random K among available devices (Random baseline [33])."""
+    scores = jax.random.uniform(key, available.shape)
+    return top_k_select(scores, k, available)
+
+
+def epsilon_greedy(key: jax.Array, utils: jax.Array, k: int,
+                   available: jax.Array, eps: float = 0.1) -> jax.Array:
+    """Oort's exploit/explore split: (1−ε)K by utility, εK random."""
+    k_explore = max(1, int(round(eps * k)))
+    k_exploit = k - k_explore
+    sel_x = top_k_select(utils, k_exploit, available)
+    rest = available & ~sel_x
+    sel_r = random_select(key, k_explore, rest)
+    return sel_x | sel_r
+
+
+def temporal_uncertainty(stat: jax.Array, round_idx: jax.Array,
+                         last_round: jax.Array) -> jax.Array:
+    """Oort's decoupled staleness bonus: long-neglected devices get their
+    statistical utility inflated by sqrt(0.1·Δr) (the mechanism REWAFL
+    replaces with its self-contained H dynamics, Sec. II-E / III-D)."""
+    dr = jnp.maximum(round_idx - jnp.maximum(last_round, 0), 0)
+    return stat * (1.0 + jnp.sqrt(0.1 * dr.astype(jnp.float32)))

@@ -1,0 +1,46 @@
+"""Fleet state pytree carried across FL rounds (all (S,) arrays)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sim.devices import DeviceFleet
+
+
+class FleetState(NamedTuple):
+    residual_energy: jax.Array   # f32 (S,) — E_i^r, Joules
+    H: jax.Array                 # i32 — current local-iteration count H(i)
+    u: jax.Array                 # i32 — rounds since last participation
+    last_round: jax.Array        # i32 — last participating round (-1 = never)
+    last_stat: jax.Array         # f32 — cached statistical utility
+    last_local_loss: jax.Array   # f32 — Loss(θ_i) at last participation
+    last_ecp: jax.Array          # f32 — e_cp(i, last participation)
+    last_energy: jax.Array       # f32 — E_i at last participation
+    dropped: jax.Array           # bool — battery below feasibility forever
+    q_value: jax.Array           # f32 — AutoFL bandit value estimate
+    n_participations: jax.Array  # i32
+    n_selected: jax.Array        # i32 — times selected (incl. failed)
+
+
+def init_fleet_state(fleet: DeviceFleet, *, H0: int = 5,
+                     optimistic_stat: float = 1e4) -> FleetState:
+    """Fresh state: optimistic statistical utility (Oort-style — unexplored
+    devices rank high), energy at the simulated initial battery level."""
+    S = fleet.n
+    f32 = jnp.float32
+    return FleetState(
+        residual_energy=fleet.init_energy.astype(f32),
+        H=jnp.full((S,), H0, jnp.int32),
+        u=jnp.zeros((S,), jnp.int32),
+        last_round=jnp.full((S,), -1, jnp.int32),
+        last_stat=jnp.full((S,), optimistic_stat, f32),
+        last_local_loss=jnp.full((S,), 10.0, f32),
+        last_ecp=jnp.full((S,), 1.0, f32),
+        last_energy=fleet.init_energy.astype(f32),
+        dropped=jnp.zeros((S,), bool),
+        q_value=jnp.full((S,), 1e3, f32),
+        n_participations=jnp.zeros((S,), jnp.int32),
+        n_selected=jnp.zeros((S,), jnp.int32),
+    )

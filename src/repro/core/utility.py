@@ -1,0 +1,63 @@
+"""PS utility functions — Eqn (1) (Oort) and Eqn (2) (REWAFL), + AutoFL.
+
+Eqn (2):
+  Util(i,r) = |B_i^r|·sqrt(mean_k Loss(k)^2)                 (statistical)
+            × (T^r / t(i,r))^{ I(T^r < t(i,r)) · α }          (latency)
+            × ((E_i^r − E0) / e(i,r))^{ U(e < E−E0) · β }     (energy)
+
+with U(x) = 1 if x true else ∞ — i.e. the energy term hard-zeroes a
+device whose round energy would dip into its reserve.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def statistical_utility(data_size: jax.Array,
+                        loss_sq_mean: jax.Array) -> jax.Array:
+    """|B_i|·sqrt( (1/|B_i|)·Σ Loss(k)² ) with the paper's convention that
+    loss_sq_mean is the mean of squared per-sample losses."""
+    return data_size.astype(jnp.float32) * jnp.sqrt(
+        jnp.maximum(loss_sq_mean, 0.0))
+
+
+def latency_utility(t: jax.Array, T_round: float, alpha: float) -> jax.Array:
+    """(T/t)^(I(T<t)·α): penalise only devices slower than the preferred
+    round duration T (Oort's global system utility)."""
+    ratio = T_round / jnp.maximum(t, 1e-9)
+    pen = jnp.where(t > T_round, ratio ** alpha, 1.0)
+    return pen.astype(jnp.float32)
+
+
+def energy_utility(residual: jax.Array, e0: jax.Array, e: jax.Array,
+                   beta: float) -> jax.Array:
+    """((E−E0)/e)^β when e < E−E0, else exactly 0 (U(x)=∞ branch)."""
+    avail = residual - e0
+    ratio = avail / jnp.maximum(e, 1e-9)
+    feasible = e < avail
+    return jnp.where(feasible, jnp.maximum(ratio, 1e-9) ** beta,
+                     0.0).astype(jnp.float32)
+
+
+def oort_utility(stat: jax.Array, t: jax.Array, *, T_round: float,
+                 alpha: float) -> jax.Array:
+    """Eqn (1)."""
+    return stat * latency_utility(t, T_round, alpha)
+
+
+def rewafl_utility(stat: jax.Array, t: jax.Array, e: jax.Array,
+                   residual: jax.Array, e0: jax.Array, *, T_round: float,
+                   alpha: float, beta: float) -> jax.Array:
+    """Eqn (2) — the REA PS utility (used by both REAFL and REWAFL)."""
+    return (stat
+            * latency_utility(t, T_round, alpha)
+            * energy_utility(residual, e0, e, beta))
+
+
+def autofl_reward(loss_drop: jax.Array, e: jax.Array, *,
+                  eta: float = 1.0) -> jax.Array:
+    """AutoFL-style per-round reward: learning gain per Joule (the paper
+    describes AutoFL as associating accuracy and energy; we reproduce the
+    published reward *shape* — DESIGN.md §Assumption-changes #3)."""
+    return eta * loss_drop / jnp.maximum(e, 1e-9)

@@ -1,0 +1,3 @@
+from repro.data.synthetic import (  # noqa: F401
+    make_image_dataset, make_har_dataset, make_char_dataset, DATASETS)
+from repro.data.partition import partition_non_iid, client_datasets  # noqa: F401

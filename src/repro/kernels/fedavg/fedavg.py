@@ -1,0 +1,47 @@
+"""Pallas TPU kernel: weighted aggregation of K client parameter updates.
+
+The FL server's hot loop: out[p] = Σ_k w[k]·x[k, p] over an M-parameter
+model — a memory-bound reduction (arithmetic intensity 2K flops per K
+loaded elements ≈ 2 flops/elem). VMEM tiling: the grid walks parameter
+blocks of BLOCK_P lanes (multiple of 128 for VPU alignment); each step
+holds a (K, BLOCK_P) tile + fp32 accumulator in VMEM. Weights ride along
+as a (K, 1) block resident every step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_P = 2048  # lanes per grid step; 2048·K·bytes must fit VMEM
+
+
+def _kernel(w_ref, x_ref, o_ref):
+    # x_ref: (K, BLOCK_P); w_ref: (K, 1); o_ref: (BLOCK_P,)
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)  # (K, 1)
+    acc = jnp.sum(x * w, axis=0)        # fp32 accumulate
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_p"))
+def weighted_aggregate_flat(x: jax.Array, w: jax.Array, *,
+                            interpret: bool = False,
+                            block_p: int = BLOCK_P) -> jax.Array:
+    """x: (K, P) with P % block_p == 0; w: (K,) -> (P,)."""
+    K, P = x.shape
+    assert P % block_p == 0, (P, block_p)
+    grid = (P // block_p,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((K, 1), lambda i: (0, 0)),
+            pl.BlockSpec((K, block_p), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((block_p,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((P,), x.dtype),
+        interpret=interpret,
+    )(w[:, None], x)

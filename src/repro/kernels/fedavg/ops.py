@@ -1,0 +1,48 @@
+"""Jit'd public op: shape-generic weighted aggregation with backend dispatch.
+
+TPU backends run the Pallas kernel (VMEM-tiled); CPU (this container, and
+the FL simulation) uses the pure-jnp oracle — identical math, verified by
+tests/test_kernels_fedavg.py in interpret mode across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fedavg import fedavg as kernel
+from repro.kernels.fedavg import ref
+
+
+def _use_pallas() -> bool:
+    if os.environ.get("REPRO_FORCE_PALLAS"):
+        return True
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def weighted_aggregate(stack: jax.Array, weights: jax.Array,
+                       *, interpret: bool | None = None) -> jax.Array:
+    """out = Σ_k w_k·stack[k] for stack (K, ...) of any shape/dtype."""
+    if interpret is None and not _use_pallas():
+        return ref.weighted_aggregate(stack, weights)
+    K = stack.shape[0]
+    flat = stack.reshape(K, -1)
+    P = flat.shape[1]
+    bp = min(kernel.BLOCK_P, _round_up(P, 128))
+    pad = (-P) % bp
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    out = kernel.weighted_aggregate_flat(flat, weights,
+                                         interpret=bool(interpret),
+                                         block_p=bp)
+    if pad:
+        out = out[:P]
+    return out.reshape(stack.shape[1:]).astype(stack.dtype)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for weighted FedAvg aggregation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def weighted_aggregate(stack: jax.Array, weights: jax.Array) -> jax.Array:
+    """out = Σ_k w_k · stack[k].  stack: (K, ...), weights: (K,) fp32."""
+    wf = weights.astype(jnp.float32)
+    sf = stack.astype(jnp.float32)
+    return jnp.tensordot(wf, sf, axes=1).astype(stack.dtype)

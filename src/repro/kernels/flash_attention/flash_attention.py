@@ -1,0 +1,122 @@
+"""Pallas TPU flash-attention forward (GQA, causal, sliding-window,
+gemma2 logit softcap).
+
+TPU adaptation of the CUDA flash algorithm: the grid is
+(B, H, Sq/BQ, Sk/BK) with the KV-block dimension innermost — TPU grids
+execute sequentially minor-to-major on a core, so the (m, l, acc) online-
+softmax state lives in VMEM scratch across the KV sweep and the output
+block is written once on the last KV step. Block shapes are MXU-aligned
+(BQ, BK multiples of 128; hd is the lane dim). GQA indexes the shared KV
+head via h // G in the BlockSpec index maps — no repeated-KV
+materialisation in HBM.
+
+Scores/softmax never leave VMEM: per (BQ, hd) output tile the kernel reads
+q once and streams k/v blocks — exactly the traffic the XLA fallback path
+pays in HBM (see EXPERIMENTS.md §Perf, "attend_core" scope bytes).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: Optional[int],
+            softcap: Optional[float], bq: int, bk: int, nk: int):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale      # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)              # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)              # (bk, hd)
+    s = q @ k.T                                      # (bq, bk)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    d = qpos - kpos
+    keep = jnp.ones((bq, bk), bool)
+    if causal:
+        keep &= d >= 0
+    if window is not None:
+        keep &= d < window
+    s = jnp.where(keep, s, NEG)
+
+    m_prev = m_scr[...]                              # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + p @ v
+    m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "bq", "bk",
+                     "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Sk, n_kv, hd) -> (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    Sk, n_kv = k.shape[1], k.shape[2]
+    assert H % n_kv == 0
+    G = H // n_kv
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    nq, nk = Sq // bq, Sk // bk
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    # head-major layouts for clean (1, 1, block, hd) tiles
+    qt = q.swapaxes(1, 2)  # (B, H, Sq, hd)
+    kt = k.swapaxes(1, 2)  # (B, n_kv, Sk, hd)
+    vt = v.swapaxes(1, 2)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, softcap=softcap,
+        bq=bq, bk=bk, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),    # running denom l
+            pltpu.VMEM((bq, hd), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.swapaxes(1, 2)  # back to (B, Sq, H, hd)

@@ -1,0 +1,32 @@
+"""Public flash-attention op with backend dispatch.
+
+On TPU: the Pallas kernel. On CPU (and in the dry-run, which lowers pure
+XLA): ``repro.nn.attention.attend`` — the online-softmax XLA path with the
+same math. Tests validate kernel(interpret=True) against ref.py across a
+shape/dtype sweep.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as kernel
+from repro.kernels.flash_attention import ref
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    if interpret is None:
+        if jax.default_backend() == "tpu":
+            return kernel.flash_attention(q, k, v, causal=causal,
+                                          window=window, softcap=softcap,
+                                          scale=scale)
+        return ref.attention(q, k, v, causal=causal, window=window,
+                             logit_softcap=softcap, scale=scale)
+    return kernel.flash_attention(q, k, v, causal=causal, window=window,
+                                  softcap=softcap, scale=scale,
+                                  interpret=interpret)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA, causal, window,
+logit softcap). Materialises full scores — small shapes only."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: Optional[int] = None,
+              logit_softcap: Optional[float] = None,
+              scale: Optional[float] = None) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Sk, n_kv, hd) -> (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    Sk, n_kv = k.shape[1], k.shape[2]
+    G = H // n_kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kr = jnp.repeat(k, G, axis=2)
+    vr = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    if logit_softcap is not None:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    d = qp - kp
+    keep = jnp.ones((Sq, Sk), bool)
+    if causal:
+        keep &= d >= 0
+    if window is not None:
+        keep &= d < window
+    s = jnp.where(keep[None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,22 @@
+"""Public sLSTM-scan op: Pallas on TPU, lax.scan reference elsewhere."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.slstm import ref
+from repro.kernels.slstm import slstm as kernel
+
+
+def slstm_scan(x_pre: jax.Array, r: jax.Array, *, nh: int,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """x_pre: (B, T, 4·din) pre-activations; r: (NH, hd, 4hd)."""
+    B, T, din4 = x_pre.shape
+    hd = din4 // (4 * nh)
+    if interpret is None:
+        if jax.default_backend() == "tpu":
+            return kernel.slstm_scan(x_pre, r, nh=nh)
+        h = ref.slstm_scan(x_pre.reshape(B, T, nh, 4 * hd), r)
+        return h.reshape(B, T, nh * hd).astype(x_pre.dtype)
+    return kernel.slstm_scan(x_pre, r, nh=nh, interpret=interpret)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the sLSTM kernel: the lax.scan cell from
+repro.nn.xlstm, exposed over raw pre-activations."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def slstm_scan(x_pre: jax.Array, r: jax.Array):
+    """x_pre: (B, T, NH, 4·hd) input pre-activations; r: (NH, hd, 4·hd)
+    block-diagonal recurrent weights. Returns h: (B, T, NH, hd) (fp32)."""
+    B, T, NH, hd4 = x_pre.shape
+    hd = hd4 // 4
+    h0 = jnp.zeros((B, NH, hd), jnp.float32)
+    c0 = jnp.zeros_like(h0)
+    n0 = jnp.zeros_like(h0)
+    m0 = jnp.full_like(h0, -1e30)
+
+    def step(carry, xt):
+        h, c, n, m = carry
+        rec = jnp.einsum("bhd,hdk->bhk", h, r.astype(jnp.float32))
+        pre = xt.astype(jnp.float32) + rec
+        zp, ip, fp, op = jnp.split(pre, 4, axis=-1)
+        zt = jnp.tanh(zp)
+        ot = jax.nn.sigmoid(op)
+        logf = jax.nn.log_sigmoid(fp)
+        m_new = jnp.maximum(logf + m, ip)
+        fw = jnp.exp(logf + m - m_new)
+        iw = jnp.exp(ip - m_new)
+        c2 = fw * c + iw * zt
+        n2 = fw * n + iw
+        h2 = ot * c2 / jnp.maximum(n2, 1e-6)
+        return (h2, c2, n2, m_new), h2
+
+    _, hs = jax.lax.scan(step, (h0, c0, n0, m0), x_pre.swapaxes(0, 1))
+    return hs.swapaxes(0, 1)

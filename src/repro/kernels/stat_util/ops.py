@@ -1,0 +1,23 @@
+"""Public op: statistical utility with backend dispatch + padding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.stat_util import ref
+from repro.kernels.stat_util import stat_util as kernel
+
+
+def stat_utility(losses: jax.Array, sizes: jax.Array,
+                 *, interpret: bool | None = None) -> jax.Array:
+    if interpret is None and jax.default_backend() != "tpu":
+        return ref.stat_utility(losses, sizes)
+    S, n = losses.shape
+    bs = min(kernel.BLOCK_S, S)
+    pad = (-S) % bs
+    if pad:
+        losses = jnp.pad(losses, ((0, pad), (0, 0)))
+        sizes = jnp.pad(sizes, (0, pad))
+    out = kernel.stat_utility_blocked(losses, sizes,
+                                      interpret=bool(interpret), block_s=bs)
+    return out[:S]

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle: statistical utility |B|·sqrt(mean per-sample loss²)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stat_utility(losses: jax.Array, sizes: jax.Array) -> jax.Array:
+    """losses: (S, n) per-sample losses; sizes: (S,) |B_i| -> (S,) f32."""
+    msq = jnp.mean(losses.astype(jnp.float32) ** 2, axis=-1)
+    return sizes.astype(jnp.float32) * jnp.sqrt(jnp.maximum(msq, 0.0))

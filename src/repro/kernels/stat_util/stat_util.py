@@ -1,0 +1,43 @@
+"""Pallas TPU kernel: fused statistical-utility reduction (Eqn 2 term 1).
+
+The FL server scores thousands of candidates per round; this fuses the
+square→mean→sqrt→scale chain into one VMEM pass over a (BLOCK_S, n) tile
+of per-sample losses per grid step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_S = 128
+
+
+def _kernel(l_ref, sz_ref, o_ref):
+    # l_ref: (BLOCK_S, n); sz_ref: (BLOCK_S, 1); o_ref: (BLOCK_S,)
+    l = l_ref[...].astype(jnp.float32)
+    msq = jnp.mean(l * l, axis=-1)
+    out = sz_ref[...][:, 0].astype(jnp.float32) * jnp.sqrt(
+        jnp.maximum(msq, 0.0))
+    o_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_s"))
+def stat_utility_blocked(losses: jax.Array, sizes: jax.Array, *,
+                         interpret: bool = False,
+                         block_s: int = BLOCK_S) -> jax.Array:
+    S, n = losses.shape
+    assert S % block_s == 0, (S, block_s)
+    return pl.pallas_call(
+        _kernel,
+        grid=(S // block_s,),
+        in_specs=[
+            pl.BlockSpec((block_s, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_s, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_s,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((S,), jnp.float32),
+        interpret=interpret,
+    )(losses, sizes[:, None].astype(jnp.float32))

@@ -1,0 +1,95 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any jax-importing module —
+# jax locks the device count at first backend init. Everything else
+# (import-safe logic) lives in repro.launch.dryrun_lib.
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="Multi-pod dry-run: lower+compile every "
+                    "(arch × input-shape × mesh) on 16x16 and 2x16x16 "
+                    "placeholder meshes; records roofline inputs.")
+    ap.add_argument("--arch", help="architecture id (see --list)")
+    ap.add_argument("--shape", help="input shape name")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every pair on the selected mesh")
+    ap.add_argument("--both-meshes", action="store_true",
+                    help="with --all: run single-pod AND multi-pod")
+    ap.add_argument("--skip-done", action="store_true",
+                    help="skip pairs whose result JSON already exists and is ok")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out-dir", default=None)
+    args = ap.parse_args()
+
+    from repro.configs.base import INPUT_SHAPES, list_archs
+    from repro.launch import dryrun_lib
+
+    if args.list:
+        for a in list_archs():
+            print(a)
+        return
+
+    pairs = []
+    meshes = ([False, True] if args.both_meshes
+              else [bool(args.multi_pod)])
+    if args.all:
+        for arch in list_archs():
+            for shape in INPUT_SHAPES:
+                for mp in meshes:
+                    pairs.append((arch, shape, mp))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        for mp in meshes:
+            pairs.append((args.arch, args.shape, mp))
+
+    n_ok = n_skip = n_err = 0
+    for arch, shape, mp in pairs:
+        mesh_name = "2x16x16" if mp else "16x16"
+        if args.skip_done:
+            p = dryrun_lib.result_path(arch, shape, mesh_name, args.out_dir)
+            if os.path.exists(p):
+                with open(p) as f:
+                    prev = json.load(f)
+                if prev.get("status") in ("ok", "skipped"):
+                    print(f"[done] {arch:18s} {shape:12s} {mesh_name}")
+                    continue
+        t0 = time.time()
+        rec = dryrun_lib.run_pair(arch, shape, multi_pod=mp,
+                                  out_dir=args.out_dir,
+                                  save_hlo=args.save_hlo)
+        dt = time.time() - t0
+        st = rec["status"]
+        n_ok += st == "ok"
+        n_skip += st == "skipped"
+        n_err += st == "error"
+        if st == "ok":
+            m = rec["memory"]
+            r = rec["roofline"]
+            print(f"[ok]   {arch:18s} {shape:12s} {mesh_name:8s} "
+                  f"{dt:6.1f}s  peak={m['peak_bytes']/2**30:7.2f}GiB  "
+                  f"dom={r['dominant']:13s} "
+                  f"t_bound={r['step_time_lower_bound_s']:.4g}s")
+            sys.stdout.flush()
+        elif st == "skipped":
+            print(f"[skip] {arch:18s} {shape:12s} {mesh_name}: "
+                  f"{rec['reason'][:70]}")
+        else:
+            print(f"[ERR]  {arch:18s} {shape:12s} {mesh_name}: "
+                  f"{rec['error'][:200]}")
+        sys.stdout.flush()
+    print(f"done: ok={n_ok} skipped={n_skip} errors={n_err}")
+    if n_err:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,253 @@
+"""Dry-run core: lower + compile every (arch × input-shape × mesh) pair.
+
+Import-safe (no jax device-state side effects). The CLI entry point
+``repro.launch.dryrun`` sets XLA_FLAGS *before* importing this module.
+
+For each pair we:
+  1. build ShapeDtypeStruct stand-ins (params via eval_shape — no alloc),
+  2. derive in_shardings (params: FSDP×TP rules; batch: data-parallel;
+     decode state: batch→data, largest-divisible dim→model),
+  3. jit(...).lower(...).compile() on the production mesh,
+  4. record memory_analysis(), the loop-aware HLO costs, and the
+     three-term roofline (TPU v5e constants).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+import traceback
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ArchCfg, INPUT_SHAPES, get_config, input_specs,
+                                list_archs, model_flops, param_count,
+                                active_param_count)
+from repro.launch import hlo_costs
+from repro.launch.mesh import make_shard_cfg
+from repro.models.api import get_model_api
+from repro.nn.sharding import ShardCfg, as_shardings, infer_param_specs
+from repro.training import optim
+from repro.training.train import make_prefill_step, make_serve_step, make_train_step
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12       # bf16
+HBM_BW = 819e9            # bytes/s
+ICI_BW = 50e9             # bytes/s per link
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def skip_reason(cfg: ArchCfg, shape_name: str) -> Optional[str]:
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return ("pure full-attention config without a sub-quadratic variant "
+                "— long_500k out of spec (DESIGN.md §long_500k skips)")
+    return None
+
+
+# ----------------------------------------------------------- shardings --
+
+def batch_shardings(cfg: ArchCfg, shape_name: str, sc: ShardCfg):
+    S, B, kind = INPUT_SHAPES[shape_name]
+    de = sc.data_spec_entry() if B % sc.dp == 0 else None
+    specs = {}
+    for k, v in input_specs(cfg, shape_name).items():
+        spec = [de] + [None] * (len(v.shape) - 1)
+        specs[k] = NamedSharding(sc.mesh, P(*spec))
+    return specs
+
+
+def _leaf_state_spec(shape: Tuple[int, ...], batch: int, sc: ShardCfg) -> P:
+    entries: list = [None] * len(shape)
+    used = set()
+    # batch dim -> data axes (first exact match, scanning left to right)
+    if batch % sc.dp == 0 and batch > 1:
+        for i, d in enumerate(shape):
+            if d == batch:
+                entries[i] = sc.data_spec_entry()
+                used.add(i)
+                break
+    # largest remaining dim divisible by tp -> model axis
+    tp = sc.tp
+    if tp > 1:
+        cands = [(d, i) for i, d in enumerate(shape)
+                 if i not in used and d % tp == 0 and d >= tp]
+        if cands:
+            _, i = max(cands)
+            entries[i] = sc.model_axis
+    return P(*entries)
+
+
+def state_shardings(state_shapes: Any, batch: int, sc: ShardCfg):
+    def spec(leaf):
+        if not hasattr(leaf, "shape") or len(leaf.shape) == 0:
+            return NamedSharding(sc.mesh, P())
+        return NamedSharding(sc.mesh, _leaf_state_spec(tuple(leaf.shape),
+                                                       batch, sc))
+    return jax.tree.map(spec, state_shapes)
+
+
+def param_shardings(cfg: ArchCfg, params_shapes: Any, sc: ShardCfg):
+    specs = infer_param_specs(sc, params_shapes)
+    return jax.tree.map(lambda s: NamedSharding(sc.mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ------------------------------------------------------------ lowering --
+
+def lower_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+               serve_variant: Optional[str] = None):
+    """Returns (lowered, meta) for one (arch, shape, mesh)."""
+    cfg = get_config(arch)
+    sc = make_shard_cfg(multi_pod=multi_pod)
+    S, B, kind = INPUT_SHAPES[shape_name]
+    api = get_model_api(cfg)
+    key = jax.random.PRNGKey(0)
+    batch = input_specs(cfg, shape_name)
+    b_shard = batch_shardings(cfg, shape_name, sc)
+    force_local = bool(shape_name == "long_500k" and cfg.family in
+                       ("dense", "vlm") and cfg.window)
+
+    params_shapes = jax.eval_shape(lambda k: api.init_params(k, cfg, sc), key)
+    p_shard = param_shardings(cfg, params_shapes, sc)
+
+    if kind == "train":
+        opt = optim.for_config(cfg.optimizer)
+        step_fn = make_train_step(cfg, sc, opt)
+        opt_shapes = jax.eval_shape(opt.init, params_shapes)
+        o_shard = param_shardings(cfg, opt_shapes, sc)
+        step_shape = jax.ShapeDtypeStruct((), jnp.int32)
+        with sc.mesh:
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(p_shard, o_shard, NamedSharding(sc.mesh, P()),
+                              b_shard),
+                donate_argnums=(0, 1),
+            ).lower(params_shapes, opt_shapes, step_shape, batch)
+    elif kind == "prefill":
+        step_fn = make_prefill_step(cfg, sc)
+        with sc.mesh:
+            lowered = jax.jit(
+                step_fn, in_shardings=(p_shard, b_shard),
+            ).lower(params_shapes, batch)
+    else:  # decode
+        step_fn = make_serve_step(cfg, sc, force_local=force_local)
+        state_shapes = jax.eval_shape(
+            partial(api.init_decode_state, cfg, B, S, sc,
+                    **({"force_local": True} if force_local else {})))
+        s_shard = state_shardings(state_shapes, B, sc)
+        with sc.mesh:
+            lowered = jax.jit(
+                step_fn, in_shardings=(p_shard, s_shard, b_shard),
+                donate_argnums=(1,),
+            ).lower(params_shapes, state_shapes, batch)
+    meta = {"arch": arch, "shape": shape_name, "kind": kind,
+            "multi_pod": multi_pod, "force_local": force_local,
+            "n_devices": sc.mesh.size}
+    return lowered, meta
+
+
+# ------------------------------------------------------------ roofline --
+
+def roofline_terms(costs: hlo_costs.HloCosts, n_devices: int,
+                   mflops: float) -> Dict[str, float]:
+    """HLO quantities are per-device (SPMD module); model_flops is global."""
+    compute_s = costs.flops / PEAK_FLOPS
+    memory_s = costs.bytes / HBM_BW
+    # dedup = distinct operands charged once per loop-body invocation —
+    # the realistic HBM figure (weights VMEM-resident within a body);
+    # memory_s (every access) is the strict upper bound.
+    memory_dedup_s = (costs.bytes_dedup or costs.bytes) / HBM_BW
+    collective_s = costs.collective_bytes / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_dedup_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    hlo_flops_global = costs.flops * n_devices
+    return {
+        **terms,
+        "memory_upper_s": memory_s,
+        "dominant": dominant,
+        "model_flops": mflops,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_flops_ratio": (mflops / hlo_flops_global
+                               if hlo_flops_global else 0.0),
+        "step_time_lower_bound_s": bound,
+        "mfu_bound": (mflops / n_devices / PEAK_FLOPS / max(bound, 1e-30)),
+    }
+
+
+def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+             out_dir: Optional[str] = None, save_hlo: bool = False) -> dict:
+    cfg = get_config(arch)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name}
+    reason = skip_reason(cfg, shape_name)
+    if reason:
+        rec.update(status="skipped", reason=reason)
+        _write(rec, out_dir)
+        return rec
+    try:
+        t0 = time.time()
+        lowered, meta = lower_pair(arch, shape_name, multi_pod=multi_pod)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        costs = hlo_costs.analyze_hlo(hlo)
+        n_dev = meta["n_devices"]
+        mflops = model_flops(cfg, shape_name)
+        rec.update(
+            status="ok", kind=meta["kind"], n_devices=n_dev,
+            force_local=meta["force_local"],
+            lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2),
+            params=param_count(cfg), active_params=active_param_count(cfg),
+            memory={
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "peak_bytes": mem.peak_memory_in_bytes,
+                "per_device_total": (mem.argument_size_in_bytes
+                                     + mem.temp_size_in_bytes),
+            },
+            xla_cost_analysis={"flops_body_once": ca.get("flops", 0.0),
+                               "bytes_body_once":
+                                   ca.get("bytes accessed", 0.0)},
+            hlo_costs=costs.as_dict(),
+            roofline=roofline_terms(costs, n_dev, mflops),
+        )
+        if save_hlo and out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            with open(os.path.join(
+                    out_dir, f"{arch}__{shape_name}__{mesh_name}.hlo.txt"),
+                    "w") as f:
+                f.write(hlo)
+    except Exception as e:  # record failures — they are bugs to fix
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    _write(rec, out_dir)
+    return rec
+
+
+def _write(rec: dict, out_dir: Optional[str]) -> None:
+    out_dir = out_dir or RESULTS_DIR
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+
+
+def result_path(arch: str, shape: str, mesh: str,
+                out_dir: Optional[str] = None) -> str:
+    return os.path.join(out_dir or RESULTS_DIR,
+                        f"{arch}__{shape}__{mesh}.json")

@@ -1,0 +1,5 @@
+"""Model zoo: the paper's FL models (CNN, char-LSTM) and the 10 assigned
+datacenter architectures (dense / MoE / xLSTM / Mamba2-hybrid / VLM /
+enc-dec audio)."""
+
+from repro.models.api import get_model_api, ModelAPI  # noqa: F401

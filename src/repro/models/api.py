@@ -1,0 +1,41 @@
+"""Uniform per-architecture model API used by launchers/dry-run/tests."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+
+from repro.configs.base import ArchCfg
+from repro.models import lm
+from repro.nn.sharding import ShardCfg
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    init_params: Callable        # (key, cfg, sc) -> params
+    loss_fn: Callable            # (params, batch, cfg, sc) -> (loss, metrics)
+    prefill: Callable            # (params, batch, cfg, sc) -> (logits, state)
+    decode_step: Callable        # (params, batch, state, cfg, sc) -> (logits, state)
+    init_decode_state: Callable  # (cfg, batch, kv_len, sc) -> state
+
+
+def get_model_api(cfg: ArchCfg) -> ModelAPI:
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return ModelAPI(lm.dense_init, lm.dense_loss, lm.dense_prefill,
+                        lm.dense_decode_step, lm.dense_init_decode_state)
+    if fam == "moe":
+        return ModelAPI(lm.moe_init, lm.moe_loss, lm.moe_prefill,
+                        lm.moe_decode_step, lm.moe_init_decode_state)
+    if fam == "ssm":
+        return ModelAPI(lm.xlstm_init, lm.xlstm_loss, lm.xlstm_prefill,
+                        lm.xlstm_decode_step, lm.xlstm_init_decode_state)
+    if fam == "hybrid":
+        return ModelAPI(lm.zamba_init, lm.zamba_loss, lm.zamba_prefill,
+                        lm.zamba_decode_step, lm.zamba_init_decode_state)
+    if fam == "audio":
+        from repro.models import whisper
+        return ModelAPI(whisper.init_params, whisper.loss_fn, whisper.prefill,
+                        whisper.decode_step, whisper.init_decode_state)
+    raise ValueError(f"unknown family {fam}")

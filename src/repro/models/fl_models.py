@@ -1,0 +1,167 @@
+"""The paper's local models: 2-layer CNN [McMahan et al.] and char-LSTM.
+
+Uniform FL-model API (used by repro.core's round loop):
+  init(key)                     -> params
+  apply(params, x)              -> logits (B, n_classes) or (B, T, V)
+  per_sample_loss(params, batch)-> (B,) fp32   (feeds statistical utility)
+  loss(params, batch)           -> scalar
+  accuracy(params, batch)       -> scalar
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers, recurrent
+
+
+@dataclasses.dataclass(frozen=True)
+class FLModel:
+    name: str
+    init: Callable
+    apply: Callable
+    per_sample_loss: Callable
+    loss: Callable
+    accuracy: Callable
+    param_bits: int = 0  # filled by make_* (uplink payload size)
+
+
+def _count_bits(params, bits_per_param: int = 32) -> int:
+    n = sum(int(p.size) for p in jax.tree.leaves(params))
+    return n * bits_per_param
+
+
+# ------------------------------------------------------------- 2-layer CNN
+
+def make_cnn(input_shape: Tuple[int, int, int], n_classes: int, *,
+             c1: int = 16, c2: int = 32, d_fc: int = 128,
+             seed_probe: int = 0) -> FLModel:
+    H, W, C = input_shape
+
+    def init(key):
+        ks = jax.random.split(key, 4)
+        h2, w2 = H // 4, W // 4
+        return {
+            "conv1": layers.conv2d_init(ks[0], C, c1, 3),
+            "conv2": layers.conv2d_init(ks[1], c1, c2, 3),
+            "fc1": layers.dense_init(ks[2], h2 * w2 * c2, d_fc),
+            "fc2": layers.dense_init(ks[3], d_fc, n_classes),
+        }
+
+    def apply(params, x):
+        h = jax.nn.relu(layers.conv2d(params["conv1"], x))
+        h = layers.max_pool2d(h, 2, 2)
+        h = jax.nn.relu(layers.conv2d(params["conv2"], h))
+        h = layers.max_pool2d(h, 2, 2)
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(layers.dense(params["fc1"], h))
+        return layers.dense(params["fc2"], h)
+
+    return _classifier_model("cnn", init, apply)
+
+
+def make_har_cnn(n_classes: int = 6, *, c1: int = 16, c2: int = 32,
+                 d_fc: int = 128) -> FLModel:
+    """2-layer 1D CNN over (128, 9) sensor windows (HAR task)."""
+
+    def init(key):
+        ks = jax.random.split(key, 4)
+        return {
+            "conv1": layers.conv1d_init(ks[0], 9, c1, 5),
+            "conv2": layers.conv1d_init(ks[1], c1, c2, 5),
+            "fc1": layers.dense_init(ks[2], (128 // 16) * c2, d_fc),
+            "fc2": layers.dense_init(ks[3], d_fc, n_classes),
+        }
+
+    def pool(h):  # 1D max-pool /4
+        return jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                                     (1, 4, 1), (1, 4, 1), "VALID")
+
+    def apply(params, x):
+        h = jax.nn.relu(layers.conv1d(params["conv1"], x))
+        h = pool(h)
+        h = jax.nn.relu(layers.conv1d(params["conv2"], h))
+        h = pool(h)
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(layers.dense(params["fc1"], h))
+        return layers.dense(params["fc2"], h)
+
+    return _classifier_model("har_cnn", init, apply)
+
+
+def _classifier_model(name, init, apply) -> FLModel:
+    def per_sample_loss(params, batch):
+        logits = apply(params, batch["x"])
+        return layers.per_example_ce(logits, batch["y"])
+
+    def loss(params, batch):
+        return jnp.mean(per_sample_loss(params, batch))
+
+    def accuracy(params, batch):
+        logits = apply(params, batch["x"])
+        return jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+
+    probe = init(jax.random.PRNGKey(0))
+    return FLModel(name, init, apply, per_sample_loss, loss, accuracy,
+                   param_bits=_count_bits(probe))
+
+
+# --------------------------------------------------------------- char LSTM
+
+def make_char_lstm(vocab: int, *, d_embed: int = 32,
+                   d_hidden: int = 128) -> FLModel:
+    def init(key):
+        ks = jax.random.split(key, 3)
+        return {
+            "embed": layers.embedding_init(ks[0], vocab, d_embed, scale=0.1),
+            "lstm": recurrent.lstm_init(ks[1], d_embed, d_hidden),
+            "head": layers.dense_init(ks[2], d_hidden, vocab),
+        }
+
+    def apply(params, x):
+        e = layers.embedding(params["embed"], x)
+        h, _ = recurrent.lstm_forward(params["lstm"], e)
+        return layers.dense(params["head"], h)
+
+    def per_sample_loss(params, batch):
+        """batch: x (B, T) int; next-char targets = x shifted."""
+        logits = apply(params, batch["x"][:, :-1])
+        nll = layers.per_example_ce(logits, batch["x"][:, 1:])
+        return jnp.mean(nll, axis=-1)  # per-sequence mean
+
+    def loss(params, batch):
+        return jnp.mean(per_sample_loss(params, batch))
+
+    def accuracy(params, batch):
+        logits = apply(params, batch["x"][:, :-1])
+        pred = jnp.argmax(logits, -1)
+        return jnp.mean((pred == batch["x"][:, 1:]).astype(jnp.float32))
+
+    probe = init(jax.random.PRNGKey(0))
+    return FLModel("char_lstm", init, apply, per_sample_loss, loss, accuracy,
+                   param_bits=_count_bits(probe))
+
+
+def make_fl_model(task: str, *, small: bool = False) -> FLModel:
+    """Paper tasks: cnn@mnist, cnn@cifar10, cnn@har, lstm@shakespeare.
+
+    ``small=True`` is the single-CPU-core benchmark scale (same 2-layer
+    structure, reduced widths) — the paper-scale widths are the defaults.
+    """
+    kw = dict(c1=8, c2=16, d_fc=32) if small else {}
+    if task == "cnn@mnist":
+        return make_cnn((28, 28, 1), 10, **kw)
+    if task == "cnn@cifar10":
+        return make_cnn((32, 32, 3), 10, **kw)
+    if task == "cnn@har":
+        return make_har_cnn(6, **kw)
+    if task == "lstm@shakespeare":
+        from repro.data.synthetic import CHAR_VOCAB
+        return make_char_lstm(CHAR_VOCAB,
+                              **(dict(d_embed=16, d_hidden=48) if small
+                                 else {}))
+    raise ValueError(task)

@@ -1,0 +1,565 @@
+"""Decoder language models for the assigned architectures.
+
+Families covered here: dense (llama/deepseek/granite/gemma2), moe
+(olmoe/kimi-k2), vlm (llava-next — language tower consuming stub patch
+embeddings), ssm (xlstm), hybrid (zamba2). Whisper (enc-dec audio) lives
+in ``repro.models.whisper``.
+
+Public per-family API (uniform; see ``repro.models.api``):
+  init_params(key, cfg, sc)            -> params pytree
+  loss_fn(params, batch, cfg, sc)      -> (loss, metrics)      [train_*]
+  prefill(params, batch, cfg, sc)      -> (last_logits, state) [prefill_*]
+  decode_step(params, batch, state, cfg, sc) -> (logits, state) [decode_*]
+  init_decode_state(cfg, batch, kv_len, sc)  -> state pytree
+
+Decode-state convention: a "KV cache of seq_len" holds seq_len−1 prior
+tokens; decode_step writes token seq_len−1 (0-based) and attends the full
+seq_len context. SSM/hybrid states are O(1) recurrent states (+ ring KV
+for zamba2's windowed shared attention).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchCfg
+from repro.nn import attention as attn
+from repro.nn import layers, ssm, transformer as tf, xlstm
+from repro.nn.sharding import ShardCfg, shard_act
+
+LB_COEF = 0.01
+Z_COEF = 0.001
+
+
+def _dtype(cfg: ArchCfg):
+    return jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+
+
+def _embed(params, tokens, cfg: ArchCfg):
+    x = layers.embedding(params["embed"], tokens)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def _pick_chunk(s: int, target: int = 512) -> int:
+    for c in range(min(target, s), 0, -1):
+        if s % c == 0:
+            return c
+    return s
+
+
+def chunked_ce(x: jax.Array, embed_params, labels: jax.Array, cfg: ArchCfg,
+               sc: ShardCfg, *, chunk: int = 512) -> jax.Array:
+    """Cross-entropy without materialising full (B, S, V) logits.
+
+    Scans over sequence chunks; each chunk's logits are (B, c, V) with V
+    sharded over the model axis by constraint. Labels < 0 are masked.
+    """
+    B, S, D = x.shape
+    c = _pick_chunk(S, chunk)
+    n = S // c
+    table = embed_params["table"]
+    xs = x.reshape(B, n, c, D).swapaxes(0, 1)
+    ls = labels.reshape(B, n, c).swapaxes(0, 1)
+
+    def body(acc, inp):
+        xc, lc = inp
+        logits = xc @ table.T
+        logits = layers.softcap(logits, cfg.final_softcap)
+        logits = shard_act(sc, logits, sc.data_spec_entry(), None, sc.model_axis)
+        lsafe = jnp.maximum(lc, 0)
+        nll = layers.per_example_ce(logits, lsafe)
+        m = (lc >= 0).astype(jnp.float32)
+        return (acc[0] + jnp.sum(nll * m), acc[1] + jnp.sum(m)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (xs, ls))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def _final_logits(x_last: jax.Array, params, cfg: ArchCfg) -> jax.Array:
+    logits = x_last @ params["embed"]["table"].T
+    return layers.softcap(logits, cfg.final_softcap)
+
+
+# =================================================== dense / vlm families
+
+def dense_init(key, cfg: ArchCfg, sc: ShardCfg):
+    dt = _dtype(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "embed": layers.embedding_init(k1, cfg.vocab, cfg.d_model, dtype=dt,
+                                       scale=1.0 / math.sqrt(cfg.d_model)
+                                       if cfg.embed_scale else None),
+        "stack": tf.stack_init(k2, cfg, cfg.n_layers, use_moe=False, dtype=dt),
+        "final_ln": layers.rmsnorm_init(k3, cfg.d_model, dt),
+    }
+
+
+def _dense_backbone(params, x, cfg: ArchCfg, sc: ShardCfg, *,
+                    force_local: bool = False, remat: bool = True):
+    windows = tf.layer_windows(cfg, cfg.n_layers, force_local=force_local)
+    x, aux = tf.stack_apply(params["stack"], x, cfg, sc, use_moe=False,
+                            windows=windows, remat=remat)
+    return layers.rmsnorm(params["final_ln"], x,
+                          scale_plus_one=cfg.embed_scale), aux
+
+
+def _vlm_concat(params, batch, cfg: ArchCfg):
+    x_txt = _embed(params, batch["tokens"], cfg)
+    img = batch["image_embeds"].astype(x_txt.dtype)
+    return jnp.concatenate([img, x_txt], axis=1)
+
+
+def dense_loss(params, batch, cfg: ArchCfg, sc: ShardCfg):
+    if cfg.family == "vlm":
+        x = _vlm_concat(params, batch, cfg)
+        pad = jnp.full(batch["image_embeds"].shape[:2], -1, jnp.int32)
+        labels = jnp.concatenate([pad, batch["labels"]], axis=1)
+    else:
+        x = _embed(params, batch["tokens"], cfg)
+        labels = batch["labels"]
+    x = shard_act(sc, x, sc.data_spec_entry(), None, None)
+    x, _ = _dense_backbone(params, x, cfg, sc)
+    loss = chunked_ce(x, params["embed"], labels, cfg, sc)
+    return loss, {"ce": loss}
+
+
+def dense_prefill(params, batch, cfg: ArchCfg, sc: ShardCfg):
+    if cfg.family == "vlm":
+        x = _vlm_concat(params, batch, cfg)
+    else:
+        x = _embed(params, batch["tokens"], cfg)
+    windows = tf.layer_windows(cfg, cfg.n_layers)
+    x, caches = tf.stack_prefill(params["stack"], x, cfg, sc,
+                                 use_moe=False, windows=windows)
+    x = layers.rmsnorm(params["final_ln"], x, scale_plus_one=cfg.embed_scale)
+    return _final_logits(x[:, -1:, :], params, cfg), caches
+
+
+def dense_init_decode_state(cfg: ArchCfg, batch: int, kv_len: int,
+                            sc: ShardCfg, *, force_local: bool = False):
+    windows = tf.layer_windows(cfg, cfg.n_layers, force_local=force_local)
+    return tf.init_stack_cache(cfg, cfg.n_layers, batch, kv_len,
+                               windows=windows, length=kv_len - 1,
+                               dtype=_dtype(cfg), force_local=force_local)
+
+
+def dense_decode_step(params, batch, state, cfg: ArchCfg, sc: ShardCfg, *,
+                      force_local: bool = False):
+    x = _embed(params, batch["tokens"], cfg)
+    windows = tf.layer_windows(cfg, cfg.n_layers, force_local=force_local)
+    x, state = tf.stack_decode(params["stack"], x, state, cfg, sc,
+                               use_moe=False, windows=windows)
+    x = layers.rmsnorm(params["final_ln"], x, scale_plus_one=cfg.embed_scale)
+    return _final_logits(x, params, cfg), state
+
+
+# ============================================================ moe family
+
+def moe_init(key, cfg: ArchCfg, sc: ShardCfg):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    m = cfg.moe
+    p = {
+        "embed": layers.embedding_init(ks[0], cfg.vocab, cfg.d_model, dtype=dt),
+        "moe_stack": tf.stack_init(ks[1], cfg, cfg.n_layers - m.n_dense_prefix,
+                                   use_moe=True, dtype=dt),
+        "final_ln": layers.rmsnorm_init(ks[2], cfg.d_model, dt),
+    }
+    if m.n_dense_prefix:
+        p["prefix_stack"] = tf.stack_init(ks[3], cfg, m.n_dense_prefix,
+                                          use_moe=False, dtype=dt)
+    return p
+
+
+def _moe_backbone(params, x, cfg: ArchCfg, sc: ShardCfg):
+    aux_tot = jnp.zeros((), jnp.float32)
+    if "prefix_stack" in params:
+        x, _ = tf.stack_apply(params["prefix_stack"], x, cfg, sc,
+                              use_moe=False, windows=None)
+    x, aux = tf.stack_apply(params["moe_stack"], x, cfg, sc,
+                            use_moe=True, windows=None)
+    x = layers.rmsnorm(params["final_ln"], x)
+    return x, aux
+
+
+def moe_loss(params, batch, cfg: ArchCfg, sc: ShardCfg):
+    x = _embed(params, batch["tokens"], cfg)
+    x = shard_act(sc, x, sc.data_spec_entry(), None, None)
+    x, aux = _moe_backbone(params, x, cfg, sc)
+    ce = chunked_ce(x, params["embed"], batch["labels"], cfg, sc)
+    loss = ce + LB_COEF * aux["lb_loss"] + Z_COEF * aux["z_loss"]
+    return loss, {"ce": ce, **aux}
+
+
+def moe_prefill(params, batch, cfg: ArchCfg, sc: ShardCfg):
+    x = _embed(params, batch["tokens"], cfg)
+    m = cfg.moe
+    pre_caches = None
+    if "prefix_stack" in params:
+        x, pre_caches = tf.stack_prefill(params["prefix_stack"], x, cfg, sc,
+                                         use_moe=False, windows=None)
+    x, caches = tf.stack_prefill(params["moe_stack"], x, cfg, sc,
+                                 use_moe=True, windows=None)
+    x = layers.rmsnorm(params["final_ln"], x)
+    return _final_logits(x[:, -1:, :], params, cfg), {"prefix": pre_caches,
+                                                      "moe": caches}
+
+
+def moe_init_decode_state(cfg: ArchCfg, batch: int, kv_len: int, sc: ShardCfg):
+    m = cfg.moe
+    st = {"moe": tf.init_stack_cache(cfg, cfg.n_layers - m.n_dense_prefix,
+                                     batch, kv_len, windows=None,
+                                     length=kv_len - 1, dtype=_dtype(cfg))}
+    if m.n_dense_prefix:
+        st["prefix"] = tf.init_stack_cache(cfg, m.n_dense_prefix, batch,
+                                           kv_len, windows=None,
+                                           length=kv_len - 1, dtype=_dtype(cfg))
+    return st
+
+
+def moe_decode_step(params, batch, state, cfg: ArchCfg, sc: ShardCfg):
+    x = _embed(params, batch["tokens"], cfg)
+    new_state = dict(state)
+    if "prefix_stack" in params:
+        x, new_state["prefix"] = tf.stack_decode(
+            params["prefix_stack"], x, state["prefix"], cfg, sc,
+            use_moe=False, windows=None)
+    x, new_state["moe"] = tf.stack_decode(params["moe_stack"], x,
+                                          state["moe"], cfg, sc,
+                                          use_moe=True, windows=None)
+    x = layers.rmsnorm(params["final_ln"], x)
+    return _final_logits(x, params, cfg), new_state
+
+
+# ==================================================== ssm (xlstm) family
+
+def _xlstm_dims(cfg: ArchCfg):
+    md = xlstm.mlstm_dims(cfg.d_model, cfg.n_heads)
+    sd = xlstm.slstm_dims(cfg.d_model, cfg.n_heads)
+    return md, sd
+
+
+def xlstm_init(key, cfg: ArchCfg, sc: ShardCfg):
+    dt = _dtype(cfg)
+    md, sd = _xlstm_dims(cfg)
+    g = cfg.slstm_group
+    G = cfg.n_layers // g
+    ks = jax.random.split(key, 4)
+    sl_keys = jax.random.split(ks[1], G)
+    ml_keys = jax.random.split(ks[2], G * (g - 1)).reshape(G, g - 1, 2)
+
+    def init_group_mlstm(kk):
+        return jax.vmap(lambda k: _with_ln(
+            lambda kx: xlstm.mlstm_init(kx, md, dtype=dt), k, cfg, dt))(kk)
+
+    return {
+        "embed": layers.embedding_init(ks[0], cfg.vocab, cfg.d_model, dtype=dt),
+        "slstm_stack": jax.vmap(lambda k: _with_ln(
+            lambda kx: xlstm.slstm_init(kx, sd, dtype=dt), k, cfg, dt))(sl_keys),
+        "mlstm_stack_inner": jax.vmap(init_group_mlstm)(ml_keys),
+        "final_ln": layers.rmsnorm_init(ks[3], cfg.d_model, dt),
+    }
+
+
+def _with_ln(init_fn, key, cfg: ArchCfg, dt):
+    k1, k2 = jax.random.split(key)
+    return {"ln": layers.rmsnorm_init(k1, cfg.d_model, dt), "core": init_fn(k2)}
+
+
+def _xlstm_backbone(params, x, cfg: ArchCfg, sc: ShardCfg, *,
+                    states=None, collect_states: bool = False):
+    """Grouped scan: G × (1 sLSTM + (g−1) mLSTM). Returns (x, states')."""
+    md, sd = _xlstm_dims(cfg)
+
+    def mlstm_body(h, inp):
+        p, st = inp  # st: MLSTMState
+        out, st2 = xlstm.mlstm_forward(
+            p["core"], layers.rmsnorm(p["ln"], h), md,
+            state=st, return_state=True)
+        return h + out, st2
+
+    def group_body(h, inp):
+        slp, mlp, sst, mst = inp
+        h0 = layers.rmsnorm(slp["ln"], h)
+        out, sst2 = xlstm.slstm_forward(slp["core"], h0, sd,
+                                        state=sst, return_state=True)
+        h = h + out
+
+        def inner(hh, inp2):
+            p, st = inp2
+            return mlstm_body(hh, (p, st))
+
+        h, msts = jax.lax.scan(inner, h, (mlp, mst))
+        return h, (sst2, msts)
+
+    G = cfg.n_layers // cfg.slstm_group
+    if states is None:
+        B = x.shape[0]
+        sst = jax.vmap(lambda _: xlstm.init_slstm_state(B, sd))(jnp.arange(G))
+        mst = jax.vmap(lambda _: jax.vmap(
+            lambda __: xlstm.init_mlstm_state(B, md))(
+                jnp.arange(cfg.slstm_group - 1)))(jnp.arange(G))
+    else:
+        sst, mst = states
+    body = jax.checkpoint(group_body, prevent_cse=False)
+    x, new_states = jax.lax.scan(
+        body, x, (params["slstm_stack"], params["mlstm_stack_inner"], sst, mst))
+    x = layers.rmsnorm(params["final_ln"], x)
+    return x, new_states
+
+
+def xlstm_loss(params, batch, cfg: ArchCfg, sc: ShardCfg):
+    x = _embed(params, batch["tokens"], cfg)
+    x = shard_act(sc, x, sc.data_spec_entry(), None, None)
+    x, _ = _xlstm_backbone(params, x, cfg, sc)
+    loss = chunked_ce(x, params["embed"], batch["labels"], cfg, sc)
+    return loss, {"ce": loss}
+
+
+def xlstm_init_decode_state(cfg: ArchCfg, batch: int, kv_len: int, sc: ShardCfg):
+    md, sd = _xlstm_dims(cfg)
+    g = cfg.slstm_group
+    G = cfg.n_layers // g
+    dt = _dtype(cfg)
+    sst = jax.vmap(lambda _: xlstm.init_slstm_state(batch, sd))(jnp.arange(G))
+    mst = jax.vmap(lambda _: jax.vmap(
+        lambda __: xlstm.init_mlstm_cache(batch, md, dt))(
+            jnp.arange(g - 1)))(jnp.arange(G))
+    return (sst, mst)
+
+
+def xlstm_decode_step(params, batch, state, cfg: ArchCfg, sc: ShardCfg):
+    md, sd = _xlstm_dims(cfg)
+    x = _embed(params, batch["tokens"], cfg)
+    sst, mst = state
+
+    def group_body(h, inp):
+        slp, mlp, sst_g, mst_g = inp
+        h0 = layers.rmsnorm(slp["ln"], h)
+        out, sst2 = xlstm.slstm_decode_step(slp["core"], h0, sst_g, sd)
+        h = h + out
+
+        def inner(hh, inp2):
+            p, st = inp2
+            out2, st2 = xlstm.mlstm_decode_step(
+                p["core"], layers.rmsnorm(p["ln"], hh), st, md)
+            return hh + out2, st2
+
+        h, mst2 = jax.lax.scan(inner, h, (mlp, mst_g))
+        return h, (sst2, mst2)
+
+    x, new_states = jax.lax.scan(
+        group_body, x, (params["slstm_stack"], params["mlstm_stack_inner"],
+                        sst, mst))
+    x = layers.rmsnorm(params["final_ln"], x)
+    return _final_logits(x, params, cfg), new_states
+
+
+def xlstm_prefill(params, batch, cfg: ArchCfg, sc: ShardCfg):
+    x = _embed(params, batch["tokens"], cfg)
+    B = x.shape[0]
+    md, sd = _xlstm_dims(cfg)
+    x, states = _xlstm_backbone(params, x, cfg, sc)
+    # recurrent prefill state: final (sLSTM state, mLSTM state) per layer;
+    # decode continues with conv buffers reset (window ≪ context: documented)
+    g = cfg.slstm_group
+    G = cfg.n_layers // g
+    dt = _dtype(cfg)
+    sst, mst_states = states
+    conv = jax.vmap(lambda _: jax.vmap(
+        lambda __: jnp.zeros((B, md.d_conv - 1, md.d_inner), dt))(
+            jnp.arange(g - 1)))(jnp.arange(G))
+    mst = xlstm.MLSTMCache(mst_states, conv)
+    return _final_logits(x[:, -1:, :], params, cfg), (sst, mst)
+
+
+# ================================================== hybrid (zamba2) family
+
+def _zamba_dims(cfg: ArchCfg) -> ssm.Mamba2Dims:
+    return ssm.dims_for(cfg.d_model, cfg.ssm_state, head_dim=cfg.ssm_head_dim)
+
+
+def _zamba_layout(cfg: ArchCfg) -> Tuple[int, int, int]:
+    """(n_groups, group_size, n_tail): groups of `attn_every` mamba layers
+    each followed by the shared attention block; trailing mamba layers
+    (n_layers % attn_every) run without attention (81 = 13×6 + 3)."""
+    g = cfg.attn_every
+    return cfg.n_layers // g, g, cfg.n_layers % g
+
+
+def zamba_init(key, cfg: ArchCfg, sc: ShardCfg):
+    dt = _dtype(cfg)
+    dims = _zamba_dims(cfg)
+    G, g, tail = _zamba_layout(cfg)
+    ks = jax.random.split(key, 5)
+
+    def init_m(k):
+        return _with_ln(lambda kx: ssm.mamba2_init(kx, dims, dtype=dt), k, cfg, dt)
+
+    gkeys = jax.random.split(ks[1], G * g).reshape(G, g, 2)
+    p = {
+        "embed": layers.embedding_init(ks[0], cfg.vocab, cfg.d_model, dtype=dt),
+        "mamba_groups_inner": jax.vmap(jax.vmap(init_m))(gkeys),
+        "shared_attn": tf.block_init(ks[2], cfg, use_moe=False, dtype=dt),
+        "final_ln": layers.rmsnorm_init(ks[3], cfg.d_model, dt),
+    }
+    if tail:
+        p["mamba_tail"] = jax.vmap(init_m)(jax.random.split(ks[4], tail))
+    return p
+
+
+def _zamba_mamba_scan(stacked, h, dims, *, caches=None, remat=False):
+    """Scan mamba layers; full-seq if caches is None else one-token decode."""
+
+    if caches is None:
+        def body(hh, p):
+            out = ssm.mamba2_forward(p["core"], layers.rmsnorm(p["ln"], hh), dims)
+            return hh + out, None
+        b = jax.checkpoint(body, prevent_cse=False) if remat else body
+        h, _ = jax.lax.scan(b, h, stacked)
+        return h, None
+
+    def body(hh, inp):
+        p, st, buf = inp
+        out, mc = ssm.mamba2_decode_step(
+            p["core"], layers.rmsnorm(p["ln"], hh),
+            ssm.Mamba2Cache(st, buf), dims)
+        return hh + out, (mc.state, mc.conv_buf)
+
+    h, (sts, bufs) = jax.lax.scan(body, h, (stacked, caches.state,
+                                            caches.conv_buf))
+    return h, ssm.Mamba2Cache(sts, bufs)
+
+
+def zamba_loss(params, batch, cfg: ArchCfg, sc: ShardCfg):
+    dims = _zamba_dims(cfg)
+    G, g, tail = _zamba_layout(cfg)
+    x = _embed(params, batch["tokens"], cfg)
+    x = shard_act(sc, x, sc.data_spec_entry(), None, None)
+    shared = params["shared_attn"]
+    w = jnp.int32(cfg.window or 2**30)
+
+    def group_body(h, p_g):
+        h, _ = _zamba_mamba_scan(p_g, h, dims)
+        h, _ = tf.block_apply(shared, h, cfg, sc, window=w, use_moe=False)
+        return h, None
+
+    gb = jax.checkpoint(group_body, prevent_cse=False)
+    x, _ = jax.lax.scan(gb, x, params["mamba_groups_inner"])
+    if tail:
+        x, _ = _zamba_mamba_scan(params["mamba_tail"], x, dims, remat=True)
+    x = layers.rmsnorm(params["final_ln"], x)
+    loss = chunked_ce(x, params["embed"], batch["labels"], cfg, sc)
+    return loss, {"ce": loss}
+
+
+def zamba_init_decode_state(cfg: ArchCfg, batch: int, kv_len: int, sc: ShardCfg):
+    dims = _zamba_dims(cfg)
+    dt = _dtype(cfg)
+    G, g, tail = _zamba_layout(cfg)
+
+    def stack_caches(n):
+        return jax.vmap(lambda _: ssm.init_mamba2_cache(batch, dims, dt))(
+            jnp.arange(n))
+
+    mg = jax.vmap(lambda _: stack_caches(g))(jnp.arange(G))
+    one_kv = attn.init_cache(batch, kv_len, cfg.n_kv, cfg.hd, dt,
+                             window=cfg.window, length=kv_len - 1)
+    akv = attn.KVCache(
+        jnp.broadcast_to(one_kv.k[None], (G,) + one_kv.k.shape),
+        jnp.broadcast_to(one_kv.v[None], (G,) + one_kv.v.shape),
+        jnp.broadcast_to(one_kv.pos[None], (G,) + one_kv.pos.shape),
+        one_kv.length)
+    st = {"mamba_groups": mg, "attn": akv}
+    if tail:
+        st["mamba_tail"] = stack_caches(tail)
+    return st
+
+
+def zamba_decode_step(params, batch, state, cfg: ArchCfg, sc: ShardCfg):
+    dims = _zamba_dims(cfg)
+    G, g, tail = _zamba_layout(cfg)
+    x = _embed(params, batch["tokens"], cfg)
+    shared = params["shared_attn"]
+    akv = state["attn"]
+    length = akv.length
+
+    def group_body(h, inp):
+        p_g, mc_g, k_g, v_g, pos_g = inp
+        h, mc2 = _zamba_mamba_scan(p_g, h, dims, caches=mc_g)
+        cache = attn.KVCache(k_g, v_g, pos_g, length)
+        h, cache2 = tf.block_decode(shared, h, cache, cfg, sc,
+                                    window=cfg.window, use_moe=False)
+        return h, (mc2, (cache2.k, cache2.v, cache2.pos))
+
+    x, (mg2, (ks_, vs_, pos_)) = jax.lax.scan(
+        group_body, x,
+        (params["mamba_groups_inner"], state["mamba_groups"],
+         akv.k, akv.v, akv.pos))
+    new_state = {"mamba_groups": mg2,
+                 "attn": attn.KVCache(ks_, vs_, pos_, length + 1)}
+    if tail:
+        x, mt2 = _zamba_mamba_scan(params["mamba_tail"], x, dims,
+                                   caches=state["mamba_tail"])
+        new_state["mamba_tail"] = mt2
+    x = layers.rmsnorm(params["final_ln"], x)
+    return _final_logits(x, params, cfg), new_state
+
+
+def zamba_prefill(params, batch, cfg: ArchCfg, sc: ShardCfg):
+    """Prefill: full forward collecting per-group SSM states + windowed KV."""
+    dims = _zamba_dims(cfg)
+    G, g, tail = _zamba_layout(cfg)
+    x = _embed(params, batch["tokens"], cfg)
+    B, S, _ = x.shape
+    dt = _dtype(cfg)
+    shared = params["shared_attn"]
+    W = min(S + 1, cfg.window) if cfg.window else S + 1
+    pos = jnp.arange(S)
+
+    def mamba_states_scan(stacked, h):
+        def body(hh, p):
+            out, st = ssm.mamba2_forward(p["core"], layers.rmsnorm(p["ln"], hh),
+                                         dims, return_state=True)
+            buf = jnp.zeros((B, dims.d_conv - 1,
+                             dims.d_inner + 2 * dims.d_state), dt)
+            return hh + out, (st, buf)
+        h, (sts, bufs) = jax.lax.scan(body, h, stacked)
+        return h, ssm.Mamba2Cache(sts, bufs)
+
+    def group_body(h, p_g):
+        h, mc = mamba_states_scan(p_g, h)
+        hn = layers.rmsnorm(shared["ln1"], h)
+        q, k, v = attn.qkv(shared["attn"], hn, cfg.n_heads, cfg.n_kv, cfg.hd)
+        q = attn.rope(q, pos, theta=cfg.rope_theta)
+        k = attn.rope(k, pos, theta=cfg.rope_theta)
+        o = attn.attend(q, k, v, causal=True, window=cfg.window,
+                        q_positions=pos, k_positions=pos)
+        h = h + layers.dense(shared["attn"]["wo"],
+                             o.reshape(B, S, cfg.n_heads * cfg.hd))
+        hn = layers.rmsnorm(shared["ln2"], h)
+        h = h + tf.ffn_apply(shared["ffn"], hn, cfg, sc)
+        kw = k[:, -W:, :, :].astype(dt)
+        vw = v[:, -W:, :, :].astype(dt)
+        npos = pos[-W:].astype(jnp.int32)
+        pad = W - npos.shape[0]
+        kv = (jnp.pad(kw, ((0, 0), (0, pad), (0, 0), (0, 0))),
+              jnp.pad(vw, ((0, 0), (0, pad), (0, 0), (0, 0))),
+              jnp.pad(npos, (0, pad), constant_values=attn.POS_SENTINEL))
+        return h, (mc, kv)
+
+    x, (mg, (ks_, vs_, pos_)) = jax.lax.scan(
+        group_body, x, params["mamba_groups_inner"])
+    st = {"mamba_groups": mg,
+          "attn": attn.KVCache(ks_, vs_, pos_, jnp.asarray(S, jnp.int32))}
+    if tail:
+        x, mt = mamba_states_scan(params["mamba_tail"], x)
+        st["mamba_tail"] = mt
+    x = layers.rmsnorm(params["final_ln"], x)
+    return _final_logits(x[:, -1:, :], params, cfg), st

@@ -1,0 +1,9 @@
+"""Pure-JAX neural-network substrate.
+
+Modules are (init_fn, apply_fn) pairs over nested-dict param pytrees — no
+flax/haiku dependency (container ships bare jax). All apply fns are
+functional and jit/pjit-safe; distribution is expressed through
+`repro.nn.sharding.ShardCfg` activation/param sharding rules.
+"""
+
+from repro.nn.sharding import ShardCfg, shard_act, infer_param_specs  # noqa: F401

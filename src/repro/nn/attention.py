@@ -1,0 +1,257 @@
+"""GQA attention with RoPE, sliding windows, logit soft-capping, KV caches.
+
+Layout: activations (B, S, D); heads (B, S, H, hd).
+
+Two execution paths:
+  * ``attend`` — online-softmax attention, ``lax.scan`` over query chunks
+    (an XLA-level flash attention). This is the reference/dry-run path; it
+    bounds live score memory to (B, H, q_chunk, S_k) per step.
+  * ``repro.kernels.flash_attention.ops.flash_attention`` — the Pallas TPU
+    kernel (same math, VMEM-tiled), selected by callers on TPU backends.
+
+GQA is computed without materialising repeated KV heads: q is reshaped to
+(B, S, n_kv, group, hd) and contracted against (B, S_k, n_kv, hd).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------- RoPE --
+
+def rope(x: jax.Array, positions: jax.Array, *, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding. x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------- projections --
+
+def mha_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int, *,
+             bias: bool = False, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": layers.dense_init(ks[0], d_model, n_heads * head_dim, bias=bias, dtype=dtype),
+        "wk": layers.dense_init(ks[1], d_model, n_kv * head_dim, bias=bias, dtype=dtype),
+        "wv": layers.dense_init(ks[2], d_model, n_kv * head_dim, bias=bias, dtype=dtype),
+        "wo": layers.dense_init(ks[3], n_heads * head_dim, d_model, bias=bias, dtype=dtype),
+    }
+
+
+def qkv(params, x: jax.Array, n_heads: int, n_kv: int, head_dim: int):
+    B, S, _ = x.shape
+    q = layers.dense(params["wq"], x).reshape(B, S, n_heads, head_dim)
+    k = layers.dense(params["wk"], x).reshape(B, S, n_kv, head_dim)
+    v = layers.dense(params["wv"], x).reshape(B, S, n_kv, head_dim)
+    return q, k, v
+
+
+# ----------------------------------------------------------- core attend --
+
+def _mask(q_pos, k_pos, *, causal: bool, window: Optional[int]) -> jax.Array:
+    """(..., Sq, Sk) boolean keep-mask from position vectors."""
+    d = q_pos[..., :, None] - k_pos[..., None, :]
+    keep = jnp.ones(d.shape, bool)
+    if causal:
+        keep &= d >= 0
+    if window is not None:
+        keep &= d < window
+    return keep
+
+
+def attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
+           causal: bool = True,
+           window: Optional[int] = None,
+           logit_softcap: Optional[float] = None,
+           q_positions: Optional[jax.Array] = None,
+           k_positions: Optional[jax.Array] = None,
+           kv_valid_len: Optional[jax.Array] = None,
+           q_chunk: int = 1024,
+           scale: Optional[float] = None) -> jax.Array:
+    """Online-softmax GQA attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, n_kv, hd). Returns (B, Sq, H, hd).
+    ``kv_valid_len`` masks out unwritten cache slots during decode.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, n_kv = k.shape[1], k.shape[2]
+    G = H // n_kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    if q_positions is None:
+        q_positions = jnp.arange(Sq)
+    if k_positions is None:
+        k_positions = jnp.arange(Sk)
+    q_positions = jnp.broadcast_to(q_positions, (Sq,)) if q_positions.ndim <= 1 else q_positions
+    k_positions = jnp.broadcast_to(k_positions, (Sk,)) if k_positions.ndim <= 1 else k_positions
+
+    # §Perf iteration 1: keep matmul operands in the model's low precision
+    # and accumulate in fp32 (preferred_element_type) instead of casting
+    # whole K/V tensors to fp32 — halves the dominant score/KV HBM traffic
+    # for bf16 models; fp32 inputs are untouched (tests/oracles unchanged).
+    cdt = q.dtype if q.dtype in (jnp.bfloat16, jnp.float16) else jnp.float32
+    qg = (q.reshape(B, Sq, n_kv, G, hd).astype(jnp.float32)
+          * scale).astype(cdt)
+    kf = k.astype(cdt)
+    vf = v.astype(cdt)
+
+    def block(q_blk, qpos_blk):
+        # q_blk: (B, C, n_kv, G, hd). The "attend_core" named_scope tags
+        # these ops in HLO metadata so hlo_costs can attribute score/softmax
+        # HBM traffic — the bytes the Pallas flash kernel keeps in VMEM.
+        s = jnp.einsum("bcngh,bsnh->bncgs", q_blk, kf,
+                       preferred_element_type=jnp.float32)
+        if logit_softcap is not None:
+            s = logit_softcap * jnp.tanh(s / logit_softcap)
+        keep = _mask(qpos_blk, k_positions, causal=causal, window=window)
+        if kv_valid_len is not None:
+            keep &= (k_positions < kv_valid_len)[None, :]
+        s = jnp.where(keep[None, None, :, None, :], s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        denom = jnp.sum(p, axis=-1, keepdims=True)
+        o = jnp.einsum("bncgs,bsnh->bcngh", p.astype(cdt), vf,
+                       preferred_element_type=jnp.float32)
+        return o / jnp.maximum(denom, 1e-30).swapaxes(1, 2).reshape(
+            B, q_blk.shape[1], n_kv, G, 1)
+
+    if Sq % q_chunk:  # largest divisor of Sq that is <= q_chunk
+        q_chunk = next(c for c in range(min(q_chunk, Sq), 0, -1)
+                       if Sq % c == 0)
+    with jax.named_scope("attend_core"):
+        if Sq <= q_chunk:
+            out = block(qg, q_positions)
+        else:
+            n_blk = Sq // q_chunk
+            qs = qg.reshape(B, n_blk, q_chunk, n_kv, G, hd).swapaxes(0, 1)
+            ps = q_positions.reshape(n_blk, q_chunk)
+
+            def body(_, qp):
+                qb, pb = qp
+                return None, block(qb, pb)
+
+            _, outs = jax.lax.scan(body, None, (qs, ps))
+            out = outs.swapaxes(0, 1).reshape(B, Sq, n_kv, G, hd)
+
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ------------------------------------------------------------- KV cache --
+
+POS_SENTINEL = jnp.iinfo(jnp.int32).max // 2  # unwritten-slot marker
+
+
+class KVCache(NamedTuple):
+    """Ring-buffer KV cache.
+
+    Slot capacity W may be < the logical sequence length (windowed layers:
+    long_500k keeps only the last `window` positions live). ``pos`` stores
+    each slot's absolute position; unwritten slots hold POS_SENTINEL, which
+    the causal mask (d = q_pos − k_pos ≥ 0) rejects automatically.
+    """
+
+    k: jax.Array       # (B, W, n_kv, hd) — RoPE already applied at write
+    v: jax.Array       # (B, W, n_kv, hd)
+    pos: jax.Array     # (W,) int32 absolute positions (POS_SENTINEL = empty)
+    length: jax.Array  # scalar int32 — tokens written so far
+
+
+def init_cache(batch: int, s_max: int, n_kv: int, head_dim: int,
+               dtype=jnp.bfloat16, *, window: Optional[int] = None,
+               length: int = 0) -> KVCache:
+    w = s_max if window is None else min(s_max, window)
+    z = jnp.zeros((batch, w, n_kv, head_dim), dtype)
+    if length:
+        # simulate a post-prefill cache: slots hold the last w positions
+        pos = jnp.arange(w) + max(0, length - w)
+        pos = jnp.where(pos < length, pos, POS_SENTINEL).astype(jnp.int32)
+    else:
+        pos = jnp.full((w,), POS_SENTINEL, jnp.int32)
+    return KVCache(z, z, pos, jnp.asarray(length, jnp.int32))
+
+
+def cache_update_decode(cache: KVCache, k_new: jax.Array, v_new: jax.Array) -> KVCache:
+    """Write one token (B, 1, n_kv, hd) at ring slot length % W."""
+    W = cache.k.shape[1]
+    idx = cache.length % W
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype), (0, idx, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype), (0, idx, 0, 0))
+    pos = jax.lax.dynamic_update_slice(cache.pos, cache.length[None], (idx,))
+    return KVCache(k, v, pos, cache.length + 1)
+
+
+# ------------------------------------------------------- full layer apply --
+
+def self_attention(params, x: jax.Array, *, n_heads: int, n_kv: int,
+                   head_dim: int, causal: bool = True,
+                   window: Optional[int] = None,
+                   logit_softcap: Optional[float] = None,
+                   rope_theta: Optional[float] = 10000.0,
+                   q_chunk: int = 1024,
+                   positions: Optional[jax.Array] = None,
+                   attn_fn=attend) -> jax.Array:
+    """Training/prefill self-attention over a full sequence."""
+    B, S, _ = x.shape
+    q, k, v = qkv(params, x, n_heads, n_kv, head_dim)
+    pos = jnp.arange(S) if positions is None else positions
+    if rope_theta is not None:
+        q = rope(q, pos, theta=rope_theta)
+        k = rope(k, pos, theta=rope_theta)
+    o = attn_fn(q, k, v, causal=causal, window=window,
+                logit_softcap=logit_softcap, q_chunk=q_chunk,
+                q_positions=pos, k_positions=pos)
+    return layers.dense(params["wo"], o.reshape(B, S, n_heads * head_dim))
+
+
+def self_attention_decode(params, x: jax.Array, cache: KVCache, *,
+                          n_heads: int, n_kv: int, head_dim: int,
+                          window: Optional[int] = None,
+                          logit_softcap: Optional[float] = None,
+                          rope_theta: Optional[float] = 10000.0):
+    """One-token decode. x: (B, 1, D). Returns (out, new_cache).
+
+    Causality/validity falls out of the ring cache's ``pos`` array: empty
+    slots carry POS_SENTINEL ≫ q_pos so the causal mask drops them; with a
+    window, overwritten slots always hold in-window positions.
+    """
+    B = x.shape[0]
+    q, k, v = qkv(params, x, n_heads, n_kv, head_dim)
+    pos = cache.length[None]  # (1,)
+    if rope_theta is not None:
+        q = rope(q, pos, theta=rope_theta)
+        k = rope(k, pos, theta=rope_theta)
+    new_cache = cache_update_decode(cache, k, v)
+    o = attend(q, new_cache.k, new_cache.v, causal=True, window=window,
+               logit_softcap=logit_softcap,
+               q_positions=pos, k_positions=new_cache.pos)
+    return layers.dense(params["wo"], o.reshape(B, 1, n_heads * head_dim)), new_cache
+
+
+def cross_attention(params, x: jax.Array, kv_feats: jax.Array, *,
+                    n_heads: int, n_kv: int, head_dim: int,
+                    q_chunk: int = 1024) -> jax.Array:
+    """Encoder-decoder cross attention (no RoPE, no mask)."""
+    B, S, _ = x.shape
+    Sk = kv_feats.shape[1]
+    q = layers.dense(params["wq"], x).reshape(B, S, n_heads, head_dim)
+    k = layers.dense(params["wk"], kv_feats).reshape(B, Sk, n_kv, head_dim)
+    v = layers.dense(params["wv"], kv_feats).reshape(B, Sk, n_kv, head_dim)
+    o = attend(q, k, v, causal=False, q_chunk=q_chunk)
+    return layers.dense(params["wo"], o.reshape(B, S, n_heads * head_dim))

@@ -1,0 +1,194 @@
+"""Core layers: initializers, dense, embedding, norms, conv, pooling.
+
+Every module is an (init, apply) pair over nested-dict params. Params are
+stored in ``param_dtype`` (fp32 for FL-sim models, bf16 for the large
+assigned architectures); matmuls run in ``jnp.promote_types`` of input and
+param dtype with fp32 accumulation where it matters (norms, softmax, loss).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------- init --
+
+def normal_init(key, shape, scale: float, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def fan_in_init(key, shape, dtype=jnp.float32, fan_axis: int = -2):
+    fan_in = shape[fan_axis] if len(shape) >= 2 else shape[0]
+    return normal_init(key, shape, 1.0 / math.sqrt(max(fan_in, 1)), dtype)
+
+
+def zeros_init(_key, shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------- dense --
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = True,
+               dtype=jnp.float32, scale: Optional[float] = None):
+    kw, _ = jax.random.split(key)
+    w = (fan_in_init(kw, (d_in, d_out), dtype) if scale is None
+         else normal_init(kw, (d_in, d_out), scale, dtype))
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(params, x: jax.Array) -> jax.Array:
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+# ------------------------------------------------------------ embedding --
+
+def embedding_init(key, vocab: int, d: int, *, dtype=jnp.float32,
+                   scale: Optional[float] = None):
+    scale = 1.0 if scale is None else scale
+    return {"table": normal_init(key, (vocab, d), scale, dtype)}
+
+
+def embedding(params, ids: jax.Array) -> jax.Array:
+    return jnp.take(params["table"], ids, axis=0)
+
+
+def embedding_logits(params, x: jax.Array) -> jax.Array:
+    """Tied-weight readout: (..., d) @ (d, vocab)."""
+    return x @ params["table"].T
+
+
+# ---------------------------------------------------------------- norms --
+
+def rmsnorm_init(_key, d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x: jax.Array, *, eps: float = 1e-6,
+            scale_plus_one: bool = False) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    s = params["scale"].astype(jnp.float32)
+    if scale_plus_one:  # gemma-style (1 + w)
+        s = 1.0 + s
+    return (y * s).astype(dt)
+
+
+def layernorm_init(_key, d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+# ----------------------------------------------------------------- conv --
+
+def conv2d_init(key, c_in: int, c_out: int, k: int, *, dtype=jnp.float32):
+    kw, _ = jax.random.split(key)
+    fan_in = c_in * k * k
+    return {
+        "w": normal_init(kw, (k, k, c_in, c_out), 1.0 / math.sqrt(fan_in), dtype),
+        "b": jnp.zeros((c_out,), dtype),
+    }
+
+
+def conv2d(params, x: jax.Array, *, stride: int = 1,
+           padding: str = "SAME") -> jax.Array:
+    """x: (B, H, W, C)."""
+    y = jax.lax.conv_general_dilated(
+        x, params["w"], window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + params["b"]
+
+
+def conv1d_init(key, c_in: int, c_out: int, k: int, *, dtype=jnp.float32,
+                groups: int = 1):
+    kw, _ = jax.random.split(key)
+    fan_in = (c_in // groups) * k
+    return {
+        "w": normal_init(kw, (k, c_in // groups, c_out), 1.0 / math.sqrt(fan_in), dtype),
+        "b": jnp.zeros((c_out,), dtype),
+    }
+
+
+def conv1d(params, x: jax.Array, *, stride: int = 1, padding="SAME",
+           groups: int = 1) -> jax.Array:
+    """x: (B, T, C)."""
+    y = jax.lax.conv_general_dilated(
+        x, params["w"], window_strides=(stride,), padding=padding,
+        dimension_numbers=("NTC", "TIO", "NTC"), feature_group_count=groups)
+    return y + params["b"]
+
+
+def causal_depthwise_conv1d(params, x: jax.Array) -> jax.Array:
+    """Depthwise causal conv (Mamba-style). x: (B, T, C); w: (k, 1, C)."""
+    k = params["w"].shape[0]
+    y = jax.lax.conv_general_dilated(
+        x, params["w"], window_strides=(1,), padding=[(k - 1, 0)],
+        dimension_numbers=("NTC", "TIO", "NTC"),
+        feature_group_count=x.shape[-1])
+    return y + params["b"]
+
+
+def max_pool2d(x: jax.Array, k: int = 2, stride: int = 2) -> jax.Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, stride, stride, 1), "VALID")
+
+
+# ------------------------------------------------------------ misc ops --
+
+def swiglu(x_gate: jax.Array, x_up: jax.Array) -> jax.Array:
+    return jax.nn.silu(x_gate) * x_up
+
+
+def gelu_tanh(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token cross-entropy in fp32. logits (..., V), labels (...)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def per_example_ce(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-example CE (no reduction) — feeds the statistical utility."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return logz - gold

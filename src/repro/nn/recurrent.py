@@ -1,0 +1,47 @@
+"""Classic LSTM (Hochreiter & Schmidhuber) for the paper's next-word task."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers
+
+
+def lstm_init(key, d_in: int, d_hidden: int, *, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w": layers.fan_in_init(k1, (d_in, 4 * d_hidden), dtype),
+        "r": layers.fan_in_init(k2, (d_hidden, 4 * d_hidden), dtype),
+        "b": jnp.zeros((4 * d_hidden,), dtype),
+    }
+
+
+class LSTMState(NamedTuple):
+    h: jax.Array
+    c: jax.Array
+
+
+def lstm_cell(params, x_t: jax.Array, st: LSTMState) -> LSTMState:
+    pre = x_t @ params["w"] + st.h @ params["r"] + params["b"]
+    i, f, g, o = jnp.split(pre, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * st.c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return LSTMState(h, c)
+
+
+def lstm_forward(params, x: jax.Array,
+                 state: Optional[LSTMState] = None) -> Tuple[jax.Array, LSTMState]:
+    """x: (B, T, d_in) -> (B, T, d_hidden)."""
+    B = x.shape[0]
+    dh = params["r"].shape[0]
+    st = state or LSTMState(jnp.zeros((B, dh), x.dtype),
+                            jnp.zeros((B, dh), x.dtype))
+
+    def step(carry, x_t):
+        nxt = lstm_cell(params, x_t, carry)
+        return nxt, nxt.h
+
+    st, hs = jax.lax.scan(step, st, x.swapaxes(0, 1))
+    return hs.swapaxes(0, 1), st

@@ -1,0 +1,188 @@
+"""Mesh/sharding helpers shared by the model stack and the launchers.
+
+Design:
+  * ``ShardCfg`` carries the (optional) mesh and logical axis names. When
+    ``mesh is None`` every helper is a no-op, so the same model code runs
+    unsharded on CPU smoke tests and fully sharded under the production
+    mesh without branching in model code.
+  * Activation sharding is expressed with explicit
+    ``jax.lax.with_sharding_constraint`` calls at layer boundaries
+    (batch over data axes, sequence or heads over the model axis).
+  * Parameter sharding is inferred by ``infer_param_specs`` — a rule-based
+    mapping from param-tree paths/shapes to PartitionSpecs (FSDP over the
+    data axes × tensor-parallel over the model axis), with explicit
+    overrides for expert-parallel MoE tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCfg:
+    """Logical → physical axis mapping for one launch.
+
+    ``data_axes`` may span several mesh axes (e.g. ``("pod", "data")``) —
+    batch / FSDP dims are sharded over their product. ``model_axis`` is the
+    tensor/expert-parallel axis.
+    """
+
+    mesh: Optional[Mesh] = None
+    data_axes: tuple = ("data",)
+    model_axis: Optional[str] = "model"
+
+    @property
+    def enabled(self) -> bool:
+        return self.mesh is not None
+
+    def axis_size(self, axes) -> int:
+        if not self.enabled:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def dp(self) -> int:
+        return self.axis_size(self.data_axes)
+
+    @property
+    def tp(self) -> int:
+        return 1 if self.model_axis is None else self.axis_size(self.model_axis)
+
+    def data_spec_entry(self):
+        """PartitionSpec entry for a batch-like dim."""
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+    def sharding(self, *spec_entries) -> Optional[NamedSharding]:
+        if not self.enabled:
+            return None
+        return NamedSharding(self.mesh, P(*spec_entries))
+
+
+# Convenience singleton for unsharded runs (smoke tests, FL simulation).
+UNSHARDED = ShardCfg(mesh=None)
+
+
+def shard_act(cfg: ShardCfg, x: jax.Array, *spec_entries) -> jax.Array:
+    """Constrain activation ``x`` to ``P(*spec_entries)`` if a mesh is set.
+
+    Entries may be None / axis-name / tuple-of-axis-names, PartitionSpec
+    style. Entries referring to the model axis when ``model_axis`` is None
+    must be passed via :func:`model_axis_entry` so they collapse to None.
+    """
+    if not cfg.enabled:
+        return x
+    sh = cfg.sharding(*spec_entries)
+    return jax.lax.with_sharding_constraint(x, sh)
+
+
+def axis_if_divisible(cfg: ShardCfg, dim_size: int, axes) -> Optional[Any]:
+    """Return the axis entry if ``dim_size`` divides evenly on it, else None.
+
+    GSPMD tolerates non-divisible shardings by padding, but padding KV-head
+    or expert dims silently inflates compute — we only shard dims that
+    divide evenly and record the decision in the compiled spec.
+    """
+    if axes is None or not cfg.enabled:
+        return None
+    size = cfg.axis_size(axes)
+    if size == 1:
+        return None
+    return axes if dim_size % size == 0 else None
+
+
+_EXPERT_RE = re.compile(r"experts?")
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def infer_param_specs(cfg: ShardCfg, params: Any, *, scan_stacked: bool = True) -> Any:
+    """Rule-based parameter PartitionSpecs (FSDP × TP).
+
+    Rules, applied to each leaf of shape ``s`` (ignoring a leading
+    stacked-layer dim for scanned stacks when the path contains 'stack'):
+
+      * expert tables ``(E, d_in, d_out)``: E → model axis (expert
+        parallel), d_in → data axes (FSDP) when divisible.
+      * matrices ``(d_in, d_out)``: larger dim → model axis, other dim →
+        data axes (both only when divisible).
+      * embeddings/vectors: 1-D → data axes when divisible; scalars
+        replicated.
+
+    Returns a pytree of PartitionSpec (or NamedSharding when mesh set via
+    ``as_shardings``) congruent with ``params``.
+    """
+
+    data_entry = cfg.data_axes if len(cfg.data_axes) > 1 else cfg.data_axes[0]
+
+    def spec_for(path, leaf) -> P:
+        shape = tuple(leaf.shape)
+        pstr = _path_str(path)
+        offset = 0
+        entries: list = [None] * len(shape)
+        if scan_stacked and ("stack" in pstr or "layers" in pstr) and len(shape) >= 2:
+            # leading dim(s) are scanned layer stacks — never shard them
+            offset = 1
+            # group-stacked params (e.g. xlstm (G, K, ...)) keep 2 stack dims
+            if "inner" in pstr and len(shape) >= 3:
+                offset = 2
+        body = shape[offset:]
+        if _EXPERT_RE.search(pstr) and len(body) >= 2:
+            # (E, din, dout) or (E, d): expert dim → model axis
+            e_entry = axis_if_divisible(cfg, body[0], cfg.model_axis)
+            entries[offset] = e_entry
+            if len(body) >= 2:
+                entries[offset + 1] = axis_if_divisible(cfg, body[1], data_entry)
+            return P(*entries)
+        if len(body) >= 2:
+            # pick TP dim = largest body dim; FSDP dim = the other largest
+            order = sorted(range(len(body)), key=lambda i: body[i], reverse=True)
+            tp_i = order[0]
+            entries[offset + tp_i] = axis_if_divisible(cfg, body[tp_i], cfg.model_axis)
+            for i in order[1:]:
+                fs = axis_if_divisible(cfg, body[i], data_entry)
+                if fs is not None:
+                    entries[offset + i] = fs
+                    break
+            return P(*entries)
+        if len(body) == 1:
+            entries[offset] = axis_if_divisible(cfg, body[0], data_entry)
+            return P(*entries)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def as_shardings(cfg: ShardCfg, spec_tree: Any):
+    """PartitionSpec tree → NamedSharding tree (requires mesh)."""
+    assert cfg.enabled
+    return jax.tree.map(
+        lambda s: NamedSharding(cfg.mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def constrain_params(cfg: ShardCfg, params: Any) -> Any:
+    """Apply inferred specs as sharding constraints (used inside jit)."""
+    if not cfg.enabled:
+        return params
+    specs = infer_param_specs(cfg, params)
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(x, NamedSharding(cfg.mesh, s)),
+        params,
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,286 @@
+"""Transformer blocks and scanned layer stacks for the assigned archs.
+
+A "block" = pre-norm attention + pre-norm FFN (dense/MoE), with optional
+gemma2 post-norms / softcaps / alternating windows. Stacks run as
+``lax.scan`` over stacked per-layer params with ``jax.checkpoint`` remat —
+this keeps the HLO size O(1) in depth (critical: the container compiles
+512-way SPMD on one CPU core) and bounds live activation memory to one
+layer boundary per layer (sequence-sharded over the model axis).
+
+Three execution modes per stack:
+  * apply   — full-sequence training forward
+  * prefill — full-sequence, also emits per-layer KV caches
+  * decode  — one token against stacked ring KV caches
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchCfg
+from repro.nn import attention as attn
+from repro.nn import layers, moe as moe_lib
+from repro.nn.sharding import ShardCfg, axis_if_divisible, shard_act
+
+
+# ------------------------------------------------------------------ FFN --
+
+def ffn_init(key, cfg: ArchCfg, *, dtype):
+    D, F = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.family == "audio":  # whisper: biased, non-GLU
+        return {"fc1": layers.dense_init(k1, D, F, bias=True, dtype=dtype),
+                "fc2": layers.dense_init(k2, F, D, bias=True, dtype=dtype)}
+    return {"w_gate": layers.dense_init(k1, D, F, bias=False, dtype=dtype),
+            "w_up": layers.dense_init(k2, D, F, bias=False, dtype=dtype),
+            "w_down": layers.dense_init(k3, F, D, bias=False, dtype=dtype)}
+
+
+def ffn_apply(params, x: jax.Array, cfg: ArchCfg, sc: ShardCfg) -> jax.Array:
+    if "fc1" in params:
+        h = layers.gelu_tanh(layers.dense(params["fc1"], x))
+        return layers.dense(params["fc2"], h)
+    act = jax.nn.silu if cfg.mlp_act == "silu" else layers.gelu_tanh
+    g = layers.dense(params["w_gate"], x)
+    u = layers.dense(params["w_up"], x)
+    h = act(g) * u
+    h = shard_act(sc, h, sc.data_spec_entry(), None,
+                  axis_if_divisible(sc, cfg.d_ff, sc.model_axis))
+    return layers.dense(params["w_down"], h)
+
+
+# ---------------------------------------------------------------- block --
+
+def block_init(key, cfg: ArchCfg, *, use_moe: bool, dtype):
+    ks = jax.random.split(key, 6)
+    p = {
+        "ln1": layers.rmsnorm_init(ks[0], cfg.d_model, dtype),
+        "attn": attn.mha_init(ks[1], cfg.d_model, cfg.n_heads, cfg.n_kv,
+                              cfg.hd, bias=cfg.qkv_bias, dtype=dtype),
+        "ln2": layers.rmsnorm_init(ks[2], cfg.d_model, dtype),
+    }
+    if use_moe:
+        assert cfg.moe is not None
+        p["moe"] = moe_lib.moe_init(ks[3], _moe_cfg(cfg), dtype=dtype)
+    else:
+        p["ffn"] = ffn_init(ks[3], cfg, dtype=dtype)
+    if cfg.post_norm:
+        p["post_ln1"] = layers.rmsnorm_init(ks[4], cfg.d_model, dtype)
+        p["post_ln2"] = layers.rmsnorm_init(ks[5], cfg.d_model, dtype)
+    return p
+
+
+def _moe_cfg(cfg: ArchCfg) -> moe_lib.MoECfg:
+    m = cfg.moe
+    return moe_lib.MoECfg(cfg.d_model, cfg.d_ff, m.n_experts, m.top_k,
+                          capacity_factor=m.capacity_factor,
+                          shared_d_ff=m.shared_d_ff)
+
+
+def _norm(p, x, cfg: ArchCfg):
+    return layers.rmsnorm(p, x, scale_plus_one=cfg.embed_scale)
+
+
+def _shard_seq(sc: ShardCfg, x: jax.Array) -> jax.Array:
+    """Layer-boundary activation sharding: batch×data, seq×model (SP)."""
+    S = x.shape[1]
+    seq_entry = axis_if_divisible(sc, S, sc.model_axis) if S > 1 else None
+    return shard_act(sc, x, sc.data_spec_entry(), seq_entry, None)
+
+
+def _shard_heads(sc: ShardCfg, n: int):
+    return axis_if_divisible(sc, n, sc.model_axis)
+
+
+def block_apply(params, x: jax.Array, cfg: ArchCfg, sc: ShardCfg, *,
+                window, use_moe: bool, q_chunk: int = 1024,
+                attn_fn=attn.attend):
+    """Full-sequence block. ``window``: scalar int32 (0 = global attn)."""
+    x = _shard_seq(sc, x)
+    h = _norm(params["ln1"], x, cfg)
+    w = None if window is None else window
+    a = attn.self_attention(
+        params["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
+        causal=True, window=w, logit_softcap=cfg.attn_softcap,
+        rope_theta=cfg.rope_theta, q_chunk=q_chunk, attn_fn=attn_fn)
+    if cfg.post_norm:
+        a = _norm(params["post_ln1"], a, cfg)
+    x = x + a
+    h = _norm(params["ln2"], x, cfg)
+    aux = {}
+    if use_moe:
+        f, aux = moe_lib.moe_forward(params["moe"], h, _moe_cfg(cfg), sc)
+    else:
+        f = ffn_apply(params["ffn"], h, cfg, sc)
+    if cfg.post_norm:
+        f = _norm(params["post_ln2"], f, cfg)
+    return x + f, aux
+
+
+def block_decode(params, x: jax.Array, cache: attn.KVCache, cfg: ArchCfg,
+                 sc: ShardCfg, *, window, use_moe: bool):
+    """One-token block step. x: (B, 1, D)."""
+    h = _norm(params["ln1"], x, cfg)
+    w = None if window is None else window
+    a, cache = attn.self_attention_decode(
+        params["attn"], h, cache, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+        head_dim=cfg.hd, window=w, logit_softcap=cfg.attn_softcap,
+        rope_theta=cfg.rope_theta)
+    if cfg.post_norm:
+        a = _norm(params["post_ln1"], a, cfg)
+    x = x + a
+    h = _norm(params["ln2"], x, cfg)
+    if use_moe:
+        f, _ = moe_lib.moe_forward(params["moe"], h, _moe_cfg(cfg), sc)
+    else:
+        f = ffn_apply(params["ffn"], h, cfg, sc)
+    if cfg.post_norm:
+        f = _norm(params["post_ln2"], f, cfg)
+    return x + f, cache
+
+
+# ---------------------------------------------------------------- stack --
+
+def stack_init(key, cfg: ArchCfg, n_layers: int, *, use_moe: bool, dtype):
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(lambda k: block_init(k, cfg, use_moe=use_moe, dtype=dtype))(keys)
+
+
+def layer_windows(cfg: ArchCfg, n_layers: int, *,
+                  force_local: bool = False) -> Optional[jax.Array]:
+    """Per-layer window sizes (int32; 0 = global). None if all-global."""
+    if cfg.window is None:
+        return None
+    if cfg.alt_window and not force_local:
+        w = jnp.where(jnp.arange(n_layers) % 2 == 0, cfg.window, 0)
+    else:
+        w = jnp.full((n_layers,), cfg.window)
+    return w.astype(jnp.int32)
+
+
+def _window_arg(w_scalar):
+    """Scalar traced window -> attend arg: 0 means global (None)."""
+    if w_scalar is None:
+        return None
+    # attend's window mask is d < window; use a huge window for "global"
+    return jnp.where(w_scalar > 0, w_scalar, jnp.int32(2**30))
+
+
+def stack_apply(params, x: jax.Array, cfg: ArchCfg, sc: ShardCfg, *,
+                use_moe: bool, windows: Optional[jax.Array],
+                q_chunk: int = 1024, remat: bool = True,
+                remat_policy: str = "full"):
+    """Training forward through L scanned blocks. Returns (x, aux_mean).
+
+    remat_policy: "full" (default) recomputes everything in the backward
+    pass; "dots" saves matmul outputs. §Perf note: "dots" was REFUTED on
+    olmoe train_4k (collective +13%, memory +3%) — the saved outputs cross
+    the scan boundary with extra resharding; kept as an option.
+    """
+    n_layers = jax.tree.leaves(params)[0].shape[0]
+    ws = windows if windows is not None else jnp.zeros((n_layers,), jnp.int32)
+    wnone = windows is None
+
+    def body(h, inp):
+        p_l, w_l = inp
+        h, aux = block_apply(p_l, h, cfg, sc,
+                             window=None if wnone else _window_arg(w_l),
+                             use_moe=use_moe, q_chunk=q_chunk)
+        lb = aux.get("lb_loss", jnp.zeros((), jnp.float32))
+        zl = aux.get("z_loss", jnp.zeros((), jnp.float32))
+        return h, (lb, zl)
+
+    if remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if remat_policy == "dots" else None)
+        bd = jax.checkpoint(body, prevent_cse=False, policy=policy)
+    else:
+        bd = body
+    x, (lbs, zls) = jax.lax.scan(bd, x, (params, ws))
+    return x, {"lb_loss": jnp.mean(lbs), "z_loss": jnp.mean(zls)}
+
+
+def stack_decode(params, x: jax.Array, caches: Any, cfg: ArchCfg,
+                 sc: ShardCfg, *, use_moe: bool,
+                 windows: Optional[jax.Array]):
+    """One-token decode through L scanned blocks with stacked ring caches.
+
+    ``caches``: KVCache with leading layer dim on k/v/pos; shared scalar
+    ``length``.
+    """
+    n_layers = jax.tree.leaves(params)[0].shape[0]
+    ws = windows if windows is not None else jnp.zeros((n_layers,), jnp.int32)
+    wnone = windows is None
+    length = caches.length
+
+    def body(h, inp):
+        p_l, k_l, v_l, pos_l, w_l = inp
+        cache_l = attn.KVCache(k_l, v_l, pos_l, length)
+        h, new_cache = block_decode(p_l, h, cache_l, cfg, sc,
+                                    window=None if wnone else _window_arg(w_l),
+                                    use_moe=use_moe)
+        return h, (new_cache.k, new_cache.v, new_cache.pos)
+
+    x, (ks, vs, poss) = jax.lax.scan(body, x, (params, caches.k, caches.v,
+                                               caches.pos, ws))
+    return x, attn.KVCache(ks, vs, poss, length + 1)
+
+
+def init_stack_cache(cfg: ArchCfg, n_layers: int, batch: int, s_max: int,
+                     *, windows: Optional[jax.Array], length: int,
+                     dtype=jnp.bfloat16, force_local: bool = False) -> attn.KVCache:
+    """Stacked ring caches (layer-leading). Slot capacity is uniform across
+    layers (scan needs congruent shapes): full s_max normally, or the
+    window size when every layer is local (long_500k windowed variants)."""
+    all_local = windows is not None and force_local
+    window = int(cfg.window) if (all_local and cfg.window) else None
+    one = attn.init_cache(batch, s_max, cfg.n_kv, cfg.hd, dtype,
+                          window=window, length=length)
+    k = jnp.broadcast_to(one.k[None], (n_layers,) + one.k.shape)
+    pos = jnp.broadcast_to(one.pos[None], (n_layers,) + one.pos.shape)
+    return attn.KVCache(k, k, pos, one.length)
+
+
+def stack_prefill(params, x: jax.Array, cfg: ArchCfg, sc: ShardCfg, *,
+                  use_moe: bool, windows: Optional[jax.Array],
+                  q_chunk: int = 1024, cache_dtype=jnp.bfloat16):
+    """Full-sequence forward that also emits stacked KV caches."""
+    B, S, _ = x.shape
+    n_layers = jax.tree.leaves(params)[0].shape[0]
+    ws = windows if windows is not None else jnp.zeros((n_layers,), jnp.int32)
+    wnone = windows is None
+    pos = jnp.arange(S)
+
+    def body(h, inp):
+        p_l, w_l = inp
+        h0 = _shard_seq(sc, h)
+        hn = _norm(p_l["ln1"], h0, cfg)
+        q, k, v = attn.qkv(p_l["attn"], hn, cfg.n_heads, cfg.n_kv, cfg.hd)
+        if cfg.rope_theta is not None:
+            q = attn.rope(q, pos, theta=cfg.rope_theta)
+            k = attn.rope(k, pos, theta=cfg.rope_theta)
+        w = None if wnone else _window_arg(w_l)
+        o = attn.attend(q, k, v, causal=True, window=w,
+                        logit_softcap=cfg.attn_softcap, q_chunk=q_chunk,
+                        q_positions=pos, k_positions=pos)
+        a = layers.dense(p_l["attn"]["wo"], o.reshape(B, S, cfg.n_heads * cfg.hd))
+        if cfg.post_norm:
+            a = _norm(p_l["post_ln1"], a, cfg)
+        h0 = h0 + a
+        hn = _norm(p_l["ln2"], h0, cfg)
+        if use_moe:
+            f, _ = moe_lib.moe_forward(p_l["moe"], hn, _moe_cfg(cfg), sc)
+        else:
+            f = ffn_apply(p_l["ffn"], hn, cfg, sc)
+        if cfg.post_norm:
+            f = _norm(p_l["post_ln2"], f, cfg)
+        return h0 + f, (k.astype(cache_dtype), v.astype(cache_dtype))
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params, ws))
+    poss = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (n_layers, S))
+    caches = attn.KVCache(ks, vs, poss, jnp.asarray(S, jnp.int32))
+    return x, caches

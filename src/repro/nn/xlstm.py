@@ -1,0 +1,313 @@
+"""xLSTM blocks: chunked-parallel mLSTM and sequentially-scanned sLSTM.
+
+Faithful to arXiv:2405.04517's cell equations (stabilized exponential
+gating, matrix memory for mLSTM, normalizer states); the block wiring is
+the paper's pre-LN residual blocks with up/down projections (conv4 + silu
+on the q/k branch), with minor simplifications recorded in DESIGN.md.
+
+TPU adaptation: mLSTM trains in a chunkwise form (lax.scan over sequence
+chunks carrying (C, n, m) state — intra-chunk work is dense matmuls), the
+direct analogue of the chunked SSD scan in ``repro.nn.ssm``. sLSTM has a
+true sequential dependence through its recurrent gate matrices, so it runs
+as a lax.scan over time with per-head block-diagonal recurrence (heads are
+the tensor-parallel dim).
+
+Shapes: x (B, L, D); mLSTM inner dim 2D with NH heads.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers
+
+
+# =================================================================== mLSTM
+
+class MLSTMDims(NamedTuple):
+    d_model: int
+    d_inner: int
+    n_heads: int
+    head_dim: int
+    d_conv: int = 4
+    chunk: int = 64
+
+
+def mlstm_dims(d_model: int, n_heads: int, *, expand: int = 2,
+               chunk: int = 64) -> MLSTMDims:
+    d_inner = expand * d_model
+    assert d_inner % n_heads == 0
+    return MLSTMDims(d_model, d_inner, n_heads, d_inner // n_heads, 4, chunk)
+
+
+def mlstm_init(key, dims: MLSTMDims, *, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    din = dims.d_inner
+    return {
+        "up_proj": layers.dense_init(ks[0], dims.d_model, 2 * din, bias=False, dtype=dtype),
+        "conv": {"w": layers.normal_init(ks[1], (dims.d_conv, 1, din),
+                                         1.0 / math.sqrt(dims.d_conv), dtype),
+                 "b": jnp.zeros((din,), dtype)},
+        # block-diagonal per-head projections (xLSTM paper's BlockDiagonal
+        # linear): (NH, hd, hd) instead of full (din, din) — keeps 1.3B scale
+        "wq": layers.normal_init(ks[2], (dims.n_heads, dims.head_dim,
+                                         dims.head_dim),
+                                 1.0 / math.sqrt(dims.head_dim), dtype),
+        "wk": layers.normal_init(ks[3], (dims.n_heads, dims.head_dim,
+                                         dims.head_dim),
+                                 1.0 / math.sqrt(dims.head_dim), dtype),
+        "wv": layers.normal_init(ks[4], (dims.n_heads, dims.head_dim,
+                                         dims.head_dim),
+                                 1.0 / math.sqrt(dims.head_dim), dtype),
+        # input & forget gate pre-activations, per head
+        "wif": layers.dense_init(ks[5], din, 2 * dims.n_heads, bias=True, dtype=dtype),
+        "norm": layers.rmsnorm_init(ks[6], din, dtype),
+        "down_proj": layers.dense_init(ks[7], din, dims.d_model, bias=False, dtype=dtype),
+    }
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array  # (B, NH, dk, dv) fp32 matrix memory
+    n: jax.Array  # (B, NH, dk) fp32 normalizer
+    m: jax.Array  # (B, NH) fp32 log-space stabilizer
+
+
+def init_mlstm_state(batch: int, dims: MLSTMDims) -> MLSTMState:
+    NH, hd = dims.n_heads, dims.head_dim
+    return MLSTMState(jnp.zeros((batch, NH, hd, hd), jnp.float32),
+                      jnp.zeros((batch, NH, hd), jnp.float32),
+                      jnp.full((batch, NH), -1e30, jnp.float32))
+
+
+def _mlstm_chunked(q, k, v, i_pre, f_pre, state: MLSTMState, chunk: int):
+    """Stabilized chunkwise mLSTM core.
+
+    q,k,v: (B, L, NH, hd); i_pre,f_pre: (B, L, NH). Returns (h, state').
+    """
+    B, L, NH, hd = q.shape
+    cl = min(chunk, L)
+    assert L % cl == 0
+    nc = L // cl
+    # §Perf: value-carrying operands in model dtype, fp32 accumulation;
+    # gate/stabiliser math stays fp32.
+    cdt = q.dtype if q.dtype in (jnp.bfloat16, jnp.float16) else jnp.float32
+    qf = (q.astype(jnp.float32) / math.sqrt(hd)).astype(cdt)
+    kf = k.astype(cdt)
+    vf = v.astype(cdt)
+    a = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))  # log forget gate
+    b = i_pre.astype(jnp.float32)                       # log input gate
+
+    def rs(x):
+        return x.reshape(B, nc, cl, *x.shape[2:]).swapaxes(0, 1)
+
+    def body(carry, inp):
+        C_in, n_in, m_in = carry
+        qb, kb, vb, ab, bb = inp  # (B,cl,NH,...)
+        A = jnp.cumsum(ab, axis=1)          # (B,cl,NH) cumulative log decay
+        A_last = A[:, -1, :]
+        g = A + m_in[:, None, :]            # inter-chunk exponent per row
+        e = A[:, :, None, :] - A[:, None, :, :] + bb[:, None, :, :]  # (B,i,j,NH)
+        mask = jnp.tril(jnp.ones((cl, cl), bool))
+        e = jnp.where(mask[None, :, :, None], e, -jnp.inf)
+        m_row = jnp.maximum(g, jnp.max(e, axis=2))  # (B,cl,NH)
+        w_inter = jnp.exp(g - m_row)
+        w_intra = jnp.exp(e - m_row[:, :, None, :])  # (B,i,j,NH)
+        qk = jnp.einsum("bihd,bjhd->bijh", qb, kb,
+                        preferred_element_type=jnp.float32)
+        wqk = (w_intra * qk).astype(cdt)  # fused weight, low-precision read
+        num = (jnp.einsum("bih,bihk,bhkv->bihv", w_inter,
+                          qb.astype(jnp.float32), C_in) +
+               jnp.einsum("bijh,bjhv->bihv", wqk, vb,
+                          preferred_element_type=jnp.float32))
+        den = (jnp.einsum("bih,bihk,bhk->bih", w_inter,
+                          qb.astype(jnp.float32), n_in) +
+               jnp.sum(w_intra * qk, axis=2))
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_row))[..., None]
+        # carry update to end of chunk
+        e_end = A_last[:, None, :] - A + bb  # (B,j,NH)
+        m_out = jnp.maximum(A_last + m_in, jnp.max(e_end, axis=1))
+        w_c = jnp.exp(A_last + m_in - m_out)
+        w_kv = jnp.exp(e_end - m_out[:, None, :])  # (B,j,NH)
+        C_out = w_c[:, :, None, None] * C_in + jnp.einsum(
+            "bjh,bjhk,bjhv->bhkv", w_kv, kb.astype(jnp.float32),
+            vb.astype(jnp.float32))
+        n_out = w_c[:, :, None] * n_in + jnp.einsum(
+            "bjh,bjhk->bhk", w_kv, kb.astype(jnp.float32))
+        return (C_out, n_out, m_out), h
+
+    with jax.named_scope("mlstm_core"):
+        carry, hs = jax.lax.scan(
+            body, (state.C, state.n, state.m),
+            (rs(qf), rs(kf), rs(vf), rs(a), rs(b)))
+    h = hs.swapaxes(0, 1).reshape(B, L, NH, hd)
+    return h, MLSTMState(*carry)
+
+
+def mlstm_forward(params, x: jax.Array, dims: MLSTMDims,
+                  state: Optional[MLSTMState] = None,
+                  return_state: bool = False):
+    """Full-sequence mLSTM block. x: (B, L, D) -> (B, L, D)."""
+    B, L, _ = x.shape
+    NH, hd = dims.n_heads, dims.head_dim
+    up = layers.dense(params["up_proj"], x)
+    x_in, z = jnp.split(up, 2, axis=-1)
+    cx = jax.nn.silu(layers.causal_depthwise_conv1d(params["conv"], x_in))
+    cxh = cx.reshape(B, L, NH, hd)
+    xih = x_in.reshape(B, L, NH, hd)
+    q = jnp.einsum("blhd,hde->blhe", cxh, params["wq"])
+    k = jnp.einsum("blhd,hde->blhe", cxh, params["wk"])
+    v = jnp.einsum("blhd,hde->blhe", xih, params["wv"])
+    ifg = layers.dense(params["wif"], cx)
+    i_pre, f_pre = jnp.split(ifg, 2, axis=-1)  # (B, L, NH)
+    st = state if state is not None else init_mlstm_state(B, dims)
+    h, st = _mlstm_chunked(q, k, v, i_pre, f_pre, st, dims.chunk)
+    h = h.reshape(B, L, dims.d_inner).astype(x.dtype)
+    h = layers.rmsnorm(params["norm"], h) * jax.nn.silu(z)
+    out = layers.dense(params["down_proj"], h)
+    if return_state:
+        return out, st
+    return out
+
+
+class MLSTMCache(NamedTuple):
+    state: MLSTMState
+    conv_buf: jax.Array  # (B, d_conv-1, d_inner)
+
+
+def init_mlstm_cache(batch: int, dims: MLSTMDims, dtype=jnp.float32) -> MLSTMCache:
+    return MLSTMCache(init_mlstm_state(batch, dims),
+                      jnp.zeros((batch, dims.d_conv - 1, dims.d_inner), dtype))
+
+
+def mlstm_decode_step(params, x: jax.Array, cache: MLSTMCache, dims: MLSTMDims):
+    """One-token decode, exact recurrence. x: (B, 1, D)."""
+    B = x.shape[0]
+    NH, hd = dims.n_heads, dims.head_dim
+    up = layers.dense(params["up_proj"], x[:, 0, :])
+    x_in, z = jnp.split(up, 2, axis=-1)
+    window = jnp.concatenate(
+        [cache.conv_buf, x_in[:, None, :].astype(cache.conv_buf.dtype)], axis=1)
+    w = params["conv"]["w"][:, 0, :]
+    cx = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                    w.astype(jnp.float32)) + params["conv"]["b"]
+    cx = jax.nn.silu(cx).astype(x.dtype)
+    cxh = cx.reshape(B, NH, hd)
+    xih = x_in.reshape(B, NH, hd)
+    q = jnp.einsum("bhd,hde->bhe", cxh, params["wq"]).astype(jnp.float32) / math.sqrt(hd)
+    k = jnp.einsum("bhd,hde->bhe", cxh, params["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bhd,hde->bhe", xih, params["wv"]).astype(jnp.float32)
+    ifg = layers.dense(params["wif"], cx)
+    i_pre, f_pre = jnp.split(ifg.astype(jnp.float32), 2, axis=-1)  # (B, NH)
+    st = cache.state
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + st.m, i_pre)
+    fw = jnp.exp(logf + st.m - m_new)
+    iw = jnp.exp(i_pre - m_new)
+    C = fw[:, :, None, None] * st.C + iw[:, :, None, None] * (
+        k[:, :, :, None] * v[:, :, None, :])
+    n = fw[:, :, None] * st.n + iw[:, :, None] * k
+    den = jnp.einsum("bhk,bhk->bh", q, n)
+    num = jnp.einsum("bhk,bhkv->bhv", q, C)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    h = h.reshape(B, dims.d_inner).astype(x.dtype)
+    h = layers.rmsnorm(params["norm"], h) * jax.nn.silu(z)
+    out = layers.dense(params["down_proj"], h)[:, None, :]
+    return out, MLSTMCache(MLSTMState(C, n, m_new), window[:, 1:, :])
+
+
+# =================================================================== sLSTM
+
+class SLSTMDims(NamedTuple):
+    d_model: int
+    n_heads: int
+    head_dim: int
+
+
+def slstm_dims(d_model: int, n_heads: int) -> SLSTMDims:
+    assert d_model % n_heads == 0
+    return SLSTMDims(d_model, n_heads, d_model // n_heads)
+
+
+def slstm_init(key, dims: SLSTMDims, *, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    d, NH, hd = dims.d_model, dims.n_heads, dims.head_dim
+    return {
+        # z, i, f, o pre-activations from input
+        "w_in": layers.dense_init(ks[0], d, 4 * d, bias=True, dtype=dtype),
+        # block-diagonal recurrent matrices, per head: (NH, hd, 4*hd)
+        "r": layers.normal_init(ks[1], (NH, hd, 4 * hd), 1.0 / math.sqrt(hd), dtype),
+        "norm": layers.rmsnorm_init(ks[2], d, dtype),
+        "ff": {
+            "up": layers.dense_init(ks[3], d, 2 * d, bias=False, dtype=dtype),
+            "down": layers.dense_init(jax.random.fold_in(ks[3], 1), d, d,
+                                      bias=False, dtype=dtype),
+        },
+    }
+
+
+class SLSTMState(NamedTuple):
+    h: jax.Array  # (B, NH, hd)
+    c: jax.Array  # (B, NH, hd)
+    n: jax.Array  # (B, NH, hd)
+    m: jax.Array  # (B, NH, hd)
+
+
+def init_slstm_state(batch: int, dims: SLSTMDims) -> SLSTMState:
+    z = jnp.zeros((batch, dims.n_heads, dims.head_dim), jnp.float32)
+    return SLSTMState(z, z, z, jnp.full_like(z, -1e30))
+
+
+def _slstm_cell(params, x_pre_t: jax.Array, st: SLSTMState, dims: SLSTMDims):
+    """x_pre_t: (B, 4*D) input preactivations; returns (h_out (B,D), state)."""
+    B = x_pre_t.shape[0]
+    NH, hd = dims.n_heads, dims.head_dim
+    rec = jnp.einsum("bhd,hdk->bhk", st.h.astype(params["r"].dtype), params["r"])
+    pre = x_pre_t.reshape(B, NH, 4 * hd).astype(jnp.float32) + rec.astype(jnp.float32)
+    zp, ip, fp, op = jnp.split(pre, 4, axis=-1)  # (B, NH, hd) each
+    zt = jnp.tanh(zp)
+    ot = jax.nn.sigmoid(op)
+    logf = jax.nn.log_sigmoid(fp)
+    m_new = jnp.maximum(logf + st.m, ip)
+    fw = jnp.exp(logf + st.m - m_new)
+    iw = jnp.exp(ip - m_new)
+    c = fw * st.c + iw * zt
+    n = fw * st.n + iw
+    h = ot * c / jnp.maximum(n, 1e-6)
+    return h.reshape(B, dims.d_model), SLSTMState(h, c, n, m_new)
+
+
+def slstm_forward(params, x: jax.Array, dims: SLSTMDims,
+                  state: Optional[SLSTMState] = None,
+                  return_state: bool = False):
+    """Sequential sLSTM block: lax.scan over time. x: (B, L, D)."""
+    B, L, D = x.shape
+    x_pre = layers.dense(params["w_in"], x)  # (B, L, 4D)
+    st = state if state is not None else init_slstm_state(B, dims)
+
+    def step(carry, xp):
+        h, new = _slstm_cell(params, xp, carry, dims)
+        return new, h
+
+    with jax.named_scope("slstm_core"):
+        st, hs = jax.lax.scan(step, st, x_pre.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)  # (B, L, D)
+    h = layers.rmsnorm(params["norm"], h)
+    # small gated FF (paper: post-sLSTM up/down projection)
+    g, u = jnp.split(layers.dense(params["ff"]["up"], h), 2, axis=-1)
+    out = layers.dense(params["ff"]["down"], jax.nn.gelu(g) * u)
+    if return_state:
+        return out, st
+    return out
+
+
+def slstm_decode_step(params, x: jax.Array, state: SLSTMState, dims: SLSTMDims):
+    """One-token decode. x: (B, 1, D)."""
+    x_pre = layers.dense(params["w_in"], x[:, 0, :])
+    h, st = _slstm_cell(params, x_pre, state, dims)
+    h = layers.rmsnorm(params["norm"], h.astype(x.dtype))
+    g, u = jnp.split(layers.dense(params["ff"]["up"], h), 2, axis=-1)
+    out = layers.dense(params["ff"]["down"], jax.nn.gelu(g) * u)[:, None, :]
+    return out, st

@@ -1,0 +1,3 @@
+from repro.sim.devices import DeviceFleet, build_fleet, DEVICE_CATALOG  # noqa: F401
+from repro.sim.wireless import sample_rates  # noqa: F401
+from repro.sim.energy import round_costs, RoundCosts  # noqa: F401

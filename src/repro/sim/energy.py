@@ -1,0 +1,37 @@
+"""Per-round latency / energy model (paper Sec. III-A estimation rules).
+
+Given H(i,r), a device's round cost splits into local computing and uplink
+communication (footnote 3: DVFS non-linearity neglected, as in the paper):
+
+  t(i,r)    = H·t_iter + bits/s(i,r)
+  e_cp(i,r) = H·t_iter·p_compute
+  e_tx(i,r) = p_tx·bits/s(i,r)
+  e(i,r)    = e_cp + e_tx
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sim.devices import DeviceFleet
+
+
+class RoundCosts(NamedTuple):
+    t_total: jax.Array   # (S,) s
+    t_comp: jax.Array
+    t_comm: jax.Array
+    e_total: jax.Array   # (S,) J
+    e_comp: jax.Array
+    e_comm: jax.Array
+
+
+def round_costs(fleet: DeviceFleet, H: jax.Array, rates: jax.Array,
+                model_bits: float) -> RoundCosts:
+    t_comp = H.astype(jnp.float32) * fleet.t_iter
+    t_comm = model_bits / jnp.maximum(rates, 1.0)
+    e_comp = t_comp * fleet.p_compute
+    e_comm = t_comm * fleet.p_tx
+    return RoundCosts(t_comp + t_comm, t_comp, t_comm,
+                      e_comp + e_comm, e_comp, e_comm)

@@ -1,0 +1,16 @@
+"""Wireless uplink model: per-round stochastic rates around each device's
+environment mean (lognormal fading), as in the paper's hybrid Wi-Fi 5 / 5G
+setup with high/low-rate environments."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sim.devices import DeviceFleet
+
+
+def sample_rates(key: jax.Array, fleet: DeviceFleet) -> jax.Array:
+    """(S,) bps for this round: rate_mean * lognormal(sigma)."""
+    eps = jax.random.normal(key, fleet.rate_mean.shape)
+    fading = jnp.exp(fleet.rate_sigma * eps - 0.5 * fleet.rate_sigma ** 2)
+    return fleet.rate_mean * fading

@@ -1,0 +1,2 @@
+from repro.training.optim import sgd, momentum, adam, Optimizer  # noqa: F401
+from repro.training.train import make_train_step  # noqa: F401

@@ -1,0 +1,64 @@
+"""Flat-npz checkpointing for arbitrary param/opt pytrees (no orbax here).
+
+Trees are flattened with '/'-joined key paths; dtypes/shapes round-trip
+exactly. bf16 is stored via uint16 bit-view (npz has no bfloat16).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BF16_SUFFIX = "::bf16"
+
+
+def _path_str(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+        else:
+            out.append(str(k))
+    return "/".join(out)
+
+
+def save(path: str, tree: Any) -> None:
+    flat: Dict[str, np.ndarray] = {}
+
+    def record(p, leaf):
+        key = _path_str(p)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            flat[key + _BF16_SUFFIX] = arr.view(np.uint16)
+        else:
+            flat[key] = arr
+
+    jax.tree_util.tree_map_with_path(record, tree)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+
+
+def load(path: str, like: Any) -> Any:
+    with np.load(path) as data:
+        stored = dict(data)
+
+    def restore(p, leaf):
+        key = _path_str(p)
+        if key + _BF16_SUFFIX in stored:
+            arr = stored[key + _BF16_SUFFIX].view(jnp.bfloat16)
+        else:
+            arr = stored[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        return jnp.asarray(arr, dtype=leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(restore, like)

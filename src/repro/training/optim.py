@@ -1,0 +1,99 @@
+"""Optimizers from scratch (no optax in this container).
+
+State-dtype policy (DESIGN.md §5): Adam keeps fp32 (m, v) — used for ≤7B
+configs; ``momentum`` keeps a single bf16 buffer — used for the ≥27B
+configs where fp32 Adam state would not fit 512 × 16 GB alongside params
+(kimi-k2 1T: 8 bytes/param of Adam state = 15.6 GB/chip on its own).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple]  # (p, g, s, step) -> (p', s')
+
+
+def _tree_map(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(params, grads, state, step):
+        del step
+        new = _tree_map(lambda p, g: (p - lr * g.astype(p.dtype)).astype(p.dtype),
+                        params, grads)
+        return new, state
+
+    return Optimizer("sgd", init, update)
+
+
+def momentum(lr: float, beta: float = 0.9, state_dtype=jnp.bfloat16) -> Optimizer:
+    def init(params):
+        return _tree_map(lambda p: jnp.zeros(p.shape, state_dtype), params)
+
+    def update(params, grads, state, step):
+        del step
+        new_m = _tree_map(
+            lambda m, g: (beta * m.astype(jnp.float32)
+                          + g.astype(jnp.float32)).astype(state_dtype),
+            state, grads)
+        new_p = _tree_map(
+            lambda p, m: (p.astype(jnp.float32)
+                          - lr * m.astype(jnp.float32)).astype(p.dtype),
+            params, new_m)
+        return new_p, new_m
+
+    return Optimizer("momentum", init, update)
+
+
+class AdamState(NamedTuple):
+    m: Any
+    v: Any
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        # m and v must be DISTINCT buffers — aliased zeros break donation
+        # (XLA rejects donating the same buffer twice)
+        return AdamState(
+            _tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            _tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def update(params, grads, state, step):
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+        new_m = _tree_map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.m, grads)
+        new_v = _tree_map(lambda v, g: b2 * v + (1 - b2) * jnp.square(
+            g.astype(jnp.float32)), state.v, grads)
+        new_p = _tree_map(
+            lambda p, m, v: (p.astype(jnp.float32)
+                             - lr * (m / c1) / (jnp.sqrt(v / c2) + eps)
+                             ).astype(p.dtype),
+            params, new_m, new_v)
+        return new_p, AdamState(new_m, new_v)
+
+    return Optimizer("adam", init, update)
+
+
+def for_config(optimizer_name: str, lr: float = 1e-3) -> Optimizer:
+    if optimizer_name == "adam":
+        return adam(lr)
+    if optimizer_name == "momentum":
+        return momentum(lr)
+    if optimizer_name == "sgd":
+        return sgd(lr)
+    raise ValueError(optimizer_name)

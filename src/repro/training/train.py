@@ -1,0 +1,69 @@
+"""Train/serve step factories for the assigned architectures.
+
+These are what the dry-run lowers: ``train_step`` (loss + grad + optimizer
+update), ``prefill_step`` and ``serve_step`` (one decoded token against a
+KV/recurrent cache of seq_len).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchCfg
+from repro.models.api import ModelAPI, get_model_api
+from repro.nn.sharding import ShardCfg, constrain_params
+from repro.training.optim import Optimizer, for_config
+
+
+def make_train_step(cfg: ArchCfg, sc: ShardCfg, optimizer: Optimizer):
+    api = get_model_api(cfg)
+
+    def train_step(params, opt_state, step, batch):
+        params = constrain_params(sc, params)
+        (loss, metrics), grads = jax.value_and_grad(
+            api.loss_fn, has_aux=True)(params, batch, cfg, sc)
+        grads = constrain_params(sc, grads)
+        new_params, new_opt = optimizer.update(params, grads, opt_state, step)
+        return new_params, new_opt, step + 1, loss, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ArchCfg, sc: ShardCfg, *, greedy: bool = True,
+                    force_local: bool = False):
+    """One-token greedy decode step. ``force_local`` switches dense
+    windowed archs (gemma2) to the all-local long-context variant."""
+    api = get_model_api(cfg)
+    kwargs = {}
+    if force_local and cfg.family in ("dense", "vlm"):
+        kwargs["force_local"] = True
+
+    def serve_step(params, state, batch):
+        params = constrain_params(sc, params)
+        logits, new_state = api.decode_step(params, batch, state, cfg, sc,
+                                            **kwargs)
+        token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return token, new_state
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ArchCfg, sc: ShardCfg):
+    api = get_model_api(cfg)
+
+    def prefill_step(params, batch):
+        params = constrain_params(sc, params)
+        logits, state = api.prefill(params, batch, cfg, sc)
+        token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return token, state
+
+    return prefill_step
+
+
+def init_train_state(key, cfg: ArchCfg, sc: ShardCfg, optimizer: Optimizer):
+    api = get_model_api(cfg)
+    params = api.init_params(key, cfg, sc)
+    opt_state = optimizer.init(params)
+    return params, opt_state, jnp.zeros((), jnp.int32)

@@ -1,0 +1,58 @@
+"""Checkpoint round-trip + optimizer unit tests."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training import checkpoint
+from repro.training.optim import adam, momentum, sgd
+
+
+def _tree():
+    return {
+        "a": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+        "b": jnp.ones((4,), jnp.bfloat16) * 1.5,
+        "c": jnp.asarray(3, jnp.int32),
+    }
+
+
+def test_checkpoint_roundtrip_bf16():
+    t = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "ck.npz")
+        checkpoint.save(p, t)
+        back = checkpoint.load(p, t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def _quadratic_steps(opt, n=200):
+    params = {"x": jnp.asarray(5.0)}
+    state = opt.init(params)
+    step = jnp.zeros((), jnp.int32)
+    for i in range(n):
+        grads = {"x": 2.0 * params["x"]}  # d/dx x²
+        params, state = opt.update(params, grads, state, step + i)
+    return float(params["x"])
+
+
+def test_sgd_converges_on_quadratic():
+    assert abs(_quadratic_steps(sgd(0.1))) < 1e-3
+
+
+def test_momentum_converges_on_quadratic():
+    assert abs(_quadratic_steps(momentum(0.05, state_dtype=jnp.float32))) < 1e-2
+
+
+def test_adam_converges_on_quadratic():
+    assert abs(_quadratic_steps(adam(0.3))) < 1e-2
+
+
+def test_momentum_state_dtype_is_bf16():
+    opt = momentum(0.1)
+    st = opt.init({"w": jnp.zeros((3,), jnp.bfloat16)})
+    assert jax.tree.leaves(st)[0].dtype == jnp.bfloat16

@@ -1,0 +1,88 @@
+"""Config registry sanity: exact assigned specs + analytic param counts
+verified against real init shapes on reduced variants."""
+import jax
+import pytest
+
+from repro.configs import (ARCH_REGISTRY, get_config, input_specs,
+                           list_archs, param_count, model_flops)
+from repro.configs.base import INPUT_SHAPES
+from repro.models import get_model_api
+from repro.nn.sharding import UNSHARDED
+
+EXPECT = {
+    # arch: (L, d_model, H, kv, d_ff, vocab)
+    "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+    "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+    "gemma2-27b": (46, 4608, 32, 16, 36864, 256000),
+    "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+    "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+    "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256),
+    "whisper-base": (6, 512, 8, 8, 2048, 51865),
+    "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+    "deepseek-7b": (30, 4096, 32, 32, 11008, 102400),
+    "granite-34b": (88, 6144, 48, 1, 24576, 49152),
+}
+
+
+def test_all_ten_archs_registered():
+    assert set(EXPECT) <= set(list_archs())
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECT))
+def test_exact_assigned_spec(arch):
+    cfg = get_config(arch)
+    L, d, h, kv, ff, v = EXPECT[arch]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv,
+            cfg.d_ff, cfg.vocab) == (L, d, h, kv, ff, v)
+
+
+def test_moe_specs():
+    assert get_config("olmoe-1b-7b").moe.n_experts == 64
+    assert get_config("olmoe-1b-7b").moe.top_k == 8
+    k2 = get_config("kimi-k2-1t-a32b").moe
+    assert (k2.n_experts, k2.top_k) == (384, 8)
+    assert get_config("zamba2-7b").ssm_state == 64
+
+
+def test_param_count_magnitudes():
+    """Analytic counts land in the advertised class."""
+    assert 6e9 < param_count(get_config("olmoe-1b-7b")) < 8e9
+    assert 0.9e9 < param_count(get_config("xlstm-1.3b")) < 2.2e9
+    assert 2.4e10 < param_count(get_config("gemma2-27b")) < 3.2e10
+    assert 0.8e12 < param_count(get_config("kimi-k2-1t-a32b")) < 1.3e12
+    assert 2.5e9 < param_count(get_config("llama3.2-3b")) < 4e9
+    assert 6e9 < param_count(get_config("deepseek-7b")) < 8e9
+    # granite's assigned dims with llama-style swiglu (3·D·F) land at 47B
+    # (the real 34B model uses a non-GLU MLP; the assignment says llama-arch)
+    assert 2.8e10 < param_count(get_config("granite-34b")) < 5e10
+    assert 6e9 < param_count(get_config("zamba2-7b")) < 9e9
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECT))
+def test_param_count_matches_init_on_reduced(arch):
+    """The analytic formula agrees with the real init (reduced variant)."""
+    cfg = get_config(arch, reduced=True)
+    api = get_model_api(cfg)
+    shapes = jax.eval_shape(
+        lambda k: api.init_params(k, cfg, UNSHARDED), jax.random.PRNGKey(0))
+    real = sum(int(x.size) for x in jax.tree.leaves(shapes))
+    analytic = param_count(cfg)
+    assert abs(real - analytic) / real < 0.05, (real, analytic)
+
+
+@pytest.mark.parametrize("shape", sorted(INPUT_SHAPES))
+def test_input_specs_shapes(shape):
+    cfg = get_config("llama3.2-3b")
+    specs = input_specs(cfg, shape)
+    S, B, kind = INPUT_SHAPES[shape]
+    if kind == "decode":
+        assert specs["tokens"].shape == (B, 1)
+    else:
+        assert specs["tokens"].shape == (B, S)
+
+
+def test_model_flops_scaling():
+    cfg = get_config("llama3.2-3b")
+    assert model_flops(cfg, "train_4k") > model_flops(cfg, "prefill_32k")
+    # decode flops ~ 2·N·B
+    assert model_flops(cfg, "decode_32k") < model_flops(cfg, "prefill_32k")

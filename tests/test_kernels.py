@@ -1,0 +1,137 @@
+"""Per-kernel validation: pallas(interpret=True) vs ref.py pure-jnp oracle,
+swept over shapes and dtypes (the brief's required kernel test pattern)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.fedavg import fedavg as fa_k, ops as fa_ops, ref as fa_ref
+from repro.kernels.flash_attention import flash_attention as fl_k, ref as fl_ref
+from repro.kernels.stat_util import ops as su_ops, ref as su_ref, stat_util as su_k
+
+
+# ------------------------------------------------------------- fedavg ----
+
+@pytest.mark.parametrize("K,P", [(2, 256), (8, 2048), (20, 4096), (5, 6144)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fedavg_kernel_matches_ref(K, P, dtype):
+    key = jax.random.PRNGKey(K * 31 + P)
+    x = jax.random.normal(key, (K, P), jnp.float32).astype(dtype)
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (K,), jnp.float32)
+    got = fa_k.weighted_aggregate_flat(x, w, interpret=True,
+                                       block_p=min(2048, P))
+    want = fa_ref.weighted_aggregate(x, w)
+    atol = 1e-5 if dtype == jnp.float32 else 0.05
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+def test_fedavg_op_arbitrary_shapes():
+    key = jax.random.PRNGKey(0)
+    stack = jax.random.normal(key, (4, 3, 7, 5))
+    w = jnp.array([0.1, 0.2, 0.3, 0.4])
+    got = fa_ops.weighted_aggregate(stack, w)
+    want = fa_ref.weighted_aggregate(stack, w)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+    assert got.shape == (3, 7, 5)
+
+
+# ---------------------------------------------------- flash attention ----
+
+SHAPES = [
+    # B, Sq, Sk, H, kv, hd, causal, window, softcap
+    (2, 128, 128, 4, 2, 64, True, None, None),
+    (1, 256, 256, 4, 4, 32, True, 64, None),
+    (2, 128, 256, 8, 2, 64, False, None, None),
+    (1, 128, 128, 2, 1, 128, True, None, 50.0),   # MQA + gemma softcap
+    (1, 512, 512, 2, 2, 64, True, 128, 30.0),
+]
+
+
+@pytest.mark.parametrize("B,Sq,Sk,H,kv,hd,causal,window,softcap", SHAPES)
+def test_flash_attention_matches_ref(B, Sq, Sk, H, kv, hd, causal, window,
+                                     softcap):
+    key = jax.random.PRNGKey(Sq + Sk)
+    q = jax.random.normal(key, (B, Sq, H, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, Sk, kv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, Sk, kv, hd))
+    got = fl_k.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, interpret=True)
+    want = fl_ref.attention(q, k, v, causal=causal, window=window,
+                            logit_softcap=softcap)
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-5),
+                                        (jnp.bfloat16, 0.03)])
+def test_flash_attention_dtypes(dtype, atol):
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 128, 4, 64), jnp.float32).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 128, 2, 64),
+                          jnp.float32).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 128, 2, 64),
+                          jnp.float32).astype(dtype)
+    got = fl_k.flash_attention(q, k, v, interpret=True)
+    want = fl_ref.attention(q.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), atol=atol)
+
+
+def test_flash_attention_block_shape_invariance():
+    key = jax.random.PRNGKey(4)
+    q = jax.random.normal(key, (1, 256, 2, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 256, 2, 32))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 256, 2, 32))
+    o1 = fl_k.flash_attention(q, k, v, bq=64, bk=64, interpret=True)
+    o2 = fl_k.flash_attention(q, k, v, bq=128, bk=256, interpret=True)
+    np.testing.assert_allclose(o1, o2, atol=2e-5)
+
+
+# ----------------------------------------------------------- stat util ----
+
+@pytest.mark.parametrize("S,n", [(16, 8), (128, 32), (100, 17), (256, 64)])
+def test_stat_utility_kernel_matches_ref(S, n):
+    key = jax.random.PRNGKey(S)
+    losses = jax.random.uniform(key, (S, n)) * 5.0
+    sizes = jnp.arange(S, dtype=jnp.float32) + 1
+    got = su_ops.stat_utility(losses, sizes, interpret=True)
+    want = su_ref.stat_utility(losses, sizes)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+# ---------------------------------------------------------------- slstm ----
+
+@pytest.mark.parametrize("B,T,NH,hd", [(1, 8, 2, 8), (2, 16, 4, 16),
+                                       (3, 12, 1, 32)])
+def test_slstm_kernel_matches_ref(B, T, NH, hd):
+    from repro.kernels.slstm import ref as sl_ref, slstm as sl_k
+    key = jax.random.PRNGKey(B * T)
+    xp = jax.random.normal(key, (B, T, NH * 4 * hd)) * 0.5
+    r = jax.random.normal(jax.random.fold_in(key, 1), (NH, hd, 4 * hd)) * 0.2
+    got = sl_k.slstm_scan(xp, r, nh=NH, interpret=True)
+    want = sl_ref.slstm_scan(xp.reshape(B, T, NH, 4 * hd), r)
+    np.testing.assert_allclose(got, want.reshape(B, T, NH * hd), atol=2e-5)
+
+
+def test_slstm_kernel_matches_model_cell():
+    """Kernel recurrence ≡ the model's sLSTM cell (zero-init states)."""
+    from repro.kernels.slstm import ops as sl_ops
+    from repro.nn import xlstm
+    key = jax.random.PRNGKey(7)
+    NH, hd = 2, 8
+    d = NH * hd
+    sd = xlstm.slstm_dims(d, NH)
+    B, T = 2, 10
+    xp = jax.random.normal(key, (B, T, 4 * d)) * 0.5
+    got = sl_ops.slstm_scan(xp, jnp.zeros((NH, hd, 4 * hd)), nh=NH,
+                            interpret=True)
+    # with R = 0 each step is the cell applied to x_pre alone
+    st = xlstm.init_slstm_state(B, sd)
+    params = {"r": jnp.zeros((NH, hd, 4 * hd))}
+    outs = []
+    for t in range(T):
+        h, st = xlstm._slstm_cell(params, xp[:, t], st, sd)
+        outs.append(h)
+    want = jnp.stack(outs, 1)
+    np.testing.assert_allclose(got, want, atol=2e-5)

@@ -1,0 +1,53 @@
+"""Unit tests for the REWA local computing policy (Eqns 3–4)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import policy as P
+
+
+CFG = P.PolicyCfg(H0=5, H_max=30, dH=2.0, psi0=1.0, s_ref=20e6, eps_th=1.0)
+
+
+def test_psi_decreasing_in_rate():
+    rates = jnp.array([0.64e6, 12e6, 45e6, 79.6e6])
+    out = np.asarray(P.psi(rates, CFG))
+    assert (np.diff(out) < 0).all()
+    assert (out >= 0).all()
+
+
+def test_h_rewa_growth_wireless_aware():
+    """Eqn (3): slower uplink → larger H increment."""
+    H = jnp.array([5, 5], jnp.int32)
+    rates = jnp.array([0.64e6, 79.6e6])
+    eps = jnp.array([10.0, 10.0])  # above threshold: keep growing
+    out = np.asarray(P.h_rewa(H, rates, eps, CFG))
+    assert out[0] > out[1] >= 5
+
+
+def test_h_rewa_stopping_criterion():
+    """Eqn (4): ε below threshold freezes H."""
+    H = jnp.array([7], jnp.int32)
+    rates = jnp.array([1e6])
+    frozen = np.asarray(P.h_rewa(H, rates, jnp.array([0.1]), CFG))
+    grown = np.asarray(P.h_rewa(H, rates, jnp.array([5.0]), CFG))
+    assert frozen[0] == 7 and grown[0] > 7
+
+
+def test_h_rewa_clipped_at_hmax():
+    H = jnp.array([30], jnp.int32)
+    out = P.h_rewa(H, jnp.array([1e5]), jnp.array([100.0]), CFG)
+    assert int(out[0]) == 30
+
+
+def test_stopping_eps_formula():
+    eps = P.stopping_eps(jnp.array([2.0]), jnp.array([1.0]),
+                         jnp.array([120.0]), jnp.array([20.0]),
+                         jnp.array([50.0]))
+    np.testing.assert_allclose(float(eps[0]), 1.0 * 100.0 / 50.0, rtol=1e-6)
+
+
+def test_adah_selection_independent_growth():
+    h0 = P.h_adah(jnp.asarray(0), 4, CFG)
+    h9 = P.h_adah(jnp.asarray(9), 4, CFG)
+    assert (np.asarray(h9) > np.asarray(h0)).all()
+    assert np.unique(np.asarray(h9)).size == 1  # same for every device

@@ -1,0 +1,98 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import policy as P
+from repro.core import selection as S
+from repro.core import utility as U
+from repro.data.partition import partition_non_iid
+from repro.kernels.fedavg import ref as fedavg_ref
+
+FLOATS = st.floats(min_value=0.01, max_value=1e6, allow_nan=False,
+                   allow_infinity=False)
+
+
+@settings(max_examples=40, deadline=None)
+@given(res=FLOATS, e0=FLOATS, e=FLOATS, beta=st.floats(0.1, 4.0))
+def test_energy_utility_zero_iff_infeasible(res, e0, e, beta):
+    """Invariant (Eqn 2): utility is 0 exactly when e ≥ E − E0."""
+    out = float(U.energy_utility(jnp.array([res]), jnp.array([e0]),
+                                 jnp.array([e]), beta)[0])
+    if e < res - e0:
+        assert out > 0
+    else:
+        assert out == 0.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(t=FLOATS, T=FLOATS, alpha=st.floats(0.1, 4.0))
+def test_latency_utility_bounded_by_one(t, T, alpha):
+    out = float(U.latency_utility(jnp.array([t]), T, alpha)[0])
+    assert 0.0 < out <= 1.0 + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 12), st.integers(13, 40), st.data())
+def test_top_k_cardinality_and_availability(k, n, data):
+    avail_list = data.draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    utils = jnp.arange(float(n))
+    avail = jnp.array(avail_list)
+    mask = np.asarray(S.top_k_select(utils, k, avail))
+    assert mask.sum() == min(k, int(avail.sum()))
+    assert not (mask & ~np.asarray(avail)).any()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 25), st.floats(0.0, 50.0),
+       st.floats(0.1e6, 100e6))
+def test_h_monotone_nondecreasing_under_rewa(H0, eps, rate):
+    """REWA never shrinks H (Eqn 3 growth ∨ Eqn 4 freeze)."""
+    cfg = P.PolicyCfg(H_max=30, eps_th=1.0)
+    H = jnp.array([H0], jnp.int32)
+    out = int(P.h_rewa(H, jnp.array([rate]), jnp.array([eps]), cfg)[0])
+    assert out >= min(H0, 30) or out == 30
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 6), st.integers(4, 64))
+def test_fedavg_convex_combination_bounds(k, p):
+    """Aggregate of a convex combination stays within elementwise bounds."""
+    rng = np.random.RandomState(k * 97 + p)
+    stack = jnp.asarray(rng.randn(k, p).astype(np.float32))
+    w = rng.rand(k).astype(np.float32)
+    w = jnp.asarray(w / w.sum())
+    agg = np.asarray(fedavg_ref.weighted_aggregate(stack, w))
+    lo, hi = np.asarray(stack).min(0), np.asarray(stack).max(0)
+    assert (agg >= lo - 1e-5).all() and (agg <= hi + 1e-5).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([0.0, 0.5, 0.8, 1.0]), st.integers(2, 6))
+def test_partition_lambda_label_skew(lam, n_clients):
+    """λ controls the dominant-label fraction of each client."""
+    rng = np.random.RandomState(0)
+    y = rng.randint(0, 10, 4000)
+    idx = partition_non_iid(y, n_clients, lam, per_client=200, n_classes=10,
+                            seed=1)
+    for i in range(n_clients):
+        labels = y[idx[i]]
+        top_frac = np.bincount(labels, minlength=10).max() / 200.0
+        if lam >= 0.8:
+            assert top_frac >= lam - 0.1
+        if lam == 1.0:
+            assert np.unique(labels).size == 1
+        if lam == 0.0:
+            assert top_frac < 0.5
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.1e6, 200e6), st.floats(0.1e6, 200e6))
+def test_psi_monotone(r1, r2):
+    cfg = P.PolicyCfg()
+    p1 = float(P.psi(jnp.array([r1]), cfg)[0])
+    p2 = float(P.psi(jnp.array([r2]), cfg)[0])
+    if r1 < r2:
+        assert p1 >= p2
+    assert p1 >= 0 and p2 >= 0

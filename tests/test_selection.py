@@ -1,0 +1,44 @@
+"""Unit tests for participant selection mechanisms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import selection as S
+
+
+def test_top_k_selects_highest_available():
+    utils = jnp.array([5.0, 4.0, 3.0, 2.0, 1.0])
+    avail = jnp.array([True, False, True, True, True])
+    mask = np.asarray(S.top_k_select(utils, 2, avail))
+    assert mask.tolist() == [True, False, True, False, False]
+
+
+def test_top_k_never_selects_unavailable():
+    utils = jnp.arange(10.0)
+    avail = jnp.zeros(10, bool).at[3].set(True)
+    mask = np.asarray(S.top_k_select(utils, 5, avail))
+    assert mask.sum() == 1 and mask[3]
+
+
+def test_random_select_respects_k_and_availability():
+    key = jax.random.PRNGKey(0)
+    avail = jnp.ones(50, bool).at[:10].set(False)
+    mask = np.asarray(S.random_select(key, 8, avail))
+    assert mask.sum() == 8 and not mask[:10].any()
+
+
+def test_epsilon_greedy_mixes_exploit_and_explore():
+    key = jax.random.PRNGKey(1)
+    utils = jnp.arange(100.0)
+    avail = jnp.ones(100, bool)
+    mask = np.asarray(S.epsilon_greedy(key, utils, 20, avail, eps=0.1))
+    assert mask.sum() == 20
+    # top (1-eps)K=18 by utility must be present
+    assert mask[-18:].all()
+
+
+def test_temporal_uncertainty_boosts_neglected():
+    stat = jnp.array([1.0, 1.0])
+    out = np.asarray(S.temporal_uncertainty(
+        stat, jnp.asarray(100), jnp.array([99, 10])))
+    assert out[1] > out[0] >= 1.0

@@ -1,0 +1,69 @@
+"""Device/wireless/energy simulator + data pipeline tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import (make_char_dataset, make_har_dataset,
+                                  make_image_dataset, CHAR_VOCAB)
+from repro.sim.devices import DEVICE_CATALOG, build_fleet
+from repro.sim.energy import round_costs
+from repro.sim.wireless import sample_rates
+
+
+def test_fleet_composition():
+    f = build_fleet(100, seed=0)
+    assert f.n == 100
+    counts = np.bincount(np.asarray(f.type_id))
+    assert (counts == 20).all()  # 20 of each of the 5 paper device types
+    assert (np.asarray(f.init_energy) <= np.asarray(f.battery_j) + 1e-3).all()
+    assert (np.asarray(f.init_energy) > 0).all()
+    assert (np.asarray(f.e0_reserve) < np.asarray(f.battery_j)).all()
+
+
+def test_rates_positive_and_centered():
+    f = build_fleet(100, seed=1)
+    keys = jax.random.split(jax.random.PRNGKey(0), 64)
+    rates = np.stack([np.asarray(sample_rates(k, f)) for k in keys])
+    assert (rates > 0).all()
+    # lognormal with -σ²/2 shift → mean ≈ rate_mean
+    ratio = rates.mean(0) / np.asarray(f.rate_mean)
+    assert abs(np.median(ratio) - 1.0) < 0.15
+
+
+def test_round_costs_structure():
+    f = build_fleet(10, seed=2)
+    H = jnp.full((10,), 5, jnp.int32)
+    rates = f.rate_mean
+    c = round_costs(f, H, rates, model_bits=16e6)
+    assert (np.asarray(c.t_total) ==
+            np.asarray(c.t_comp) + np.asarray(c.t_comm)).all()
+    np.testing.assert_allclose(np.asarray(c.e_comp),
+                               np.asarray(c.t_comp) * np.asarray(f.p_compute),
+                               rtol=1e-6)
+    # faster device types compute faster
+    t_by_type = {}
+    for t in range(5):
+        sel = np.asarray(f.type_id) == t
+        t_by_type[t] = np.asarray(c.t_comp)[sel].mean()
+    assert t_by_type[4] < t_by_type[2]  # macbook ≪ honor play 6t
+
+
+def test_image_datasets_learnable_structure():
+    x, y = make_image_dataset("mnist", 512, seed=0)
+    assert x.shape == (512, 28, 28, 1) and y.shape == (512,)
+    # class-conditional structure: same-class mean distance < cross-class
+    c0 = x[y == 0].mean(0)
+    c1 = x[y == 1].mean(0)
+    assert np.linalg.norm(c0 - c1) > 0.1
+
+
+def test_har_dataset_shapes():
+    x, y = make_har_dataset(128, seed=0)
+    assert x.shape == (128, 128, 9)
+    assert set(np.unique(y)) <= set(range(6))
+
+
+def test_char_dataset_vocab_and_shapes():
+    seqs, roles = make_char_dataset(6, seq_len=40, per_role=8, seed=0)
+    assert seqs.shape == (6, 8, 40)
+    assert seqs.min() >= 0 and seqs.max() < CHAR_VOCAB

@@ -1,0 +1,68 @@
+"""Unit tests for the PS utility functions (Eqns 1–2)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import utility as U
+
+
+def test_statistical_utility_matches_paper_formula():
+    sizes = jnp.array([10.0, 100.0])
+    msq = jnp.array([4.0, 0.25])
+    out = np.asarray(U.statistical_utility(sizes, msq))
+    np.testing.assert_allclose(out, [20.0, 50.0], rtol=1e-6)
+
+
+def test_latency_utility_penalises_only_slow_devices():
+    t = jnp.array([10.0, 60.0, 120.0])
+    out = np.asarray(U.latency_utility(t, T_round=60.0, alpha=1.0))
+    assert out[0] == 1.0          # faster than T: no penalty
+    assert out[1] == 1.0          # equal: no penalty (strict t > T)
+    np.testing.assert_allclose(out[2], 0.5, rtol=1e-6)
+
+
+def test_latency_utility_alpha_sharpens_penalty():
+    t = jnp.array([120.0])
+    mild = float(U.latency_utility(t, T_round=60.0, alpha=1.0)[0])
+    sharp = float(U.latency_utility(t, T_round=60.0, alpha=2.0)[0])
+    assert sharp < mild
+
+
+def test_energy_utility_hard_zero_when_infeasible():
+    """Eqn (2): U(x)=∞ branch → utility exactly 0 when e ≥ E−E0."""
+    residual = jnp.array([100.0, 100.0, 100.0])
+    e0 = jnp.array([20.0, 20.0, 20.0])
+    e = jnp.array([10.0, 80.0, 200.0])
+    out = np.asarray(U.energy_utility(residual, e0, e, beta=1.0))
+    assert out[0] == pytest.approx(8.0)   # (100-20)/10
+    assert out[1] == 0.0                  # e == E-E0 → infeasible (strict <)
+    assert out[2] == 0.0
+
+
+def test_energy_utility_prefers_more_residual_less_consumption():
+    hi_res = float(U.energy_utility(jnp.array([200.0]), jnp.array([20.0]),
+                                    jnp.array([10.0]), 1.0)[0])
+    lo_res = float(U.energy_utility(jnp.array([100.0]), jnp.array([20.0]),
+                                    jnp.array([10.0]), 1.0)[0])
+    hi_cons = float(U.energy_utility(jnp.array([200.0]), jnp.array([20.0]),
+                                     jnp.array([20.0]), 1.0)[0])
+    assert hi_res > lo_res and hi_res > hi_cons
+
+
+def test_rewafl_reduces_to_oort_when_energy_rich():
+    """With infinite battery the energy term → ~(huge)^β; relative ORDER of
+    devices by Eqn (2) matches Eqn (1) when energy terms are equal."""
+    stat = jnp.array([5.0, 3.0])
+    t = jnp.array([10.0, 10.0])
+    e = jnp.array([1.0, 1.0])
+    res = jnp.array([1e9, 1e9])
+    e0 = jnp.array([0.0, 0.0])
+    r = np.asarray(U.rewafl_utility(stat, t, e, res, e0, T_round=60.0,
+                                    alpha=1.0, beta=1.0))
+    o = np.asarray(U.oort_utility(stat, t, T_round=60.0, alpha=1.0))
+    assert (np.argsort(r) == np.argsort(o)).all()
+
+
+def test_autofl_reward_energy_normalised():
+    r = U.autofl_reward(jnp.array([1.0, 1.0]), jnp.array([10.0, 100.0]))
+    assert float(r[0]) > float(r[1])
