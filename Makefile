@@ -1,0 +1,21 @@
+PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
+
+.PHONY: test test-all bench-kernels bench dev-deps
+
+# tier-1: fast suite (pytest.ini defaults to -m "not slow")
+test:
+	$(PY) -m pytest -x -q
+
+# full suite including the slow tier (nightly)
+test-all:
+	$(PY) -m pytest -q -m ""
+
+# one-command bench-regression smoke: kernel ops + engine rounds/s
+bench-kernels:
+	$(PY) -m benchmarks.run --only kernels
+
+bench:
+	$(PY) -m benchmarks.run
+
+dev-deps:
+	pip install -r requirements-dev.txt

@@ -34,11 +34,14 @@ def _key(params: Dict) -> str:
 def cached_run(task: str, method: str, *, rounds: int = 50,
                lam: float = 0.8, alpha: float = 1.0, beta: float = 1.0,
                seed: int = 0, target_acc: Optional[float] = None,
-               force: bool = False) -> Dict:
-    """Run (or load) one FL campaign; returns a JSON-able summary dict."""
+               chunk_size: int = 8, force: bool = False) -> Dict:
+    """Run (or load) one FL campaign through the chunked-scan engine;
+    returns a JSON-able summary dict. (v=4: engine-backed campaigns —
+    accuracy/early-stop happens at chunk boundaries, not every 4 rounds.)"""
     target = TARGETS[task] if target_acc is None else target_acc
     params = dict(task=task, method=method, rounds=rounds, lam=lam,
-                  alpha=alpha, beta=beta, seed=seed, target=target, v=3)
+                  alpha=alpha, beta=beta, seed=seed, target=target, v=4,
+                  chunk=chunk_size)
     os.makedirs(FL_DIR, exist_ok=True)
     path = os.path.join(FL_DIR, f"{task.replace('@','_')}__{method}__"
                                 f"{_key(params)}.json")
@@ -48,7 +51,8 @@ def cached_run(task: str, method: str, *, rounds: int = 50,
     from repro.launch.fl_run import run_fl
     t0 = time.time()
     r = run_fl(task, method, rounds=rounds, lam=lam, alpha=alpha, beta=beta,
-               seed=seed, target_acc=target, eval_every=4)
+               seed=seed, target_acc=target, engine="scan",
+               chunk_size=chunk_size, eval_every=chunk_size)
     wall = time.time() - t0
     h = r.history
     out = {
@@ -72,6 +76,52 @@ def cached_run(task: str, method: str, *, rounds: int = 50,
         "n_dropped_curve": h["n_dropped"].tolist(),
         "acc_curve": r.acc_curve.tolist(),
     }
+    with open(path, "w") as f:
+        json.dump(out, f)
+    return out
+
+
+def cached_campaign_grid(task: str, methods, seeds, *, rounds: int = 20,
+                         lam: float = 0.8, n_clients: int = 100,
+                         chunk_size: int = 8, force: bool = False) -> Dict:
+    """(seed × method) grid through the vmapped campaign engine: one
+    compiled program per method, all seeds batched. Caches per-method
+    summary stats (mean/std of final loss, energy, dropout over seeds)."""
+    seeds = list(seeds)
+    params = dict(task=task, methods=sorted(methods), seeds=seeds,
+                  rounds=rounds, lam=lam, n=n_clients, chunk=chunk_size, v=4)
+    os.makedirs(FL_DIR, exist_ok=True)
+    path = os.path.join(FL_DIR, f"grid_{task.replace('@','_')}__"
+                                f"{_key(params)}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    from repro.core import METHODS
+    from repro.launch.engine import run_campaign_grid
+    from repro.launch.fl_run import build_task, quick_cfg
+    from repro.models.fl_models import make_fl_model
+    from repro.sim.devices import build_fleet
+    model = make_fl_model(task, small=True)
+    fleet = build_fleet(n_clients, seed=0, init_energy_mean=0.11,
+                        init_energy_std=0.04, e0_frac=0.08)
+    cx, cy, _ = build_task(task, n_clients, lam, per_client=64)
+    t0 = time.time()
+    grids = run_campaign_grid(model, fleet, cx, cy, quick_cfg(),
+                              {m: METHODS[m] for m in methods},
+                              seeds=seeds, rounds=rounds,
+                              chunk_size=chunk_size)
+    wall = time.time() - t0
+    out = {"params": params, "wall_s": wall,
+           "campaign_rounds_s": len(seeds) * len(methods) * rounds / wall,
+           "methods": {}}
+    for m, h in grids.items():
+        gl = h["global_loss"]
+        out["methods"][m] = {
+            "final_loss_mean": float(gl[:, -1].mean()),
+            "final_loss_std": float(gl[:, -1].std()),
+            "energy_kj_mean": float(h["round_energy"].sum(1).mean() / 1e3),
+            "dropout_mean": float((h["n_dropped"][:, -1] / n_clients).mean()),
+        }
     with open(path, "w") as f:
         json.dump(out, f)
     return out

@@ -1,6 +1,7 @@
 """Kernel microbenchmarks: wall-time per call of the public ops on this
 backend (CPU ref path here; the Pallas path engages on TPU) + interpret-
-mode correctness deltas vs the oracle."""
+mode correctness deltas vs the oracle + scan-engine FL round throughput
+(rounds/s, device-rounds/s) at fleet scales S ∈ {100, 1k, 10k}."""
 from __future__ import annotations
 
 import time
@@ -14,6 +15,8 @@ from repro.kernels.fedavg import ops as fa_ops, ref as fa_ref
 from repro.kernels.flash_attention import flash_attention as fl_k, ref as fl_ref
 from repro.kernels.stat_util import ops as su_ops
 
+ENGINE_SCALES = (100, 1_000, 10_000)
+
 
 def _time(fn, *args, n=20):
     fn(*args)  # compile
@@ -23,6 +26,54 @@ def _time(fn, *args, n=20):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.time() - t0) / n * 1e6
+
+
+def _engine_rows(rows):
+    """Scan-engine throughput: one warm compiled chunk per fleet scale,
+    fixed per-device work (tiny CNN, probe 2, batch 2) so the numbers
+    isolate round dispatch + fleet-axis scaling, not model FLOPs."""
+    from repro.core import FLConfig, METHODS, init_fleet_state
+    from repro.core.policy import PolicyCfg
+    from repro.launch.engine import make_chunk_fn, run_campaign_batch
+    from repro.launch.fl_run import build_task
+    from repro.models.fl_models import make_fl_model
+    from repro.sim.devices import build_fleet
+
+    model = make_fl_model("cnn@mnist", small=True)
+    cfg = FLConfig(n_select=20, batch_size=2, probe_size=2, lr=0.05,
+                   uplink_bits=16e6, policy=PolicyCfg(H0=2, H_max=4))
+    for S in ENGINE_SCALES:
+        chunk = 8 if S <= 1_000 else 2
+        fleet = build_fleet(S, seed=0, init_energy_mean=0.3)
+        cx, cy, _ = build_task("cnn@mnist", S, 0.8, per_client=2, n_test=16)
+        ck = make_chunk_fn(model, fleet, cx, cy, cfg, METHODS["rewafl"],
+                           chunk_size=chunk)
+        params = model.init(jax.random.PRNGKey(0))
+        state = init_fleet_state(fleet, H0=cfg.policy.H0)
+        key = jax.random.PRNGKey(1)
+        out = ck(params, state, key, jnp.asarray(0, jnp.int32))  # compile
+        jax.block_until_ready(out[0])
+        t0 = time.time()
+        out = ck(*out[:3], jnp.asarray(chunk, jnp.int32))
+        jax.block_until_ready(out[0])
+        dt = time.time() - t0
+        rps = chunk / dt
+        rows.append((f"engine/scan_round_S{S}", dt / chunk * 1e6,
+                     f"rounds_s={rps:.2f};device_rounds_s={rps * S:.0f};"
+                     f"chunk={chunk}"))
+
+    # campaign batching: 4 vmapped seeds on the 100-device fleet
+    S, seeds, rounds = 100, (0, 1, 2, 3), 8
+    fleet = build_fleet(S, seed=0, init_energy_mean=0.3)
+    cx, cy, _ = build_task("cnn@mnist", S, 0.8, per_client=2, n_test=16)
+    t0 = time.time()
+    run_campaign_batch(model, fleet, cx, cy, cfg, METHODS["rewafl"],
+                       seeds=seeds, rounds=rounds, chunk_size=rounds)
+    dt = time.time() - t0
+    crs = len(seeds) * rounds / dt
+    rows.append((f"engine/campaign_vmap_{len(seeds)}seeds_S{S}",
+                 dt / (len(seeds) * rounds) * 1e6,
+                 f"campaign_rounds_s={crs:.2f};incl_compile=1"))
 
 
 def run():
@@ -55,6 +106,7 @@ def run():
     err = float(jnp.abs(got - fl_ref.attention(q, k, v, causal=True)).max())
     rows.append(("kernels/flash_attn_interp_256", us_i,
                  f"max_err_vs_ref={err:.2e};blocks=128x128"))
+    _engine_rows(rows)
     emit(rows)
     return rows
 

@@ -9,6 +9,8 @@
   methods.py   — named method registry (Random/Oort/AutoFL/REAFL/
                  REAFL+LUPA/REWAFL)
 """
-from repro.core.state import FleetState, init_fleet_state  # noqa: F401
+from repro.core.state import (FleetState, init_fleet_state,  # noqa: F401
+                              replicate_state)
 from repro.core.methods import METHODS, MethodSpec  # noqa: F401
-from repro.core.round import FLConfig, make_round_fn, make_eval_fn  # noqa: F401
+from repro.core.round import (FLConfig, make_round_body, make_round_fn,  # noqa: F401
+                              make_eval_fn)

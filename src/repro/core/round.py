@@ -87,10 +87,15 @@ def _fedavg(global_params, client_params, weights):
     return jax.tree.map(combine, global_params, client_params)
 
 
-def make_round_fn(model: FLModel, fleet: DeviceFleet, cx, cy,
-                  cfg: FLConfig, method: MethodSpec):
-    """Returns jitted round(params, state, key, round_idx) ->
-    (params', state', metrics). cx/cy: stacked client data (S, n, ...)."""
+def make_round_body(model: FLModel, fleet: DeviceFleet, cx, cy,
+                    cfg: FLConfig, method: MethodSpec):
+    """Returns the *un-jitted* round(params, state, key, round_idx) ->
+    (params', state', metrics). cx/cy: stacked client data (S, n, ...).
+
+    The raw body is what `launch.engine` scans over (`jax.lax.scan`
+    re-traces it per chunk); `make_round_fn` is the one-round jitted view
+    of the same computation, so engine and loop share numerics exactly.
+    """
     S = fleet.n
     K = cfg.n_select
     model_bits = float(cfg.uplink_bits or model.param_bits)
@@ -227,7 +232,14 @@ def make_round_fn(model: FLModel, fleet: DeviceFleet, cx, cy,
         }
         return new_params, new_state, metrics
 
-    return jax.jit(round_fn)
+    return round_fn
+
+
+def make_round_fn(model: FLModel, fleet: DeviceFleet, cx, cy,
+                  cfg: FLConfig, method: MethodSpec):
+    """Returns jitted round(params, state, key, round_idx) ->
+    (params', state', metrics). cx/cy: stacked client data (S, n, ...)."""
+    return jax.jit(make_round_body(model, fleet, cx, cy, cfg, method))
 
 
 def make_eval_fn(model: FLModel, test_x, test_y):

@@ -24,6 +24,14 @@ class FleetState(NamedTuple):
     n_selected: jax.Array        # i32 — times selected (incl. failed)
 
 
+def replicate_state(state: FleetState, n: int) -> FleetState:
+    """Stack a fresh (S,)-leaf state into (n, S) leaves for vmapped
+    campaign batches (engine.run_campaign_batch): the init state is
+    deterministic given the fleet, so campaigns share it by broadcast."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n,) + x.shape), state)
+
+
 def init_fleet_state(fleet: DeviceFleet, *, H0: int = 5,
                      optimistic_stat: float = 1e4) -> FleetState:
     """Fresh state: optimistic statistical utility (Oort-style — unexplored

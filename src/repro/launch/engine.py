@@ -1,0 +1,248 @@
+"""Scan-compiled multi-round FL engine with sharded mega-fleets.
+
+The seed driver (`launch/fl_run.py`) dispatched one jitted round per
+Python-loop iteration — at benchmark scale the host round-trip and
+dispatch overhead dominate the actual device work. This module lifts the
+round into `jax.lax.scan` chunks so R rounds run as a single device
+program with on-device metric accumulation, and makes the fleet axis `S`
+shardable so 10k–100k-device fleets spread across available devices.
+
+Layers (each usable on its own):
+
+  make_chunk_fn   — jit(scan(round_body, length=chunk)) with a PRNG-key
+                    carry that folds exactly like the sequential loop
+                    (`key, kr = split(key)` per round), so engine ≡ loop
+                    to float tolerance.
+  EngineCfg/run_rounds
+                  — chunked driver: runs chunks back-to-back, stacks the
+                    per-round history pytree host-side, and early-stops
+                    on target accuracy at chunk boundaries.
+  shard_over_fleet— place every array whose leading axis is S on a 1-D
+                    "fleet" mesh (jax.sharding.NamedSharding); selection
+                    top-k and the K-slot gathers stay global ops and are
+                    partitioned by GSPMD.
+  run_campaign_batch
+                  — vmap independent campaigns (one per seed) through
+                    the same chunk body for the benchmark grids; methods
+                    differ structurally, so grids loop methods in Python
+                    and vmap the seed axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.methods import MethodSpec
+from repro.core.round import FLConfig, make_round_body
+from repro.core.state import FleetState, init_fleet_state, replicate_state
+from repro.launch.mesh import make_fleet_mesh
+from repro.models.fl_models import FLModel
+from repro.sim.devices import DeviceFleet
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineCfg:
+    chunk_size: int = 8          # rounds per compiled scan chunk
+    collect_per_device: bool = True   # keep (R, S) traces (selected, H)
+    fleet_shards: Optional[int] = None  # shard S over this many devices
+    # donate params/state between chunks (off by default: the fresh-init
+    # state aliases fleet buffers, and XLA rejects doubly-donated buffers)
+    donate: bool = False
+
+
+# --------------------------------------------------------------- sharding
+
+def shard_over_fleet(tree, mesh, S: int):
+    """device_put every leaf (all must have leading axis S) with a
+    fleet-axis NamedSharding. Use `replicate` for global trees (params):
+    deciding by shape is unsound — a bias of length S would alias."""
+    fleet_s = jax.sharding.NamedSharding(mesh,
+                                         jax.sharding.PartitionSpec("fleet"))
+
+    def place(x):
+        assert x.ndim >= 1 and x.shape[0] == S, (
+            f"fleet-sharded leaf must lead with S={S}, got {x.shape}")
+        return jax.device_put(x, fleet_s)
+
+    return jax.tree.map(place, tree)
+
+
+def replicate(tree, mesh):
+    """device_put every leaf fully replicated on the fleet mesh."""
+    repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    return jax.tree.map(lambda x: jax.device_put(x, repl), tree)
+
+
+# ------------------------------------------------------------ chunked scan
+
+def _chunk_body(round_body, length: int, collect_per_device: bool):
+    """R-round scan body: carry (params, state, key); ys = metric pytree.
+
+    PRNG folding matches the sequential driver exactly: one
+    `jax.random.split` of the carried key per round.
+    """
+
+    def chunk(params, state: FleetState, key, start_round):
+        rounds = jnp.arange(length, dtype=jnp.int32) + start_round
+
+        def step(carry, r):
+            p, s, k = carry
+            k, kr = jax.random.split(k)
+            p, s, m = round_body(p, s, kr, r)
+            m = dict(m, H=s.H)
+            if not collect_per_device:
+                m.pop("selected")
+                m.pop("H")
+            return (p, s, k), m
+
+        (params, state, key), hist = jax.lax.scan(
+            step, (params, state, key), rounds)
+        return params, state, key, hist
+
+    return chunk
+
+
+def make_chunk_fn(model: FLModel, fleet: DeviceFleet, cx, cy,
+                  cfg: FLConfig, method: MethodSpec, *,
+                  chunk_size: int = 8, collect_per_device: bool = True,
+                  donate: bool = False):
+    """jitted chunk(params, state, key, start_round) ->
+    (params', state', key', history) running `chunk_size` rounds on
+    device. `history` leaves have leading axis chunk_size."""
+    body = make_round_body(model, fleet, cx, cy, cfg, method)
+    chunk = _chunk_body(body, chunk_size, collect_per_device)
+    donate_argnums = (0, 1) if donate else ()
+    return jax.jit(chunk, donate_argnums=donate_argnums)
+
+
+@dataclasses.dataclass
+class EngineResult:
+    params: object
+    state: FleetState
+    history: Dict[str, np.ndarray]   # per-round arrays, length rounds_run
+    rounds_run: int
+    reached_round: Optional[int]     # first chunk-boundary round ≥ target
+    acc_curve: np.ndarray            # one accuracy per completed chunk
+
+
+def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
+               method: MethodSpec, *, rounds: int, key, params=None,
+               state: Optional[FleetState] = None,
+               ecfg: EngineCfg = EngineCfg(),
+               eval_fn=None, target_acc: Optional[float] = None,
+               init_key=None) -> EngineResult:
+    """Chunked multi-round driver. Early-stops on `target_acc` (needs
+    `eval_fn`) at chunk boundaries — accuracy is never evaluated inside
+    a compiled chunk, so a campaign overshoots the target by at most
+    chunk_size − 1 rounds."""
+    if ecfg.chunk_size < 1:
+        raise ValueError(f"chunk_size must be >= 1, got {ecfg.chunk_size}")
+    S = fleet.n
+    if params is None:
+        params = model.init(init_key if init_key is not None
+                            else jax.random.PRNGKey(0))
+    if state is None:
+        state = init_fleet_state(fleet, H0=cfg.policy.H0)
+
+    if ecfg.fleet_shards and ecfg.fleet_shards > 1:
+        mesh = make_fleet_mesh(ecfg.fleet_shards)
+        fleet = shard_over_fleet(fleet, mesh, S)
+        state = shard_over_fleet(state, mesh, S)
+        cx = shard_over_fleet(cx, mesh, S)
+        cy = shard_over_fleet(cy, mesh, S)
+        params = replicate(params, mesh)
+
+    chunk_fns: Dict[int, object] = {}
+
+    def chunk_fn(length: int):
+        if length not in chunk_fns:
+            chunk_fns[length] = make_chunk_fn(
+                model, fleet, cx, cy, cfg, method, chunk_size=length,
+                collect_per_device=ecfg.collect_per_device,
+                donate=ecfg.donate)
+        return chunk_fns[length]
+
+    hists: List = []
+    acc_curve: List[float] = []
+    reached = None
+    done = 0
+    while done < rounds:
+        length = min(ecfg.chunk_size, rounds - done)
+        params, state, key, hist = chunk_fn(length)(
+            params, state, key, jnp.asarray(done, jnp.int32))
+        hists.append(jax.device_get(hist))
+        done += length
+        if eval_fn is not None:
+            acc = float(eval_fn(params))
+            acc_curve.append(acc)
+            if target_acc is not None and acc >= target_acc:
+                reached = done - 1
+                break
+    history = {k: np.concatenate([np.asarray(h[k]) for h in hists])
+               for k in hists[0]}
+    return EngineResult(params=params, state=state, history=history,
+                        rounds_run=done, reached_round=reached,
+                        acc_curve=np.asarray(acc_curve, np.float64))
+
+
+# ------------------------------------------------------- campaign batching
+
+def run_campaign_batch(model: FLModel, fleet: DeviceFleet, cx, cy,
+                       cfg: FLConfig, method: MethodSpec, *,
+                       seeds: Sequence[int], rounds: int,
+                       chunk_size: int = 8,
+                       collect_per_device: bool = False) -> Dict[str, np.ndarray]:
+    """vmap independent campaigns over the seed axis: one shared fleet and
+    dataset, per-seed init params and PRNG streams (the key derivation
+    matches run_fl's `PRNGKey(seed+2)` init / `PRNGKey(seed+1)` loop-key
+    convention). NOTE: unlike per-seed `run_fl` calls — which rebuild the
+    fleet and dataset with `seed` — the batch varies only initialisation
+    and round randomness, so cross-seed variance here excludes fleet/data
+    heterogeneity and results differ from `run_fl(seed=s)` for the same s.
+    Returns history with leading axes (n_seeds, rounds)."""
+    if chunk_size < 1:
+        raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+    body = make_round_body(model, fleet, cx, cy, cfg, method)
+    B = len(seeds)
+    chunk = _chunk_body(body, chunk_size, collect_per_device)
+    batched = jax.jit(jax.vmap(chunk, in_axes=(0, 0, 0, None)))
+
+    params = jax.vmap(model.init)(
+        jnp.stack([jax.random.PRNGKey(s + 2) for s in seeds]))
+    state = replicate_state(init_fleet_state(fleet, H0=cfg.policy.H0), B)
+    keys = jnp.stack([jax.random.PRNGKey(s + 1) for s in seeds])
+
+    hists: List = []
+    done = 0
+    while done < rounds:
+        length = min(chunk_size, rounds - done)
+        if length != chunk_size:  # remainder chunk: separate trace
+            batched = jax.jit(jax.vmap(
+                _chunk_body(body, length, collect_per_device),
+                in_axes=(0, 0, 0, None)))
+        params, state, keys, hist = batched(
+            params, state, keys, jnp.asarray(done, jnp.int32))
+        hists.append(jax.device_get(hist))
+        done += length
+    history = {k: np.concatenate([np.asarray(h[k]) for h in hists], axis=1)
+               for k in hists[0]}
+    history["final_residual_energy"] = np.asarray(state.residual_energy)
+    history["final_H"] = np.asarray(state.H)
+    return history
+
+
+def run_campaign_grid(model: FLModel, fleet: DeviceFleet, cx, cy,
+                      cfg: FLConfig, methods: Dict[str, MethodSpec], *,
+                      seeds: Sequence[int], rounds: int,
+                      chunk_size: int = 8) -> Dict[str, Dict[str, np.ndarray]]:
+    """(seed × method) benchmark grid: methods differ structurally (python
+    branches in the round body), so they compile separately; the seed axis
+    of each method is a single vmapped program."""
+    return {name: run_campaign_batch(model, fleet, cx, cy, cfg, spec,
+                                     seeds=seeds, rounds=rounds,
+                                     chunk_size=chunk_size)
+            for name, spec in methods.items()}

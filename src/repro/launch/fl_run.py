@@ -82,13 +82,29 @@ def quick_cfg(n_select: int = 20, alpha: float = 1.0,
                     policy=PolicyCfg(H0=5, H_max=16, dH=1.5))
 
 
+HIST_KEYS = ("round_latency", "round_energy", "n_dropped",
+             "n_participating", "n_failed", "mean_H_selected", "global_loss")
+
+
 def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
            rounds: int = 100, n_clients: int = 100, n_select: int = 20,
            lam: float = 0.8, target_acc: float = 0.95,
            alpha: float = 1.0, beta: float = 1.0,
            seed: int = 0, per_client: int = 64, small: bool = True,
            fl_cfg: Optional[FLConfig] = None, fleet_kwargs: Optional[dict] = None,
-           eval_every: int = 5, verbose: bool = False) -> RunResult:
+           eval_every: int = 5, verbose: bool = False,
+           engine: str = "scan", chunk_size: int = 8,
+           fleet_shards: Optional[int] = None) -> RunResult:
+    """Run one FL campaign.
+
+    engine="scan" (default) runs rounds in compiled `lax.scan` chunks via
+    `launch.engine` — accuracy (and hence the early-stop check) happens at
+    chunk boundaries, so the chunk length is clamped to `eval_every`:
+    evaluation is never coarser than the caller asked for. engine="loop"
+    is the legacy one-dispatch-per-round driver evaluating every
+    `eval_every` rounds; both fold PRNG keys identically, so they agree
+    to float tolerance round-for-round.
+    """
     model = make_fl_model(task, small=small)
     # benchmark-scale default: the paper's low-initial-battery regime
     # (Fig. 1 / Fig. 4 use 6–30 kJ initial energies, not full batteries)
@@ -100,20 +116,55 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
     cfg = fl_cfg or (quick_cfg(n_select, alpha, beta) if small else
                      FLConfig(n_select=n_select, alpha=alpha, beta=beta))
     spec = METHODS[method]
-    round_fn = make_round_fn(model, fleet, cx, cy, cfg, spec)
     if task == "lstm@shakespeare":
         eval_fn = jax.jit(lambda p: model.accuracy(p, test))
     else:
         eval_fn = make_eval_fn(model, test["x"], test["y"])
 
+    if engine == "scan":
+        from repro.launch.engine import EngineCfg, run_rounds
+        # honor the caller's eval cadence: chunks never span more than
+        # eval_every rounds, so early-stop granularity is preserved
+        chunk_size = max(1, min(chunk_size, eval_every))
+        res = run_rounds(
+            model, fleet, cx, cy, cfg, spec, rounds=rounds,
+            key=jax.random.PRNGKey(seed + 1),
+            params=model.init(jax.random.PRNGKey(seed + 2)),
+            ecfg=EngineCfg(chunk_size=chunk_size, fleet_shards=fleet_shards),
+            eval_fn=eval_fn, target_acc=target_acc)
+        h = res.history
+        state, params = res.state, res.params
+        if verbose:
+            for i, acc in enumerate(res.acc_curve):
+                r_end = min((i + 1) * chunk_size, res.rounds_run) - 1
+                print(f"r={r_end:4d} acc={acc:.4f} "
+                      f"loss={h['global_loss'][r_end]:.4f} "
+                      f"drop={int(h['n_dropped'][r_end])}")
+        return RunResult(
+            task=task, method=method, rounds_run=res.rounds_run,
+            reached_round=res.reached_round, target_acc=target_acc,
+            history={k: np.asarray(h[k], np.float64) for k in HIST_KEYS} | {
+                "sel_count": np.asarray(h["selected"]).sum(0).astype(np.int64),
+                "H_trace": np.asarray(h["H"]),
+                "residual_energy": np.asarray(state.residual_energy),
+                "init_energy": np.asarray(fleet.init_energy),
+                "type_id": np.asarray(fleet.type_id),
+                "rate_mean": np.asarray(fleet.rate_mean),
+            },
+            final_state=state,
+            overall_latency_s=float(np.sum(h["round_latency"])),
+            overall_energy_j=float(np.sum(h["round_energy"])),
+            dropout_ratio=float(h["n_dropped"][-1]) / n_clients,
+            acc_curve=res.acc_curve, final_params=params)
+    if engine != "loop":
+        raise ValueError(f"unknown engine {engine!r} (use 'scan' or 'loop')")
+
+    round_fn = make_round_fn(model, fleet, cx, cy, cfg, spec)
     key = jax.random.PRNGKey(seed + 1)
     params = model.init(jax.random.PRNGKey(seed + 2))
     state = init_fleet_state(fleet, H0=cfg.policy.H0)
 
-    hist: Dict[str, List] = {k: [] for k in
-                             ("round_latency", "round_energy", "n_dropped",
-                              "n_participating", "n_failed",
-                              "mean_H_selected", "global_loss")}
+    hist: Dict[str, List] = {k: [] for k in HIST_KEYS}
     sel_count = np.zeros(n_clients, np.int64)
     H_trace: List[np.ndarray] = []
     acc_curve: List[float] = []
@@ -175,12 +226,17 @@ def main() -> None:
     ap.add_argument("--alpha", type=float, default=1.0)
     ap.add_argument("--beta", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", default="scan", choices=("scan", "loop"))
+    ap.add_argument("--chunk-size", type=int, default=8)
+    ap.add_argument("--fleet-shards", type=int, default=None)
     args = ap.parse_args()
     t0 = time.time()
     res = run_fl(args.task, args.method, rounds=args.rounds,
                  n_clients=args.clients, n_select=args.select, lam=args.lam,
                  target_acc=args.target_acc, alpha=args.alpha,
-                 beta=args.beta, seed=args.seed, verbose=True)
+                 beta=args.beta, seed=args.seed, verbose=True,
+                 engine=args.engine, chunk_size=args.chunk_size,
+                 fleet_shards=args.fleet_shards)
     print(json.dumps({
         "task": res.task, "method": res.method,
         "rounds": res.rounds_run, "reached_round": res.reached_round,

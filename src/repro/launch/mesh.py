@@ -27,3 +27,11 @@ def make_host_mesh(shape=(2, 2), axes=("data", "model")) -> ShardCfg:
     """Small mesh for CPU tests (requires enough host devices)."""
     mesh = jax.make_mesh(shape, axes)
     return ShardCfg(mesh=mesh, data_axes=axes[:-1], model_axis=axes[-1])
+
+
+def make_fleet_mesh(n_shards=None):
+    """1-D mesh over the FL fleet axis S (axis name "fleet") — the engine
+    shards every (S, ...) array over it; selection top-k and the K-slot
+    gathers stay global ops partitioned by GSPMD."""
+    n = n_shards or len(jax.devices())
+    return jax.make_mesh((n,), ("fleet",))

@@ -20,6 +20,7 @@ the local shard and pmean'd across the mesh in the sharded path).
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import math
 from functools import partial
 from typing import Optional
@@ -31,9 +32,21 @@ from repro.nn import layers
 from repro.nn.sharding import ShardCfg
 
 try:  # jax >= 0.4.35 exposes shard_map at top level
-    shard_map = jax.shard_map
+    _shard_map = jax.shard_map
 except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map  # type: ignore
+    from jax.experimental.shard_map import shard_map as _shard_map  # type: ignore
+
+try:  # jax < 0.6 spells the replication-check kwarg ``check_rep``
+    _CHECK_KW = ("check_vma" if "check_vma" in inspect.signature(
+        _shard_map).parameters else "check_rep")
+except (TypeError, ValueError):  # pragma: no cover — unintrospectable
+    _CHECK_KW = "check_vma"
+
+
+def shard_map(*args, **kwargs):
+    if "check_vma" in kwargs and _CHECK_KW != "check_vma":
+        kwargs[_CHECK_KW] = kwargs.pop("check_vma")
+    return _shard_map(*args, **kwargs)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -8,6 +8,9 @@ import textwrap
 
 import pytest
 
+# each test pays a fresh subprocess jax-init + 8-device compile
+pytestmark = pytest.mark.slow
+
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 

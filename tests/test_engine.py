@@ -1,0 +1,173 @@
+"""Scan-engine tests: chunked-scan ≡ sequential round loop (PRNG folding
+and numerics), campaign vmap batching, early stop, fleet sharding, and a
+mega-fleet compile/run smoke."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FLConfig, METHODS, init_fleet_state, make_round_fn,
+                        replicate_state)
+from repro.core.policy import PolicyCfg
+from repro.launch import engine as eng
+from repro.launch.fl_run import build_task
+from repro.launch.mesh import make_fleet_mesh
+from repro.models.fl_models import make_fl_model
+from repro.sim.devices import build_fleet
+
+N, K = 10, 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = make_fl_model("cnn@mnist", small=True)
+    fleet = build_fleet(N, seed=0, init_energy_mean=0.3)
+    cx, cy, _ = build_task("cnn@mnist", N, 0.8, per_client=16, n_test=32)
+    cfg = FLConfig(n_select=K, batch_size=4, probe_size=4, lr=0.05,
+                   uplink_bits=16e6, policy=PolicyCfg(H0=2, H_max=6))
+    return model, fleet, cx, cy, cfg
+
+
+def _sequential(model, fleet, cx, cy, cfg, method, rounds, key, params):
+    """Reference: per-round jitted dispatch, the seed driver's loop."""
+    rf = make_round_fn(model, fleet, cx, cy, cfg, METHODS[method])
+    state = init_fleet_state(fleet, H0=cfg.policy.H0)
+    hist = []
+    for r in range(rounds):
+        key, kr = jax.random.split(key)
+        params, state, m = rf(params, state, kr, jnp.asarray(r, jnp.int32))
+        hist.append(jax.device_get(m))
+    return params, state, hist
+
+
+def _assert_trees_close(a, b, atol):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x, np.float64),
+                                   np.asarray(y, np.float64), atol=atol)
+
+
+def _parity(setup, rounds, chunk_size, atol=1e-5):
+    model, fleet, cx, cy, cfg = setup
+    key = jax.random.PRNGKey(7)
+    params0 = model.init(jax.random.PRNGKey(0))
+    res = eng.run_rounds(model, fleet, cx, cy, cfg, METHODS["rewafl"],
+                         rounds=rounds, key=key, params=params0,
+                         ecfg=eng.EngineCfg(chunk_size=chunk_size))
+    p_seq, s_seq, h_seq = _sequential(model, fleet, cx, cy, cfg, "rewafl",
+                                      rounds, key, params0)
+    assert res.rounds_run == rounds
+    _assert_trees_close(res.params, p_seq, atol)
+    _assert_trees_close(res.state, s_seq, atol)
+    for k in ("global_loss", "round_latency", "round_energy",
+              "n_participating", "n_failed", "mean_H_selected"):
+        seq = np.asarray([h[k] for h in h_seq], np.float64)
+        np.testing.assert_allclose(np.asarray(res.history[k], np.float64),
+                                   seq, atol=atol, err_msg=k)
+    sel_seq = np.stack([np.asarray(h["selected"]) for h in h_seq])
+    np.testing.assert_array_equal(np.asarray(res.history["selected"]),
+                                  sel_seq)
+
+
+def test_scan_matches_sequential_rounds(setup):
+    """Engine chunks (incl. a remainder chunk) ≡ N make_round_fn calls:
+    same PRNG key folding, identical FleetState and metrics."""
+    _parity(setup, rounds=5, chunk_size=3)
+
+
+@pytest.mark.slow
+def test_scan_matches_sequential_20_rounds(setup):
+    """Acceptance-scale parity: ≥ 20 rounds on cnn@mnist."""
+    _parity(setup, rounds=20, chunk_size=8)
+
+
+def test_early_stop_at_chunk_boundary(setup):
+    model, fleet, cx, cy, cfg = setup
+    res = eng.run_rounds(model, fleet, cx, cy, cfg, METHODS["rewafl"],
+                         rounds=12, key=jax.random.PRNGKey(1),
+                         init_key=jax.random.PRNGKey(0),
+                         ecfg=eng.EngineCfg(chunk_size=3),
+                         eval_fn=lambda p: 1.0, target_acc=0.5)
+    assert res.rounds_run == 3            # stopped after the first chunk
+    assert res.reached_round == 2
+    assert len(res.history["global_loss"]) == 3
+
+
+@pytest.mark.slow
+def test_campaign_batch_matches_individual_runs(setup):
+    """vmapped (seed-axis) campaigns ≡ per-seed engine runs."""
+    model, fleet, cx, cy, cfg = setup
+    seeds = (0, 3)
+    rounds = 4
+    batch = eng.run_campaign_batch(model, fleet, cx, cy, cfg,
+                                   METHODS["rewafl"], seeds=seeds,
+                                   rounds=rounds, chunk_size=2)
+    assert batch["global_loss"].shape == (len(seeds), rounds)
+    for i, s in enumerate(seeds):
+        solo = eng.run_rounds(model, fleet, cx, cy, cfg, METHODS["rewafl"],
+                              rounds=rounds, key=jax.random.PRNGKey(s + 1),
+                              params=model.init(jax.random.PRNGKey(s + 2)),
+                              ecfg=eng.EngineCfg(chunk_size=2))
+        np.testing.assert_allclose(batch["global_loss"][i],
+                                   solo.history["global_loss"], atol=1e-5)
+        np.testing.assert_allclose(
+            batch["final_residual_energy"][i],
+            np.asarray(solo.state.residual_energy), atol=1e-3)
+
+
+def test_replicate_state_shape(setup):
+    _, fleet, _, _, cfg = setup
+    st = init_fleet_state(fleet, H0=cfg.policy.H0)
+    st3 = replicate_state(st, 3)
+    assert st3.residual_energy.shape == (3, N)
+    assert st3.dropped.shape == (3, N)
+
+
+def test_shard_over_fleet_places_fleet_axis(setup):
+    """The sharding layer must shard exactly the (S, ...) leaves and
+    replicate the rest — runs on any device count (mesh of 1 here)."""
+    model, fleet, cx, cy, cfg = setup
+    mesh = make_fleet_mesh(1)
+    sharded = eng.shard_over_fleet(fleet, mesh, fleet.n)
+    P = jax.sharding.PartitionSpec
+    for leaf in jax.tree.leaves(sharded):
+        assert leaf.sharding.spec == P("fleet")
+    params = eng.replicate(model.init(jax.random.PRNGKey(0)), mesh)
+    for leaf in jax.tree.leaves(params):
+        assert leaf.sharding.spec == P()
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs >1 device for a real fleet shard")
+def test_sharded_run_matches_unsharded(setup):
+    model, fleet, cx, cy, cfg = setup
+    key = jax.random.PRNGKey(7)
+    params0 = model.init(jax.random.PRNGKey(0))
+    base = eng.run_rounds(model, fleet, cx, cy, cfg, METHODS["rewafl"],
+                          rounds=2, key=key, params=params0,
+                          ecfg=eng.EngineCfg(chunk_size=2))
+    shard = eng.run_rounds(model, fleet, cx, cy, cfg, METHODS["rewafl"],
+                           rounds=2, key=key, params=params0,
+                           ecfg=eng.EngineCfg(chunk_size=2, fleet_shards=2))
+    np.testing.assert_allclose(base.history["global_loss"],
+                               shard.history["global_loss"], atol=1e-5)
+
+
+@pytest.mark.slow
+def test_mega_fleet_round_compiles_and_runs(setup):
+    """10k-device fleet: one engine round must compile and run on CPU
+    (selection, utility, energy, and state updates are all (S,) ops)."""
+    S = 10_000
+    model = make_fl_model("cnn@mnist", small=True)
+    fleet = build_fleet(S, seed=0, init_energy_mean=0.3)
+    cx, cy, _ = build_task("cnn@mnist", S, 0.8, per_client=4, n_test=32)
+    cfg = FLConfig(n_select=20, batch_size=4, probe_size=4, lr=0.05,
+                   uplink_bits=16e6, policy=PolicyCfg(H0=2, H_max=4))
+    res = eng.run_rounds(model, fleet, cx, cy, cfg, METHODS["rewafl"],
+                         rounds=1, key=jax.random.PRNGKey(1),
+                         init_key=jax.random.PRNGKey(0),
+                         ecfg=eng.EngineCfg(chunk_size=1))
+    assert res.rounds_run == 1
+    assert np.isfinite(res.history["global_loss"]).all()
+    n_sel = int(np.asarray(res.history["selected"]).sum())
+    assert 0 < n_sel <= 20
+    assert np.asarray(res.state.residual_energy).shape == (S,)

@@ -41,10 +41,12 @@ def test_fedavg_op_arbitrary_shapes():
 SHAPES = [
     # B, Sq, Sk, H, kv, hd, causal, window, softcap
     (2, 128, 128, 4, 2, 64, True, None, None),
-    (1, 256, 256, 4, 4, 32, True, 64, None),
+    pytest.param(1, 256, 256, 4, 4, 32, True, 64, None,
+                 marks=pytest.mark.slow),
     (2, 128, 256, 8, 2, 64, False, None, None),
     (1, 128, 128, 2, 1, 128, True, None, 50.0),   # MQA + gemma softcap
-    (1, 512, 512, 2, 2, 64, True, 128, 30.0),
+    pytest.param(1, 512, 512, 2, 2, 64, True, 128, 30.0,
+                 marks=pytest.mark.slow),
 ]
 
 

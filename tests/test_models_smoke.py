@@ -12,6 +12,9 @@ from repro.nn.sharding import UNSHARDED
 from repro.training.optim import for_config
 from repro.training.train import make_train_step
 
+# minutes of CPU compile across the 10 archs — nightly tier, not tier-1
+pytestmark = pytest.mark.slow
+
 ARCHS = list_archs()
 
 

@@ -15,6 +15,7 @@ def key():
     return jax.random.PRNGKey(0)
 
 
+@pytest.mark.slow
 def test_attention_chunking_invariant(key):
     B, S, H, kv, hd = 2, 32, 4, 2, 8
     p = A.mha_init(key, 32, H, kv, hd)
@@ -25,6 +26,7 @@ def test_attention_chunking_invariant(key):
         np.testing.assert_allclose(outs[0], o, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_attention_decode_matches_prefill(key):
     B, S, H, kv, hd = 2, 16, 4, 2, 8
     p = A.mha_init(key, 32, H, kv, hd)
@@ -39,6 +41,7 @@ def test_attention_decode_matches_prefill(key):
     np.testing.assert_allclose(jnp.concatenate(outs, 1), full, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_attention_window_ring_cache(key):
     """Windowed decode with a ring cache (W < S) matches full-cache windowed
     attention — the long_500k serving mechanism."""
@@ -57,6 +60,7 @@ def test_attention_window_ring_cache(key):
     assert cache.k.shape[1] == W  # ring capacity stayed at the window size
 
 
+@pytest.mark.slow
 def test_mamba2_chunked_vs_decode(key):
     dims = ssm.dims_for(32, 16, head_dim=8, chunk=4)
     p = ssm.mamba2_init(key, dims)
@@ -70,6 +74,7 @@ def test_mamba2_chunked_vs_decode(key):
     np.testing.assert_allclose(jnp.concatenate(outs, 1), full, atol=3e-5)
 
 
+@pytest.mark.slow
 def test_mamba2_chunk_size_invariance(key):
     x = jax.random.normal(key, (1, 16, 32)) * 0.5
     outs = []
@@ -81,6 +86,7 @@ def test_mamba2_chunk_size_invariance(key):
     np.testing.assert_allclose(outs[0], outs[2], atol=3e-5)
 
 
+@pytest.mark.slow
 def test_mlstm_chunked_vs_decode(key):
     md = xlstm.mlstm_dims(32, 4, chunk=4)
     p = xlstm.mlstm_init(key, md)
@@ -94,6 +100,7 @@ def test_mlstm_chunked_vs_decode(key):
     np.testing.assert_allclose(jnp.concatenate(outs, 1), full, atol=3e-5)
 
 
+@pytest.mark.slow
 def test_slstm_forward_vs_decode(key):
     sd = xlstm.slstm_dims(32, 4)
     p = xlstm.slstm_init(key, sd)
@@ -107,6 +114,7 @@ def test_slstm_forward_vs_decode(key):
     np.testing.assert_allclose(jnp.concatenate(outs, 1), full, atol=3e-5)
 
 
+@pytest.mark.slow
 def test_moe_dense_router_normalised(key):
     cfg = moe.MoECfg(16, 32, 4, 2)
     p = moe.moe_init(key, cfg)
@@ -117,6 +125,7 @@ def test_moe_dense_router_normalised(key):
     assert not jnp.isnan(out).any()
 
 
+@pytest.mark.slow
 def test_moe_grad_flows(key):
     cfg = moe.MoECfg(16, 32, 4, 2, shared_d_ff=8)
     p = moe.moe_init(key, cfg)

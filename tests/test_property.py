@@ -1,8 +1,12 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants (skipped cleanly when
+the optional `hypothesis` dependency is absent — see requirements-dev.txt)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import policy as P
 from repro.core import selection as S

@@ -1,5 +1,9 @@
 """FL round-loop integration tests: Algorithm 1 invariants over real
-rounds on a small fleet/dataset (the paper's system end-to-end)."""
+rounds on a small fleet/dataset (the paper's system end-to-end).
+
+Tier-1 runs the structurally distinct methods (rewafl = rea+rewa policy,
+oort = ε-greedy+fixed); the remaining baselines ride the slow tier. The
+jitted round fn per method is compiled once and shared module-wide."""
 import dataclasses
 
 import jax
@@ -15,25 +19,42 @@ from repro.sim.devices import build_fleet
 
 N, K = 10, 4
 
+FAST_METHODS = ("rewafl", "oort")
+SLOW_METHODS = tuple(m for m in sorted(METHODS) if m not in FAST_METHODS)
+
 
 @pytest.fixture(scope="module")
 def setup():
     model = make_fl_model("cnn@mnist", small=True)
     fleet = build_fleet(N, seed=0, init_energy_mean=0.3)
-    cx, cy, test = build_task("cnn@mnist", N, 0.8, per_client=32, n_test=64)
-    cfg = FLConfig(n_select=K, batch_size=8, probe_size=8, lr=0.05,
+    cx, cy, test = build_task("cnn@mnist", N, 0.8, per_client=16, n_test=32)
+    cfg = FLConfig(n_select=K, batch_size=4, probe_size=4, lr=0.05,
                    uplink_bits=16e6, policy=PolicyCfg(H0=2, H_max=6))
     return model, fleet, cx, cy, cfg
 
 
-@pytest.mark.parametrize("method", sorted(METHODS))
-def test_round_invariants(setup, method):
+@pytest.fixture(scope="module")
+def round_fns(setup):
+    """Lazily compiled round fn per method, shared by every test here."""
     model, fleet, cx, cy, cfg = setup
-    rf = make_round_fn(model, fleet, cx, cy, cfg, METHODS[method])
+    cache = {}
+
+    def get(method):
+        if method not in cache:
+            cache[method] = make_round_fn(model, fleet, cx, cy, cfg,
+                                          METHODS[method])
+        return cache[method]
+
+    return get
+
+
+def _check_invariants(setup, round_fns, method, rounds=2):
+    model, fleet, cx, cy, cfg = setup
+    rf = round_fns(method)
     params = model.init(jax.random.PRNGKey(0))
     state = init_fleet_state(fleet, H0=cfg.policy.H0)
     key = jax.random.PRNGKey(1)
-    for r in range(3):
+    for r in range(rounds):
         key, kr = jax.random.split(key)
         params, new_state, m = rf(params, state, kr,
                                   jnp.asarray(r, jnp.int32))
@@ -55,7 +76,18 @@ def test_round_invariants(setup, method):
         state = new_state
 
 
-def test_rewafl_never_selects_infeasible(setup):
+@pytest.mark.parametrize("method", FAST_METHODS)
+def test_round_invariants(setup, round_fns, method):
+    _check_invariants(setup, round_fns, method)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", SLOW_METHODS)
+def test_round_invariants_baselines(setup, round_fns, method):
+    _check_invariants(setup, round_fns, method, rounds=3)
+
+
+def test_rewafl_never_selects_infeasible(setup, round_fns):
     """Energy-utility hard zero: REWAFL must not pick devices whose round
     energy exceeds available battery (while feasible candidates remain)."""
     model, fleet, cx, cy, cfg = setup
@@ -64,7 +96,7 @@ def test_rewafl_never_selects_infeasible(setup):
     drained = state.residual_energy.at[:5].set(
         fleet.e0_reserve[:5] + 1.0)  # 1 J above reserve: infeasible
     state = state._replace(residual_energy=drained)
-    rf = make_round_fn(model, fleet, cx, cy, cfg, METHODS["rewafl"])
+    rf = round_fns("rewafl")
     params = model.init(jax.random.PRNGKey(0))
     _, new_state, m = rf(params, state, jax.random.PRNGKey(2),
                          jnp.asarray(0, jnp.int32))
@@ -73,26 +105,26 @@ def test_rewafl_never_selects_infeasible(setup):
     assert not sel[:5].any()
 
 
-def test_training_improves_loss(setup):
+def test_training_improves_loss(setup, round_fns):
     model, fleet, cx, cy, cfg = setup
-    rf = make_round_fn(model, fleet, cx, cy, cfg, METHODS["rewafl"])
+    rf = round_fns("rewafl")
     params = model.init(jax.random.PRNGKey(0))
     state = init_fleet_state(fleet, H0=cfg.policy.H0)
     key = jax.random.PRNGKey(3)
     losses = []
-    for r in range(6):
+    for r in range(5):
         key, kr = jax.random.split(key)
         params, state, m = rf(params, state, kr, jnp.asarray(r, jnp.int32))
         losses.append(float(m["global_loss"]))
     assert losses[-1] < losses[0]
 
 
-def test_fedavg_identity_when_no_participants(setup):
+def test_fedavg_identity_when_no_participants(setup, round_fns):
     model, fleet, cx, cy, cfg = setup
     state = init_fleet_state(fleet, H0=cfg.policy.H0)
     # everyone dropped -> params must be unchanged
     state = state._replace(dropped=jnp.ones(N, bool))
-    rf = make_round_fn(model, fleet, cx, cy, cfg, METHODS["rewafl"])
+    rf = round_fns("rewafl")
     params = model.init(jax.random.PRNGKey(0))
     p2, _, m = rf(params, state, jax.random.PRNGKey(4),
                   jnp.asarray(0, jnp.int32))
@@ -101,11 +133,12 @@ def test_fedavg_identity_when_no_participants(setup):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
-def test_staleness_self_contained(setup):
+@pytest.mark.slow
+def test_staleness_self_contained(setup, round_fns):
     """REWAFL's Sec. III-D claim: with heterogeneous rates, long-neglected
     devices eventually get selected WITHOUT any explicit staleness bonus."""
     model, fleet, cx, cy, cfg = setup
-    rf = make_round_fn(model, fleet, cx, cy, cfg, METHODS["rewafl"])
+    rf = round_fns("rewafl")
     params = model.init(jax.random.PRNGKey(0))
     state = init_fleet_state(fleet, H0=cfg.policy.H0)
     key = jax.random.PRNGKey(5)

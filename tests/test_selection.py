@@ -37,6 +37,47 @@ def test_epsilon_greedy_mixes_exploit_and_explore():
     assert mask[-18:].all()
 
 
+def test_epsilon_greedy_all_explore_when_k_exploit_rounds_to_zero():
+    """eps high enough that round(eps·K) == K: the exploit half is empty
+    (top_k with k=0) and the full quota comes from random exploration."""
+    key = jax.random.PRNGKey(2)
+    utils = jnp.arange(12.0)
+    avail = jnp.ones(12, bool)
+    for eps in (0.9, 1.0):  # round(0.9*4)=4 and round(1.0*4)=4 -> k_exploit=0
+        mask = np.asarray(S.epsilon_greedy(key, utils, 4, avail, eps=eps))
+        assert mask.sum() == 4
+        assert not (mask & ~np.asarray(avail)).any()
+
+
+def test_epsilon_greedy_fewer_available_than_k():
+    """With < K available devices, select exactly the available ones —
+    never duplicates or unavailable fill."""
+    key = jax.random.PRNGKey(3)
+    utils = jnp.arange(20.0)
+    avail = jnp.zeros(20, bool).at[jnp.array([2, 7, 11])].set(True)
+    mask = np.asarray(S.epsilon_greedy(key, utils, 8, avail, eps=0.25))
+    assert mask.sum() == 3
+    assert mask[[2, 7, 11]].all()
+
+
+def test_top_k_fewer_available_than_k():
+    avail = jnp.zeros(9, bool).at[:2].set(True)
+    mask = np.asarray(S.top_k_select(jnp.arange(9.0), 5, avail))
+    assert mask.sum() == 2 and mask[:2].all()
+
+
+def test_top_k_all_dropped_selects_nothing():
+    """All-dropped fleet: the top-k indices over a fully NEG-masked score
+    vector must not leak through as garbage selections."""
+    utils = jnp.arange(16.0)
+    none = jnp.zeros(16, bool)
+    assert not np.asarray(S.top_k_select(utils, 4, none)).any()
+    assert not np.asarray(S.random_select(jax.random.PRNGKey(0), 4,
+                                          none)).any()
+    assert not np.asarray(S.epsilon_greedy(jax.random.PRNGKey(1), utils, 4,
+                                           none, eps=0.5)).any()
+
+
 def test_temporal_uncertainty_boosts_neglected():
     stat = jnp.array([1.0, 1.0])
     out = np.asarray(S.temporal_uncertainty(
