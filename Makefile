@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test test-all bench-kernels bench dev-deps
+.PHONY: test test-all bench-kernels bench bench-engine dev-deps
 
 # tier-1: fast suite (pytest.ini defaults to -m "not slow")
 test:
@@ -13,6 +13,11 @@ test-all:
 # one-command bench-regression smoke: kernel ops + engine rounds/s
 bench-kernels:
 	$(PY) -m benchmarks.run --only kernels
+
+# engine throughput trajectory: S∈{100,1k,10k} + one dynamic scenario,
+# emits BENCH_engine.json (ROADMAP perf gate)
+bench-engine:
+	$(PY) -m benchmarks.engine_bench
 
 bench:
 	$(PY) -m benchmarks.run

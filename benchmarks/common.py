@@ -34,14 +34,15 @@ def _key(params: Dict) -> str:
 def cached_run(task: str, method: str, *, rounds: int = 50,
                lam: float = 0.8, alpha: float = 1.0, beta: float = 1.0,
                seed: int = 0, target_acc: Optional[float] = None,
-               chunk_size: int = 8, force: bool = False) -> Dict:
+               chunk_size: int = 8, scenario: str = "static-paper",
+               force: bool = False) -> Dict:
     """Run (or load) one FL campaign through the chunked-scan engine;
-    returns a JSON-able summary dict. (v=4: engine-backed campaigns —
-    accuracy/early-stop happens at chunk boundaries, not every 4 rounds.)"""
+    returns a JSON-able summary dict. (v=5: fleet-dynamics scenarios —
+    `scenario` names a sim.dynamics preset and keys the cache.)"""
     target = TARGETS[task] if target_acc is None else target_acc
     params = dict(task=task, method=method, rounds=rounds, lam=lam,
-                  alpha=alpha, beta=beta, seed=seed, target=target, v=4,
-                  chunk=chunk_size)
+                  alpha=alpha, beta=beta, seed=seed, target=target, v=5,
+                  chunk=chunk_size, scenario=scenario)
     os.makedirs(FL_DIR, exist_ok=True)
     path = os.path.join(FL_DIR, f"{task.replace('@','_')}__{method}__"
                                 f"{_key(params)}.json")
@@ -52,7 +53,8 @@ def cached_run(task: str, method: str, *, rounds: int = 50,
     t0 = time.time()
     r = run_fl(task, method, rounds=rounds, lam=lam, alpha=alpha, beta=beta,
                seed=seed, target_acc=target, engine="scan",
-               chunk_size=chunk_size, eval_every=chunk_size)
+               chunk_size=chunk_size, eval_every=chunk_size,
+               scenario=scenario)
     wall = time.time() - t0
     h = r.history
     out = {
@@ -83,13 +85,15 @@ def cached_run(task: str, method: str, *, rounds: int = 50,
 
 def cached_campaign_grid(task: str, methods, seeds, *, rounds: int = 20,
                          lam: float = 0.8, n_clients: int = 100,
-                         chunk_size: int = 8, force: bool = False) -> Dict:
+                         chunk_size: int = 8, scenario: str = "static-paper",
+                         force: bool = False) -> Dict:
     """(seed × method) grid through the vmapped campaign engine: one
     compiled program per method, all seeds batched. Caches per-method
     summary stats (mean/std of final loss, energy, dropout over seeds)."""
     seeds = list(seeds)
     params = dict(task=task, methods=sorted(methods), seeds=seeds,
-                  rounds=rounds, lam=lam, n=n_clients, chunk=chunk_size, v=4)
+                  rounds=rounds, lam=lam, n=n_clients, chunk=chunk_size, v=5,
+                  scenario=scenario)
     os.makedirs(FL_DIR, exist_ok=True)
     path = os.path.join(FL_DIR, f"grid_{task.replace('@','_')}__"
                                 f"{_key(params)}.json")
@@ -101,6 +105,7 @@ def cached_campaign_grid(task: str, methods, seeds, *, rounds: int = 20,
     from repro.launch.fl_run import build_task, quick_cfg
     from repro.models.fl_models import make_fl_model
     from repro.sim.devices import build_fleet
+    from repro.sim.dynamics import get_scenario
     model = make_fl_model(task, small=True)
     fleet = build_fleet(n_clients, seed=0, init_energy_mean=0.11,
                         init_energy_std=0.04, e0_frac=0.08)
@@ -109,7 +114,8 @@ def cached_campaign_grid(task: str, methods, seeds, *, rounds: int = 20,
     grids = run_campaign_grid(model, fleet, cx, cy, quick_cfg(),
                               {m: METHODS[m] for m in methods},
                               seeds=seeds, rounds=rounds,
-                              chunk_size=chunk_size)
+                              chunk_size=chunk_size,
+                              scenario=get_scenario(scenario))
     wall = time.time() - t0
     out = {"params": params, "wall_s": wall,
            "campaign_rounds_s": len(seeds) * len(methods) * rounds / wall,

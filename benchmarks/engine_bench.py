@@ -1,0 +1,108 @@
+"""Scan-engine throughput benchmark -> BENCH_engine.json.
+
+Measures warm compiled-chunk throughput (rounds/s, device-rounds/s) of
+the FL engine at fleet scales S ∈ {100, 1k, 10k} plus one dynamic
+scenario at the largest scale, and writes the machine-readable
+`BENCH_engine.json` the ROADMAP perf trajectory gates on. The dynamic
+row doubles as the dynamics-overhead regression check: `dyn_overhead`
+is the fractional slowdown of commuter-diurnal vs static at S=10k
+(acceptance: < 0.10).
+
+  make bench-engine            # or: python -m benchmarks.engine_bench
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import ROOT, emit
+
+SCALES = (100, 1_000, 10_000)
+DYNAMIC_SCENARIO = "commuter-diurnal"
+OUT_PATH = os.path.join(ROOT, "BENCH_engine.json")
+
+
+def measure_engine(S: int, scenario: str = "static-paper", *,
+                   chunk: int = 0, timed_chunks: int = 1) -> Dict:
+    """One warm compiled chunk at fleet scale S under `scenario`: fixed
+    per-device work (tiny CNN, probe 2, batch 2) so the numbers isolate
+    round dispatch + fleet-axis + dynamics overhead, not model FLOPs."""
+    from repro.core import FLConfig, METHODS, init_fleet_state
+    from repro.core.policy import PolicyCfg
+    from repro.launch.engine import make_chunk_fn
+    from repro.launch.fl_run import build_task
+    from repro.models.fl_models import make_fl_model
+    from repro.sim.devices import build_fleet
+    from repro.sim.dynamics import get_scenario, init_env_state
+
+    scen = get_scenario(scenario)
+    chunk = chunk or (8 if S <= 1_000 else 2)
+    model = make_fl_model("cnn@mnist", small=True)
+    cfg = FLConfig(n_select=20, batch_size=2, probe_size=2, lr=0.05,
+                   uplink_bits=16e6, policy=PolicyCfg(H0=2, H_max=4))
+    fleet = build_fleet(S, seed=0, init_energy_mean=0.3)
+    cx, cy, _ = build_task("cnn@mnist", S, 0.8, per_client=2, n_test=16)
+    ck = make_chunk_fn(model, fleet, cx, cy, cfg, METHODS["rewafl"],
+                       chunk_size=chunk, scenario=scen)
+    params = model.init(jax.random.PRNGKey(0))
+    state = init_fleet_state(fleet, H0=cfg.policy.H0)
+    env = init_env_state(fleet, scen,
+                         key=jax.random.PRNGKey(3) if scen.dynamic else None)
+    key = jax.random.PRNGKey(1)
+    t0 = time.time()
+    out = ck(params, state, env, key, jnp.asarray(0, jnp.int32))  # compile
+    jax.block_until_ready(out[0])
+    compile_s = time.time() - t0
+    t0 = time.time()
+    for i in range(timed_chunks):
+        out = ck(*out[:4], jnp.asarray((i + 1) * chunk, jnp.int32))
+    jax.block_until_ready(out[0])
+    dt = time.time() - t0
+    n_rounds = timed_chunks * chunk
+    return {"S": S, "scenario": scenario, "chunk": chunk,
+            "us_per_round": dt / n_rounds * 1e6,
+            "rounds_s": n_rounds / dt,
+            "device_rounds_s": n_rounds / dt * S,
+            "compile_s": compile_s}
+
+
+def run(scales=SCALES, dynamic_scenario: str = DYNAMIC_SCENARIO):
+    rows = []
+    results: Dict[str, Dict] = {}
+    # 3 timed chunks at the largest scale: its static row doubles as the
+    # paired baseline for the dynamics-overhead ratio (CPU wall-clock
+    # drifts ±20% across a long process, so the ratio needs back-to-back
+    # samples — and the 10k build+compile is too expensive to repeat)
+    for S in scales:
+        r = measure_engine(S, timed_chunks=3 if S == max(scales) else 1)
+        results[f"scan_round_S{S}"] = r
+        rows.append((f"engine/scan_round_S{S}", r["us_per_round"],
+                     f"rounds_s={r['rounds_s']:.2f};"
+                     f"device_rounds_s={r['device_rounds_s']:.0f};"
+                     f"chunk={r['chunk']}"))
+    S = max(scales)
+    static = results[f"scan_round_S{S}"]
+    r = measure_engine(S, dynamic_scenario, timed_chunks=3)
+    results[f"scan_round_S{S}_{dynamic_scenario}"] = r
+    overhead = r["us_per_round"] / static["us_per_round"] - 1.0
+    results["dyn_overhead"] = overhead
+    rows.append((f"engine/scan_round_S{S}_{dynamic_scenario}",
+                 r["us_per_round"],
+                 f"rounds_s={r['rounds_s']:.2f};"
+                 f"dyn_overhead={overhead:+.3f}"))
+    payload = {"bench": "engine", "backend": jax.default_backend(),
+               "results": results}
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=1)
+    emit(rows)
+    print(f"# wrote {OUT_PATH}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -8,7 +8,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit
 from repro.kernels.fedavg import ops as fa_ops, ref as fa_ref
@@ -29,40 +28,27 @@ def _time(fn, *args, n=20):
 
 
 def _engine_rows(rows):
-    """Scan-engine throughput: one warm compiled chunk per fleet scale,
-    fixed per-device work (tiny CNN, probe 2, batch 2) so the numbers
-    isolate round dispatch + fleet-axis scaling, not model FLOPs."""
-    from repro.core import FLConfig, METHODS, init_fleet_state
+    """Scan-engine throughput via benchmarks.engine_bench.measure_engine
+    (one warm compiled chunk per fleet scale) + a vmapped campaign row."""
+    from benchmarks.engine_bench import measure_engine
+    from repro.core import FLConfig, METHODS
     from repro.core.policy import PolicyCfg
-    from repro.launch.engine import make_chunk_fn, run_campaign_batch
+    from repro.launch.engine import run_campaign_batch
     from repro.launch.fl_run import build_task
     from repro.models.fl_models import make_fl_model
     from repro.sim.devices import build_fleet
 
+    for S in ENGINE_SCALES:
+        r = measure_engine(S)
+        rows.append((f"engine/scan_round_S{S}", r["us_per_round"],
+                     f"rounds_s={r['rounds_s']:.2f};"
+                     f"device_rounds_s={r['device_rounds_s']:.0f};"
+                     f"chunk={r['chunk']}"))
+
+    # campaign batching: 4 vmapped seeds on the 100-device fleet
     model = make_fl_model("cnn@mnist", small=True)
     cfg = FLConfig(n_select=20, batch_size=2, probe_size=2, lr=0.05,
                    uplink_bits=16e6, policy=PolicyCfg(H0=2, H_max=4))
-    for S in ENGINE_SCALES:
-        chunk = 8 if S <= 1_000 else 2
-        fleet = build_fleet(S, seed=0, init_energy_mean=0.3)
-        cx, cy, _ = build_task("cnn@mnist", S, 0.8, per_client=2, n_test=16)
-        ck = make_chunk_fn(model, fleet, cx, cy, cfg, METHODS["rewafl"],
-                           chunk_size=chunk)
-        params = model.init(jax.random.PRNGKey(0))
-        state = init_fleet_state(fleet, H0=cfg.policy.H0)
-        key = jax.random.PRNGKey(1)
-        out = ck(params, state, key, jnp.asarray(0, jnp.int32))  # compile
-        jax.block_until_ready(out[0])
-        t0 = time.time()
-        out = ck(*out[:3], jnp.asarray(chunk, jnp.int32))
-        jax.block_until_ready(out[0])
-        dt = time.time() - t0
-        rps = chunk / dt
-        rows.append((f"engine/scan_round_S{S}", dt / chunk * 1e6,
-                     f"rounds_s={rps:.2f};device_rounds_s={rps * S:.0f};"
-                     f"chunk={chunk}"))
-
-    # campaign batching: 4 vmapped seeds on the 100-device fleet
     S, seeds, rounds = 100, (0, 1, 2, 3), 8
     fleet = build_fleet(S, seed=0, init_energy_mean=0.3)
     cx, cy, _ = build_task("cnn@mnist", S, 0.8, per_client=2, n_test=16)

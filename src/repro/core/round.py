@@ -23,8 +23,11 @@ from repro.core.methods import MethodSpec
 from repro.core.state import FleetState
 from repro.models.fl_models import FLModel
 from repro.sim.devices import DeviceFleet
-from repro.sim.energy import round_costs
-from repro.sim.wireless import sample_rates
+from repro.sim.dynamics.channel import effective_rate_mean
+from repro.sim.dynamics.env import EnvState, step_env
+from repro.sim.dynamics.scenarios import Scenario
+from repro.sim.energy import min_round_cost, round_costs
+from repro.sim.wireless import sample_rates, sample_rates_from_mean
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,9 +91,18 @@ def _fedavg(global_params, client_params, weights):
 
 
 def make_round_body(model: FLModel, fleet: DeviceFleet, cx, cy,
-                    cfg: FLConfig, method: MethodSpec):
-    """Returns the *un-jitted* round(params, state, key, round_idx) ->
-    (params', state', metrics). cx/cy: stacked client data (S, n, ...).
+                    cfg: FLConfig, method: MethodSpec,
+                    scenario: Optional[Scenario] = None):
+    """Returns the *un-jitted* round(params, state, env, key, round_idx)
+    -> (params', state', env', metrics). cx/cy: stacked client data
+    (S, n, ...); env: `sim.dynamics.EnvState`.
+
+    `scenario` picks the fleet-dynamics regime (None ≡ static-paper):
+    static scenarios skip every dynamics branch at trace time — identical
+    PRNG stream and numerics to the pre-dynamics simulator, with env
+    carried through untouched. Dynamic scenarios evolve env between
+    rounds (channel migration, charging, churn) and gate selection on
+    `env.online`.
 
     The raw body is what `launch.engine` scans over (`jax.lax.scan`
     re-traces it per chunk); `make_round_fn` is the one-round jitted view
@@ -99,15 +111,24 @@ def make_round_body(model: FLModel, fleet: DeviceFleet, cx, cy,
     S = fleet.n
     K = cfg.n_select
     model_bits = float(cfg.uplink_bits or model.param_bits)
+    dyn = scenario is not None and scenario.dynamic
     pcfg = cfg.policy
     if method.policy == "fixed":
         # fixed-H baselines never exceed H0 — shrink the static loop bound
         cfg = dataclasses.replace(
             cfg, policy=dataclasses.replace(pcfg, H_max=pcfg.H0))
 
-    def round_fn(params, state: FleetState, key, round_idx):
-        k_rate, k_sel, k_train = jax.random.split(key, 3)
-        rates = sample_rates(k_rate, fleet)
+    def round_fn(params, state: FleetState, env: EnvState, key, round_idx):
+        if dyn:
+            k_env, k_rate, k_sel, k_train = jax.random.split(key, 4)
+            env, state = step_env(scenario, fleet, env, state, round_idx,
+                                  k_env, model_bits)
+            rates = sample_rates_from_mean(
+                k_rate, effective_rate_mean(env.channel_good, fleet),
+                fleet.rate_sigma)
+        else:
+            k_rate, k_sel, k_train = jax.random.split(key, 3)
+            rates = sample_rates(k_rate, fleet)
 
         # --- candidate H per policy (Algorithm 1 line 8) -----------------
         g_loss, g_loss_sq = _probe_losses(model, params, cx, cy,
@@ -126,7 +147,8 @@ def make_round_body(model: FLModel, fleet: DeviceFleet, cx, cy,
         costs = round_costs(fleet, H_cand, rates, model_bits)
 
         # --- utilities + selection (lines 13–16) -------------------------
-        available = ~state.dropped
+        # churn gates selection exactly like dropout, but is transient
+        available = (~state.dropped & env.online) if dyn else ~state.dropped
         stat = state.last_stat
         if method.selector == "random":
             selected = sel.random_select(k_sel, K, available)
@@ -200,11 +222,16 @@ def make_round_body(model: FLModel, fleet: DeviceFleet, cx, cy,
                  + (1 - cfg.autofl_ema) * reward_k * 1e3)
         new_q = scatter(state.q_value, q_sel, part_k)
 
-        # permanent dropout: can no longer afford even H=1 + uplink at its
-        # mean rate (paper: depleted devices disabled from participation)
-        min_cost = (fleet.t_iter * fleet.p_compute
-                    + model_bits / jnp.maximum(fleet.rate_mean, 1.0)
-                    * fleet.p_tx)
+        # dropout: can no longer afford even H=1 + uplink at its mean
+        # rate (paper: depleted devices disabled from participation).
+        # Static scenarios: permanent, priced at the build-time mean.
+        # Dynamic scenarios: recoverable — priced at the current
+        # channel's effective mean (matching step_env's recovery rule),
+        # and the next round's `step_env` clears it once charging refills
+        # the battery past the threshold (unavailable_until_charged).
+        min_cost = min_round_cost(
+            fleet, model_bits,
+            effective_rate_mean(env.channel_good, fleet) if dyn else None)
         new_dropped = state.dropped | failed | (
             new_E - fleet.e0_reserve <= min_cost)
 
@@ -228,18 +255,24 @@ def make_round_body(model: FLModel, fleet: DeviceFleet, cx, cy,
             "mean_H_selected": jnp.sum(jnp.where(selected, H_cand, 0)
                                        ) / jnp.maximum(jnp.sum(selected), 1),
             "global_loss": jnp.mean(g_loss),
+            "n_available": jnp.sum(available),
+            "n_charging": jnp.sum(env.charging),
+            "n_online": jnp.sum(env.online),
             "selected": selected,
         }
-        return new_params, new_state, metrics
+        return new_params, new_state, env, metrics
 
     return round_fn
 
 
 def make_round_fn(model: FLModel, fleet: DeviceFleet, cx, cy,
-                  cfg: FLConfig, method: MethodSpec):
-    """Returns jitted round(params, state, key, round_idx) ->
-    (params', state', metrics). cx/cy: stacked client data (S, n, ...)."""
-    return jax.jit(make_round_body(model, fleet, cx, cy, cfg, method))
+                  cfg: FLConfig, method: MethodSpec,
+                  scenario: Optional[Scenario] = None):
+    """Returns jitted round(params, state, env, key, round_idx) ->
+    (params', state', env', metrics). cx/cy: stacked client data
+    (S, n, ...)."""
+    return jax.jit(make_round_body(model, fleet, cx, cy, cfg, method,
+                                   scenario))
 
 
 def make_eval_fn(model: FLModel, test_x, test_y):

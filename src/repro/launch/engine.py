@@ -9,10 +9,13 @@ shardable so 10k–100k-device fleets spread across available devices.
 
 Layers (each usable on its own):
 
-  make_chunk_fn   — jit(scan(round_body, length=chunk)) with a PRNG-key
-                    carry that folds exactly like the sequential loop
+  make_chunk_fn   — jit(scan(round_body, length=chunk)) with a
+                    (params, FleetState, EnvState, key) carry; the key
+                    folds exactly like the sequential loop
                     (`key, kr = split(key)` per round), so engine ≡ loop
-                    to float tolerance.
+                    to float tolerance. EnvState carries the fleet
+                    dynamics (sim.dynamics: Markov channels, charging,
+                    churn) selected by a `Scenario`.
   EngineCfg/run_rounds
                   — chunked driver: runs chunks back-to-back, stacks the
                     per-round history pytree host-side, and early-stops
@@ -42,6 +45,7 @@ from repro.core.state import FleetState, init_fleet_state, replicate_state
 from repro.launch.mesh import make_fleet_mesh
 from repro.models.fl_models import FLModel
 from repro.sim.devices import DeviceFleet
+from repro.sim.dynamics import EnvState, Scenario, init_env_state
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,28 +84,29 @@ def replicate(tree, mesh):
 # ------------------------------------------------------------ chunked scan
 
 def _chunk_body(round_body, length: int, collect_per_device: bool):
-    """R-round scan body: carry (params, state, key); ys = metric pytree.
+    """R-round scan body: carry (params, state, env, key); ys = metric
+    pytree.
 
     PRNG folding matches the sequential driver exactly: one
     `jax.random.split` of the carried key per round.
     """
 
-    def chunk(params, state: FleetState, key, start_round):
+    def chunk(params, state: FleetState, env: EnvState, key, start_round):
         rounds = jnp.arange(length, dtype=jnp.int32) + start_round
 
         def step(carry, r):
-            p, s, k = carry
+            p, s, e, k = carry
             k, kr = jax.random.split(k)
-            p, s, m = round_body(p, s, kr, r)
+            p, s, e, m = round_body(p, s, e, kr, r)
             m = dict(m, H=s.H)
             if not collect_per_device:
                 m.pop("selected")
                 m.pop("H")
-            return (p, s, k), m
+            return (p, s, e, k), m
 
-        (params, state, key), hist = jax.lax.scan(
-            step, (params, state, key), rounds)
-        return params, state, key, hist
+        (params, state, env, key), hist = jax.lax.scan(
+            step, (params, state, env, key), rounds)
+        return params, state, env, key, hist
 
     return chunk
 
@@ -109,14 +114,23 @@ def _chunk_body(round_body, length: int, collect_per_device: bool):
 def make_chunk_fn(model: FLModel, fleet: DeviceFleet, cx, cy,
                   cfg: FLConfig, method: MethodSpec, *,
                   chunk_size: int = 8, collect_per_device: bool = True,
-                  donate: bool = False):
-    """jitted chunk(params, state, key, start_round) ->
-    (params', state', key', history) running `chunk_size` rounds on
+                  donate: bool = False, scenario: Optional[Scenario] = None):
+    """jitted chunk(params, state, env, key, start_round) ->
+    (params', state', env', key', history) running `chunk_size` rounds on
     device. `history` leaves have leading axis chunk_size."""
-    body = make_round_body(model, fleet, cx, cy, cfg, method)
+    body = make_round_body(model, fleet, cx, cy, cfg, method, scenario)
     chunk = _chunk_body(body, chunk_size, collect_per_device)
     donate_argnums = (0, 1) if donate else ()
     return jax.jit(chunk, donate_argnums=donate_argnums)
+
+
+def _empty_history(chunk_fn, args) -> Dict[str, np.ndarray]:
+    """Correctly-keyed zero-round history via abstract tracing (no
+    compile): used when `rounds=0` so callers always get every metric
+    key with a length-0 leading axis."""
+    shapes = jax.eval_shape(chunk_fn, *args)[4]
+    return {k: np.zeros((0,) + tuple(v.shape[1:]), v.dtype)
+            for k, v in shapes.items()}
 
 
 @dataclasses.dataclass
@@ -127,6 +141,7 @@ class EngineResult:
     rounds_run: int
     reached_round: Optional[int]     # first chunk-boundary round ≥ target
     acc_curve: np.ndarray            # one accuracy per completed chunk
+    env: Optional[EnvState] = None   # final environment state
 
 
 def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
@@ -134,11 +149,16 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
                state: Optional[FleetState] = None,
                ecfg: EngineCfg = EngineCfg(),
                eval_fn=None, target_acc: Optional[float] = None,
-               init_key=None) -> EngineResult:
+               init_key=None, scenario: Optional[Scenario] = None,
+               env: Optional[EnvState] = None,
+               env_key=None) -> EngineResult:
     """Chunked multi-round driver. Early-stops on `target_acc` (needs
     `eval_fn`) at chunk boundaries — accuracy is never evaluated inside
     a compiled chunk, so a campaign overshoots the target by at most
-    chunk_size − 1 rounds."""
+    chunk_size − 1 rounds. `scenario` selects the fleet-dynamics regime
+    (None ≡ static-paper); dynamic scenarios draw the initial EnvState
+    from `env_key` (default: fold_in of the loop key — does not perturb
+    the round PRNG stream)."""
     if ecfg.chunk_size < 1:
         raise ValueError(f"chunk_size must be >= 1, got {ecfg.chunk_size}")
     S = fleet.n
@@ -147,11 +167,17 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
                             else jax.random.PRNGKey(0))
     if state is None:
         state = init_fleet_state(fleet, H0=cfg.policy.H0)
+    if env is None:
+        dyn = scenario is not None and scenario.dynamic
+        if dyn and env_key is None:
+            env_key = jax.random.fold_in(key, 0x0d1f)
+        env = init_env_state(fleet, scenario, key=env_key if dyn else None)
 
     if ecfg.fleet_shards and ecfg.fleet_shards > 1:
         mesh = make_fleet_mesh(ecfg.fleet_shards)
         fleet = shard_over_fleet(fleet, mesh, S)
         state = shard_over_fleet(state, mesh, S)
+        env = shard_over_fleet(env, mesh, S)
         cx = shard_over_fleet(cx, mesh, S)
         cy = shard_over_fleet(cy, mesh, S)
         params = replicate(params, mesh)
@@ -163,7 +189,7 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
             chunk_fns[length] = make_chunk_fn(
                 model, fleet, cx, cy, cfg, method, chunk_size=length,
                 collect_per_device=ecfg.collect_per_device,
-                donate=ecfg.donate)
+                donate=ecfg.donate, scenario=scenario)
         return chunk_fns[length]
 
     hists: List = []
@@ -172,8 +198,8 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
     done = 0
     while done < rounds:
         length = min(ecfg.chunk_size, rounds - done)
-        params, state, key, hist = chunk_fn(length)(
-            params, state, key, jnp.asarray(done, jnp.int32))
+        params, state, env, key, hist = chunk_fn(length)(
+            params, state, env, key, jnp.asarray(done, jnp.int32))
         hists.append(jax.device_get(hist))
         done += length
         if eval_fn is not None:
@@ -182,11 +208,17 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
             if target_acc is not None and acc >= target_acc:
                 reached = done - 1
                 break
-    history = {k: np.concatenate([np.asarray(h[k]) for h in hists])
-               for k in hists[0]}
+    if hists:
+        history = {k: np.concatenate([np.asarray(h[k]) for h in hists])
+                   for k in hists[0]}
+    else:  # rounds=0: empty but correctly-keyed history
+        history = _empty_history(
+            chunk_fn(1), (params, state, env, key,
+                          jnp.asarray(0, jnp.int32)))
     return EngineResult(params=params, state=state, history=history,
                         rounds_run=done, reached_round=reached,
-                        acc_curve=np.asarray(acc_curve, np.float64))
+                        acc_curve=np.asarray(acc_curve, np.float64),
+                        env=env)
 
 
 # ------------------------------------------------------- campaign batching
@@ -195,25 +227,33 @@ def run_campaign_batch(model: FLModel, fleet: DeviceFleet, cx, cy,
                        cfg: FLConfig, method: MethodSpec, *,
                        seeds: Sequence[int], rounds: int,
                        chunk_size: int = 8,
-                       collect_per_device: bool = False) -> Dict[str, np.ndarray]:
+                       collect_per_device: bool = False,
+                       scenario: Optional[Scenario] = None) -> Dict[str, np.ndarray]:
     """vmap independent campaigns over the seed axis: one shared fleet and
     dataset, per-seed init params and PRNG streams (the key derivation
     matches run_fl's `PRNGKey(seed+2)` init / `PRNGKey(seed+1)` loop-key
-    convention). NOTE: unlike per-seed `run_fl` calls — which rebuild the
-    fleet and dataset with `seed` — the batch varies only initialisation
-    and round randomness, so cross-seed variance here excludes fleet/data
-    heterogeneity and results differ from `run_fl(seed=s)` for the same s.
+    / `PRNGKey(seed+3)` env convention). NOTE: unlike per-seed `run_fl`
+    calls — which rebuild the fleet and dataset with `seed` — the batch
+    varies only initialisation and round randomness, so cross-seed
+    variance here excludes fleet/data heterogeneity and results differ
+    from `run_fl(seed=s)` for the same s.
     Returns history with leading axes (n_seeds, rounds)."""
     if chunk_size < 1:
         raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
-    body = make_round_body(model, fleet, cx, cy, cfg, method)
+    body = make_round_body(model, fleet, cx, cy, cfg, method, scenario)
     B = len(seeds)
     chunk = _chunk_body(body, chunk_size, collect_per_device)
-    batched = jax.jit(jax.vmap(chunk, in_axes=(0, 0, 0, None)))
+    in_axes = (0, 0, 0, 0, None)
+    batched = jax.jit(jax.vmap(chunk, in_axes=in_axes))
 
     params = jax.vmap(model.init)(
         jnp.stack([jax.random.PRNGKey(s + 2) for s in seeds]))
     state = replicate_state(init_fleet_state(fleet, H0=cfg.policy.H0), B)
+    if scenario is not None and scenario.dynamic:
+        env = jax.vmap(lambda k: init_env_state(fleet, scenario, key=k))(
+            jnp.stack([jax.random.PRNGKey(s + 3) for s in seeds]))
+    else:
+        env = replicate_state(init_env_state(fleet, scenario), B)
     keys = jnp.stack([jax.random.PRNGKey(s + 1) for s in seeds])
 
     hists: List = []
@@ -223,13 +263,20 @@ def run_campaign_batch(model: FLModel, fleet: DeviceFleet, cx, cy,
         if length != chunk_size:  # remainder chunk: separate trace
             batched = jax.jit(jax.vmap(
                 _chunk_body(body, length, collect_per_device),
-                in_axes=(0, 0, 0, None)))
-        params, state, keys, hist = batched(
-            params, state, keys, jnp.asarray(done, jnp.int32))
+                in_axes=in_axes))
+        params, state, env, keys, hist = batched(
+            params, state, env, keys, jnp.asarray(done, jnp.int32))
         hists.append(jax.device_get(hist))
         done += length
-    history = {k: np.concatenate([np.asarray(h[k]) for h in hists], axis=1)
-               for k in hists[0]}
+    if hists:
+        history = {k: np.concatenate([np.asarray(h[k]) for h in hists],
+                                     axis=1)
+                   for k in hists[0]}
+    else:  # rounds=0: empty but correctly-keyed (n_seeds, 0, ...) history
+        shapes = jax.eval_shape(batched, params, state, env, keys,
+                                jnp.asarray(0, jnp.int32))[4]
+        history = {k: np.zeros((B, 0) + tuple(v.shape[2:]), v.dtype)
+                   for k, v in shapes.items()}
     history["final_residual_energy"] = np.asarray(state.residual_energy)
     history["final_H"] = np.asarray(state.H)
     return history
@@ -238,11 +285,14 @@ def run_campaign_batch(model: FLModel, fleet: DeviceFleet, cx, cy,
 def run_campaign_grid(model: FLModel, fleet: DeviceFleet, cx, cy,
                       cfg: FLConfig, methods: Dict[str, MethodSpec], *,
                       seeds: Sequence[int], rounds: int,
-                      chunk_size: int = 8) -> Dict[str, Dict[str, np.ndarray]]:
+                      chunk_size: int = 8,
+                      scenario: Optional[Scenario] = None
+                      ) -> Dict[str, Dict[str, np.ndarray]]:
     """(seed × method) benchmark grid: methods differ structurally (python
     branches in the round body), so they compile separately; the seed axis
     of each method is a single vmapped program."""
     return {name: run_campaign_batch(model, fleet, cx, cy, cfg, spec,
                                      seeds=seeds, rounds=rounds,
-                                     chunk_size=chunk_size)
+                                     chunk_size=chunk_size,
+                                     scenario=scenario)
             for name, spec in methods.items()}

@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core import FLConfig, METHODS, init_fleet_state, make_eval_fn, make_round_fn
 from repro.data.partition import client_datasets
+from repro.sim.dynamics import SCENARIOS, get_scenario, init_env_state
 from repro.data.synthetic import (CHAR_VOCAB, make_char_dataset,
                                   make_har_dataset, make_image_dataset)
 from repro.models.fl_models import make_fl_model
@@ -83,7 +84,8 @@ def quick_cfg(n_select: int = 20, alpha: float = 1.0,
 
 
 HIST_KEYS = ("round_latency", "round_energy", "n_dropped",
-             "n_participating", "n_failed", "mean_H_selected", "global_loss")
+             "n_participating", "n_failed", "mean_H_selected", "global_loss",
+             "n_available", "n_charging", "n_online")
 
 
 def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
@@ -94,7 +96,8 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
            fl_cfg: Optional[FLConfig] = None, fleet_kwargs: Optional[dict] = None,
            eval_every: int = 5, verbose: bool = False,
            engine: str = "scan", chunk_size: int = 8,
-           fleet_shards: Optional[int] = None) -> RunResult:
+           fleet_shards: Optional[int] = None,
+           scenario: str = "static-paper") -> RunResult:
     """Run one FL campaign.
 
     engine="scan" (default) runs rounds in compiled `lax.scan` chunks via
@@ -104,8 +107,15 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
     is the legacy one-dispatch-per-round driver evaluating every
     `eval_every` rounds; both fold PRNG keys identically, so they agree
     to float tolerance round-for-round.
+
+    `scenario` names a `sim.dynamics` fleet-dynamics preset (see
+    `SCENARIOS`): "static-paper" (default) is the seed simulator
+    bit-for-bit; dynamic presets (commuter-diurnal, congested-urban,
+    overnight-charging, churn-heavy) evolve wireless environments,
+    charging batteries, and availability between rounds.
     """
     model = make_fl_model(task, small=small)
+    scen = get_scenario(scenario)
     # benchmark-scale default: the paper's low-initial-battery regime
     # (Fig. 1 / Fig. 4 use 6–30 kJ initial energies, not full batteries)
     fkw = {"init_energy_mean": 0.11, "init_energy_std": 0.04, "e0_frac": 0.08}
@@ -131,7 +141,8 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
             key=jax.random.PRNGKey(seed + 1),
             params=model.init(jax.random.PRNGKey(seed + 2)),
             ecfg=EngineCfg(chunk_size=chunk_size, fleet_shards=fleet_shards),
-            eval_fn=eval_fn, target_acc=target_acc)
+            eval_fn=eval_fn, target_acc=target_acc,
+            scenario=scen, env_key=jax.random.PRNGKey(seed + 3))
         h = res.history
         state, params = res.state, res.params
         if verbose:
@@ -154,15 +165,19 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
             final_state=state,
             overall_latency_s=float(np.sum(h["round_latency"])),
             overall_energy_j=float(np.sum(h["round_energy"])),
-            dropout_ratio=float(h["n_dropped"][-1]) / n_clients,
+            dropout_ratio=(float(h["n_dropped"][-1]) / n_clients
+                           if res.rounds_run else 0.0),
             acc_curve=res.acc_curve, final_params=params)
     if engine != "loop":
         raise ValueError(f"unknown engine {engine!r} (use 'scan' or 'loop')")
 
-    round_fn = make_round_fn(model, fleet, cx, cy, cfg, spec)
+    round_fn = make_round_fn(model, fleet, cx, cy, cfg, spec, scen)
     key = jax.random.PRNGKey(seed + 1)
     params = model.init(jax.random.PRNGKey(seed + 2))
     state = init_fleet_state(fleet, H0=cfg.policy.H0)
+    env = init_env_state(fleet, scen,
+                         key=jax.random.PRNGKey(seed + 3)
+                         if scen.dynamic else None)
 
     hist: Dict[str, List] = {k: [] for k in HIST_KEYS}
     sel_count = np.zeros(n_clients, np.int64)
@@ -172,11 +187,12 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
     cum_lat = cum_energy = 0.0
     stop_lat = stop_energy = None
     stop_drop = None
+    r = -1  # rounds=0: loop never runs, rounds_run must come out 0
 
     for r in range(rounds):
         key, kr = jax.random.split(key)
-        params, state, m = round_fn(params, state, kr,
-                                    jnp.asarray(r, jnp.int32))
+        params, state, env, m = round_fn(params, state, env, kr,
+                                         jnp.asarray(r, jnp.int32))
         for k in hist:
             hist[k].append(float(m[k]))
         sel_count += np.asarray(m["selected"])
@@ -198,7 +214,8 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
                 break
     if stop_lat is None:
         stop_lat, stop_energy = cum_lat, cum_energy
-        stop_drop = hist["n_dropped"][-1] / n_clients
+        stop_drop = (hist["n_dropped"][-1] / n_clients
+                     if hist["n_dropped"] else 0.0)
     return RunResult(
         task=task, method=method, rounds_run=r + 1, reached_round=reached,
         target_acc=target_acc,
@@ -229,6 +246,8 @@ def main() -> None:
     ap.add_argument("--engine", default="scan", choices=("scan", "loop"))
     ap.add_argument("--chunk-size", type=int, default=8)
     ap.add_argument("--fleet-shards", type=int, default=None)
+    ap.add_argument("--scenario", default="static-paper",
+                    choices=sorted(SCENARIOS))
     args = ap.parse_args()
     t0 = time.time()
     res = run_fl(args.task, args.method, rounds=args.rounds,
@@ -236,9 +255,10 @@ def main() -> None:
                  target_acc=args.target_acc, alpha=args.alpha,
                  beta=args.beta, seed=args.seed, verbose=True,
                  engine=args.engine, chunk_size=args.chunk_size,
-                 fleet_shards=args.fleet_shards)
+                 fleet_shards=args.fleet_shards, scenario=args.scenario)
     print(json.dumps({
         "task": res.task, "method": res.method,
+        "scenario": args.scenario,
         "rounds": res.rounds_run, "reached_round": res.reached_round,
         "dropout_ratio": res.dropout_ratio,
         "overall_latency_h": res.overall_latency_s / 3600,

@@ -1,3 +1,5 @@
 from repro.sim.devices import DeviceFleet, build_fleet, DEVICE_CATALOG  # noqa: F401
-from repro.sim.wireless import sample_rates  # noqa: F401
-from repro.sim.energy import round_costs, RoundCosts  # noqa: F401
+from repro.sim.wireless import sample_rates, sample_rates_from_mean  # noqa: F401
+from repro.sim.energy import round_costs, RoundCosts, min_round_cost  # noqa: F401
+from repro.sim.dynamics import (EnvState, SCENARIOS, Scenario,  # noqa: F401
+                                get_scenario, init_env_state, step_env)

@@ -63,8 +63,10 @@ class DeviceFleet(NamedTuple):
     p_tx: jax.Array          # f32 W
     battery_j: jax.Array     # f32 capacity
     init_energy: jax.Array   # f32 initial residual energy (J)
-    rate_mean: jax.Array     # f32 mean uplink bps (env-assigned)
+    rate_mean: jax.Array     # f32 mean uplink bps (build-time env)
     rate_sigma: jax.Array    # f32 lognormal sigma of per-round fading
+    rate_high: jax.Array     # f32 bps — good-environment mean (type const)
+    rate_low: jax.Array      # f32 bps — poor-environment mean (type const)
     e0_reserve: jax.Array    # f32 reserve energy threshold E0 (J)
     data_size: jax.Array     # int32 |B_i|
 
@@ -80,13 +82,15 @@ def build_fleet(n_devices: int = 100, *, seed: int = 0,
                 init_energy_std: float = 0.25,
                 data_size: int = 500,
                 rate_sigma: float = 0.3) -> DeviceFleet:
-    """Paper fleet: n/5 of each type; initial battery ~ clipped normal over
-    the capacity range; half the devices in a poor transmission env."""
+    """Paper fleet: n/5 of each type (a remainder round-robins over the
+    catalog, so arbitrary sizes — e.g. S=128 sharding grids — build);
+    initial battery ~ clipped normal over the capacity range; half the
+    devices in a poor transmission env."""
     rng = np.random.RandomState(seed)
     n_types = len(TYPE_ORDER)
-    assert n_devices % n_types == 0, "fleet size must divide by 5 types"
-    per = n_devices // n_types
-    type_id = np.repeat(np.arange(n_types), per)
+    per, rem = divmod(n_devices, n_types)
+    type_id = np.concatenate([np.repeat(np.arange(n_types), per),
+                              np.arange(rem)])
 
     def gather(attr):
         return np.array([getattr(DEVICE_CATALOG[TYPE_ORDER[t]], attr)
@@ -107,6 +111,8 @@ def build_fleet(n_devices: int = 100, *, seed: int = 0,
         init_energy=jnp.asarray(battery * init_frac, jnp.float32),
         rate_mean=jnp.asarray(rate, jnp.float32),
         rate_sigma=jnp.full((n_devices,), rate_sigma, jnp.float32),
+        rate_high=jnp.asarray(gather("rate_high")),
+        rate_low=jnp.asarray(gather("rate_low")),
         e0_reserve=jnp.asarray(battery * e0_frac, jnp.float32),
         data_size=jnp.asarray(sizes, jnp.int32),
     )

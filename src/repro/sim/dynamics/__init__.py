@@ -1,0 +1,13 @@
+"""Fleet dynamics: the time-varying world under the PS loop.
+
+  env.py          — EnvState pytree + init/step (scan/vmap/shard-safe)
+  channel.py      — Gilbert–Elliott good/bad wireless environments
+  battery.py      — diurnal charging sessions, drain, recoverable drop
+  availability.py — online/offline churn with diurnal bias
+  diurnal.py      — shared sim clock / day-night weighting
+  scenarios.py    — named `Scenario` registry (static-paper, …)
+"""
+from repro.sim.dynamics.env import EnvState, init_env_state, step_env  # noqa: F401
+from repro.sim.dynamics.channel import effective_rate_mean  # noqa: F401
+from repro.sim.dynamics.scenarios import (SCENARIOS, STATIC_PAPER,  # noqa: F401
+                                          Scenario, get_scenario, register)

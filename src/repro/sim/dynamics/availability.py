@@ -1,0 +1,21 @@
+"""Availability churn: per-device online/offline Markov process.
+
+Mobile clients leave mid-campaign (app closed, network lost, device in
+use) and return later — AutoFL's stochastic-participation axis. Offline
+devices are excluded from selection exactly like `dropped` ones, but the
+state is transient: the Markov chain brings them back, with diurnal bias
+(devices tend to be idle-and-available at night, busy by day).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.sim.dynamics.diurnal import diurnal_markov_step
+
+
+def online_step(key: jax.Array, online: jax.Array, tod_h: jax.Array,
+                sc) -> jax.Array:
+    """Diurnal online/offline Markov transition: (S,) bool -> (S,) bool."""
+    return diurnal_markov_step(key, online, tod_h,
+                               sc.p_online_day, sc.p_online_night,
+                               sc.p_offline_day, sc.p_offline_night)

@@ -1,0 +1,47 @@
+"""Charging sessions and background drain.
+
+Arouj et al. (2022) show charge/usage patterns dominate which clients
+are selectable: batteries must be able to *recover*. The plug state is a
+diurnal two-state Markov process (plug-in probability peaks at night);
+while plugged, a device gains `charge_c_per_hour` of its capacity per
+hour; all devices pay a background non-FL drain. Depleted devices become
+`unavailable_until_charged` — the recovery rule clears `dropped` once a
+charging device holds enough energy for `recover_rounds` minimal rounds
+above its reserve (hysteresis so it does not flap at the threshold).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sim.devices import DeviceFleet
+from repro.sim.dynamics.diurnal import diurnal_markov_step
+
+
+def plug_step(key: jax.Array, charging: jax.Array, tod_h: jax.Array,
+              sc) -> jax.Array:
+    """Diurnal plug-in/unplug Markov transition: (S,) bool -> (S,) bool."""
+    return diurnal_markov_step(key, charging, tod_h,
+                               sc.plug_on_day, sc.plug_on_night,
+                               sc.plug_off_day, sc.plug_off_night)
+
+
+def charge_and_drain(energy: jax.Array, charging: jax.Array,
+                     fleet: DeviceFleet, sc) -> jax.Array:
+    """Integrate one round of charging + background drain, clipped to
+    [0, capacity]: (S,) J -> (S,) J."""
+    dt_s = sc.minutes_per_round * 60.0
+    gain = jnp.where(charging,
+                     sc.charge_c_per_hour * fleet.battery_j * (dt_s / 3600.0),
+                     0.0)
+    return jnp.clip(energy + gain - sc.idle_drain_w * dt_s,
+                    0.0, fleet.battery_j)
+
+
+def recovery_step(dropped: jax.Array, charging: jax.Array,
+                  energy: jax.Array, fleet: DeviceFleet,
+                  min_cost: jax.Array, sc) -> jax.Array:
+    """Clear `dropped` for charging devices holding `recover_rounds`
+    minimal-round budgets above reserve: (S,) bool -> (S,) bool."""
+    funded = energy - fleet.e0_reserve > sc.recover_rounds * min_cost
+    return dropped & ~(charging & funded)

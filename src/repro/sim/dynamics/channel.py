@@ -1,0 +1,28 @@
+"""Gilbert–Elliott wireless environment: per-device good/bad Markov state.
+
+The seed model pinned each device to a high- or low-rate environment at
+build time (`devices.build_fleet`); here devices *migrate* between the
+paper's two environments with configurable per-round transition rates.
+The per-round lognormal fading (`sim.wireless`) still rides on top of
+whichever mean the channel state selects.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sim.devices import DeviceFleet
+
+
+def channel_step(key: jax.Array, good: jax.Array,
+                 p_good_to_bad: float, p_bad_to_good: float) -> jax.Array:
+    """One Markov transition for every device: (S,) bool -> (S,) bool."""
+    u = jax.random.uniform(key, good.shape)
+    stay_good = good & (u >= p_good_to_bad)
+    recover = ~good & (u < p_bad_to_good)
+    return stay_good | recover
+
+
+def effective_rate_mean(good: jax.Array, fleet: DeviceFleet) -> jax.Array:
+    """(S,) bps mean selected by the current channel state."""
+    return jnp.where(good, fleet.rate_high, fleet.rate_low)

@@ -1,0 +1,41 @@
+"""Shared diurnal clock for the fleet-dynamics processes.
+
+Sim time advances `Scenario.minutes_per_round` per FL round; each device
+carries a phase offset (commute schedule / timezone), so the fleet's
+plug-in and availability waves are staggered rather than synchronized.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def time_of_day(round_idx: jax.Array, minutes_per_round: float,
+                phase_h: jax.Array) -> jax.Array:
+    """(S,) hours in [0, 24): global round clock + per-device phase."""
+    h = jnp.asarray(round_idx, jnp.float32) * (minutes_per_round / 60.0)
+    return jnp.mod(h + phase_h, 24.0)
+
+
+def night_weight(tod_h: jax.Array) -> jax.Array:
+    """Smooth night indicator in [0, 1]: 1 at midnight, 0 at noon."""
+    return 0.5 * (1.0 + jnp.cos(2.0 * jnp.pi * tod_h / 24.0))
+
+
+def diurnal(day_val: float, night_val: float, tod_h: jax.Array) -> jax.Array:
+    """Interpolate a per-round probability between its day/night values."""
+    w = night_weight(tod_h)
+    return day_val + (night_val - day_val) * w
+
+
+def diurnal_markov_step(key: jax.Array, state: jax.Array, tod_h: jax.Array,
+                        p_on_day: float, p_on_night: float,
+                        p_off_day: float, p_off_night: float) -> jax.Array:
+    """One transition of a diurnal two-state Markov chain, shared by the
+    plug (battery) and online (availability) processes:
+    (S,) bool -> (S,) bool with off->on prob p_on and on->off prob p_off,
+    each interpolated between its day/night value."""
+    p_on = diurnal(p_on_day, p_on_night, tod_h)
+    p_off = diurnal(p_off_day, p_off_night, tod_h)
+    u = jax.random.uniform(key, state.shape)
+    return jnp.where(state, u >= p_off, u < p_on)

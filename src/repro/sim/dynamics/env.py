@@ -1,0 +1,94 @@
+"""EnvState: the fleet's environment pytree, evolved between rounds.
+
+Carried through `core.round.make_round_body` and `launch.engine`
+alongside `FleetState`. Every transition is a pure
+`(EnvState, key) -> EnvState`-style (S,)-array map, so the whole step
+jits/scans/vmaps/shards exactly like the round body (the engine sharding
+layer places every leaf on the fleet mesh).
+
+Static scenarios carry a trivial constant EnvState (all-good channel,
+nobody charging, everyone online) and never call `step_env`, preserving
+the seed simulator's PRNG stream and semantics bit-for-bit.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sim.devices import DeviceFleet
+from repro.sim.dynamics.availability import online_step
+from repro.sim.dynamics.battery import (charge_and_drain, plug_step,
+                                        recovery_step)
+from repro.sim.dynamics.channel import channel_step, effective_rate_mean
+from repro.sim.dynamics.diurnal import time_of_day
+from repro.sim.dynamics.scenarios import Scenario
+from repro.sim.energy import min_round_cost
+
+
+class EnvState(NamedTuple):
+    channel_good: jax.Array  # bool (S,) — Gilbert–Elliott env state
+    charging: jax.Array      # bool (S,) — plugged in this round
+    online: jax.Array        # bool (S,) — reachable / willing this round
+    phase_h: jax.Array       # f32 (S,) — per-device diurnal phase (hours)
+
+
+def init_env_state(fleet: DeviceFleet, scenario: Optional[Scenario] = None,
+                   key: Optional[jax.Array] = None) -> EnvState:
+    """Fresh environment. Static scenarios need no key (the constant env
+    is never read); dynamic ones draw initial channel/plug/online states
+    and diurnal phases from `key`."""
+    S = fleet.n
+    if scenario is None or scenario.static:
+        return EnvState(
+            channel_good=jnp.ones((S,), bool),
+            charging=jnp.zeros((S,), bool),
+            online=jnp.ones((S,), bool),
+            phase_h=jnp.zeros((S,), jnp.float32),
+        )
+    if key is None:
+        raise ValueError(f"scenario {scenario.name!r} is dynamic: "
+                         "init_env_state needs a PRNG key")
+    kc, kp, ko, kf = jax.random.split(key, 4)
+    if scenario.frac_good0 is None:
+        # inherit the fleet's build-time high/low assignment
+        good0 = fleet.rate_mean >= fleet.rate_high
+    else:
+        good0 = jax.random.uniform(kc, (S,)) < scenario.frac_good0
+    return EnvState(
+        channel_good=good0,
+        charging=jax.random.uniform(kp, (S,)) < scenario.frac_charging0,
+        online=jax.random.uniform(ko, (S,)) < scenario.frac_online0,
+        phase_h=jax.random.uniform(kf, (S,)) * scenario.phase_spread_h,
+    )
+
+
+def step_env(scenario: Scenario, fleet: DeviceFleet, env: EnvState,
+             state, round_idx: jax.Array, key: jax.Array,
+             model_bits: float):
+    """One inter-round dynamics transition (dynamic scenarios only).
+
+    Returns (env', state'): Markov-steps channel/plug/online, integrates
+    charging + background drain into `state.residual_energy`, and clears
+    `state.dropped` for recovered devices (recoverable dropout). The
+    recovery threshold prices the minimal round at the *new* channel
+    state's effective rate, so a device in a bad cell must bank enough
+    for its actual (expensive) uplink before rejoining.
+    """
+    k_ch, k_plug, k_on = jax.random.split(key, 3)
+    tod = time_of_day(round_idx, scenario.minutes_per_round, env.phase_h)
+    good = channel_step(k_ch, env.channel_good,
+                        scenario.p_good_to_bad, scenario.p_bad_to_good)
+    charging = plug_step(k_plug, env.charging, tod, scenario)
+    online = online_step(k_on, env.online, tod, scenario)
+    energy = charge_and_drain(state.residual_energy, charging, fleet,
+                              scenario)
+    min_cost = min_round_cost(fleet, model_bits,
+                              effective_rate_mean(good, fleet))
+    dropped = recovery_step(state.dropped, charging, energy, fleet,
+                            min_cost, scenario)
+    new_env = EnvState(channel_good=good, charging=charging, online=online,
+                       phase_h=env.phase_h)
+    new_state = state._replace(residual_energy=energy, dropped=dropped)
+    return new_env, new_state

@@ -1,0 +1,120 @@
+"""Named fleet-dynamics scenarios.
+
+A `Scenario` is a frozen bundle of transition rates for the three
+dynamics processes (wireless channel, charging, availability) plus the
+sim clock. `static-paper` reproduces the seed simulator bit-for-bit:
+the round body skips every dynamics branch at trace time, so the PRNG
+stream, traced program, and results are identical to pre-dynamics code.
+
+Adding a scenario: construct a `Scenario` with a new name and register
+it in `SCENARIOS` (or call `register`); it is immediately selectable via
+`run_fl --scenario <name>` and the benchmark grids. See
+`docs/dynamics.md` for the knob-by-knob guide.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    # static=True short-circuits every dynamics branch (trace-time python
+    # flag): exact seed-simulator semantics, permanent dropout included.
+    static: bool = False
+    minutes_per_round: float = 2.0   # sim-clock advance per FL round
+    phase_spread_h: float = 6.0      # per-device diurnal phase offset range
+
+    # --- wireless: Gilbert–Elliott channel (per-round transition probs)
+    p_good_to_bad: float = 0.05
+    p_bad_to_good: float = 0.10
+    # initial good fraction; None inherits the fleet's build-time
+    # high/low-rate assignment (continuity with the static model)
+    frac_good0: Optional[float] = None
+
+    # --- battery: diurnal charging sessions + background non-FL drain
+    charge_c_per_hour: float = 0.5   # capacity fraction gained per hour
+    idle_drain_w: float = 0.2        # W, always-on background drain
+    plug_on_day: float = 0.02        # per-round plug-in prob (noon)
+    plug_on_night: float = 0.25      # per-round plug-in prob (midnight)
+    plug_off_day: float = 0.25
+    plug_off_night: float = 0.02
+    frac_charging0: float = 0.1
+    recover_rounds: float = 2.0      # min-round budgets needed to rejoin
+
+    # --- availability churn: diurnal online/offline process
+    p_online_day: float = 0.20       # offline->online per-round prob
+    p_online_night: float = 0.30
+    p_offline_day: float = 0.05      # online->offline per-round prob
+    p_offline_night: float = 0.02
+    frac_online0: float = 0.9
+
+    @property
+    def dynamic(self) -> bool:
+        return not self.static
+
+
+STATIC_PAPER = Scenario(name="static-paper", static=True)
+
+SCENARIOS: Dict[str, Scenario] = {}
+
+
+def register(sc: Scenario) -> Scenario:
+    SCENARIOS[sc.name] = sc
+    return sc
+
+
+register(STATIC_PAPER)
+
+# Defaults above = commuter-diurnal: moderate channel migration, evening
+# plug-ins, mild daytime churn — a phone commuting between the paper's
+# high-rate (home/office Wi-Fi) and low-rate (transit 5G edge) cells.
+register(Scenario(name="commuter-diurnal"))
+
+# Dense-city interference: the channel flips fast and is biased bad
+# (AutoFL's high-variance co-running/interference regime), charging is
+# scarce and drain is high — selection must chase a moving target.
+register(Scenario(
+    name="congested-urban",
+    p_good_to_bad=0.25, p_bad_to_good=0.10,
+    plug_on_day=0.01, plug_on_night=0.08,
+    plug_off_day=0.40, plug_off_night=0.15,
+    idle_drain_w=0.5, charge_c_per_hour=0.3, frac_charging0=0.05,
+    p_offline_day=0.10, p_offline_night=0.06,
+    p_online_day=0.15, p_online_night=0.20, frac_online0=0.8))
+
+# Arouj-style overnight regime: almost everyone charges at night and is
+# online-idle, so depleted devices come back each morning — the scenario
+# where recoverable dropout matters most.
+register(Scenario(
+    name="overnight-charging",
+    p_good_to_bad=0.02, p_bad_to_good=0.08,
+    plug_on_day=0.02, plug_on_night=0.60,
+    plug_off_day=0.50, plug_off_night=0.02,
+    charge_c_per_hour=0.8, idle_drain_w=0.15, frac_charging0=0.2,
+    p_offline_day=0.03, p_offline_night=0.01,
+    p_online_day=0.30, p_online_night=0.50, frac_online0=0.95))
+
+# Aggressive availability churn with little diurnal structure: devices
+# hop on/off every few rounds — stresses selector robustness to a fleet
+# whose candidate set is reshuffled under it.
+register(Scenario(
+    name="churn-heavy",
+    phase_spread_h=24.0,
+    p_good_to_bad=0.10, p_bad_to_good=0.15,
+    plug_on_day=0.10, plug_on_night=0.15,
+    plug_off_day=0.15, plug_off_night=0.10,
+    p_offline_day=0.30, p_offline_night=0.25,
+    p_online_day=0.35, p_online_night=0.35, frac_online0=0.6))
+
+
+def get_scenario(name: Optional[str]) -> Scenario:
+    """Resolve a scenario by name; None means static-paper."""
+    if name is None:
+        return STATIC_PAPER
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise ValueError(f"unknown scenario {name!r} — "
+                         f"choose from {sorted(SCENARIOS)}") from None

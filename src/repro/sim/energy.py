@@ -27,6 +27,19 @@ class RoundCosts(NamedTuple):
     e_comm: jax.Array
 
 
+def min_round_cost(fleet: DeviceFleet, model_bits: float,
+                   rate_mean=None) -> jax.Array:
+    """(S,) J for the cheapest possible round (H=1, mean-rate uplink) —
+    the feasibility floor shared by the drop rule in `core.round` and
+    the recovery rule in `sim.dynamics.battery`. `rate_mean` overrides
+    the build-time mean (dynamic scenarios pass the channel-migrated
+    effective mean so drop/recovery track the device's current cell)."""
+    if rate_mean is None:
+        rate_mean = fleet.rate_mean
+    return (fleet.t_iter * fleet.p_compute
+            + model_bits / jnp.maximum(rate_mean, 1.0) * fleet.p_tx)
+
+
 def round_costs(fleet: DeviceFleet, H: jax.Array, rates: jax.Array,
                 model_bits: float) -> RoundCosts:
     t_comp = H.astype(jnp.float32) * fleet.t_iter

@@ -9,8 +9,20 @@ import jax.numpy as jnp
 from repro.sim.devices import DeviceFleet
 
 
+def lognormal_fading(key: jax.Array, sigma: jax.Array) -> jax.Array:
+    """(S,) unit-mean multiplicative fading: exp(σ·ε − σ²/2)."""
+    eps = jax.random.normal(key, sigma.shape)
+    return jnp.exp(sigma * eps - 0.5 * sigma ** 2)
+
+
+def sample_rates_from_mean(key: jax.Array, mean: jax.Array,
+                           sigma: jax.Array) -> jax.Array:
+    """(S,) bps around an arbitrary per-round mean — the dynamics layer
+    (`sim.dynamics.channel`) moves the mean between the paper's high/low
+    environments, the fading here stays the paper's lognormal."""
+    return mean * lognormal_fading(key, sigma)
+
+
 def sample_rates(key: jax.Array, fleet: DeviceFleet) -> jax.Array:
     """(S,) bps for this round: rate_mean * lognormal(sigma)."""
-    eps = jax.random.normal(key, fleet.rate_mean.shape)
-    fading = jnp.exp(fleet.rate_sigma * eps - 0.5 * fleet.rate_sigma ** 2)
-    return fleet.rate_mean * fading
+    return sample_rates_from_mean(key, fleet.rate_mean, fleet.rate_sigma)

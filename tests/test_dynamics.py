@@ -1,0 +1,289 @@
+"""Fleet-dynamics subsystem tests: scenario registry, static-paper
+parity (golden pre-dynamics values + bitwise static≡None), Markov
+transition invariants, battery bounds/recovery, availability gating, and
+end-to-end dynamic runs through the scan engine."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FLConfig, METHODS
+from repro.core.policy import PolicyCfg
+from repro.launch import engine as eng
+from repro.launch.fl_run import build_task, run_fl
+from repro.models.fl_models import make_fl_model
+from repro.sim.devices import build_fleet
+from repro.sim.dynamics import (SCENARIOS, Scenario, get_scenario,
+                                init_env_state, step_env)
+from repro.sim.dynamics.battery import charge_and_drain
+from repro.sim.dynamics.channel import channel_step, effective_rate_mean
+from repro.sim.dynamics.diurnal import night_weight, time_of_day
+
+N, K = 10, 4
+
+# Engine history of the pre-dynamics simulator (captured at PR-1 HEAD
+# with exactly the `setup` config below: rewafl, rounds=4, chunk=2,
+# loop key PRNGKey(7), init key PRNGKey(0)). static-paper must keep
+# reproducing these numbers — the scenario's whole contract.
+GOLDEN = {
+    "global_loss": [2.720846176147461, 2.548725128173828,
+                    2.355853319168091, 2.5422587394714355],
+    "round_energy": [131.33291625976562, 173.39004516601562,
+                     298.1416015625, 289.422119140625],
+    "round_latency": [6.055237770080566, 21.40962028503418,
+                      32.006248474121094, 42.78650665283203],
+    "n_participating": [4, 4, 4, 4],
+    "residual_sum": 445501.4375,
+    "selected": [[1, 0, 0, 1, 0, 0, 0, 0, 1, 1],
+                 [0, 1, 1, 0, 0, 0, 1, 1, 0, 0],
+                 [1, 0, 0, 0, 1, 0, 1, 0, 1, 0],
+                 [1, 0, 1, 0, 1, 0, 0, 0, 1, 0]],
+}
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = make_fl_model("cnn@mnist", small=True)
+    fleet = build_fleet(N, seed=0, init_energy_mean=0.3)
+    cx, cy, _ = build_task("cnn@mnist", N, 0.8, per_client=16, n_test=32)
+    cfg = FLConfig(n_select=K, batch_size=4, probe_size=4, lr=0.05,
+                   uplink_bits=16e6, policy=PolicyCfg(H0=2, H_max=6))
+    return model, fleet, cx, cy, cfg
+
+
+def _engine_run(setup, scenario, rounds=4):
+    model, fleet, cx, cy, cfg = setup
+    return eng.run_rounds(model, fleet, cx, cy, cfg, METHODS["rewafl"],
+                          rounds=rounds, key=jax.random.PRNGKey(7),
+                          params=model.init(jax.random.PRNGKey(0)),
+                          ecfg=eng.EngineCfg(chunk_size=2),
+                          scenario=scenario,
+                          env_key=jax.random.PRNGKey(3))
+
+
+# ------------------------------------------------------------- registry
+
+def test_registry_has_required_scenarios():
+    for name in ("static-paper", "commuter-diurnal", "congested-urban",
+                 "overnight-charging", "churn-heavy"):
+        assert name in SCENARIOS
+    assert get_scenario(None).static
+    assert get_scenario("static-paper").static
+    assert get_scenario("commuter-diurnal").dynamic
+    with pytest.raises(ValueError, match="unknown scenario"):
+        get_scenario("no-such-scenario")
+
+
+# ------------------------------------------------- static-paper parity
+
+@pytest.mark.skipif(os.environ.get("REPRO_SKIP_GOLDEN") == "1",
+                    reason="machine-captured golden values: skipped on "
+                           "hosts/jax builds that differ from the capture "
+                           "(the bitwise static≡None test still runs)")
+def test_static_paper_matches_pre_dynamics_golden(setup):
+    """static-paper reproduces the engine history captured before the
+    dynamics subsystem existed (same machine, same config)."""
+    res = _engine_run(setup, get_scenario("static-paper"))
+    h = res.history
+    for k in ("global_loss", "round_energy", "round_latency"):
+        np.testing.assert_allclose(np.asarray(h[k], np.float64), GOLDEN[k],
+                                   rtol=1e-3, err_msg=k)
+    np.testing.assert_array_equal(np.asarray(h["n_participating"]),
+                                  GOLDEN["n_participating"])
+    np.testing.assert_array_equal(np.asarray(h["selected"]).astype(int),
+                                  GOLDEN["selected"])
+    np.testing.assert_allclose(
+        float(np.asarray(res.state.residual_energy).sum()),
+        GOLDEN["residual_sum"], rtol=1e-3)
+
+
+def test_static_paper_bitwise_identical_to_scenario_none(setup):
+    """scenario='static-paper' and scenario=None must share the exact
+    trace — bitwise-equal histories and final state."""
+    a = _engine_run(setup, get_scenario("static-paper"))
+    b = _engine_run(setup, None)
+    for k in a.history:
+        np.testing.assert_array_equal(np.asarray(a.history[k]),
+                                      np.asarray(b.history[k]), err_msg=k)
+    for x, y in zip(jax.tree.leaves(a.state), jax.tree.leaves(b.state)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_static_metrics_report_full_availability(setup):
+    res = _engine_run(setup, None)
+    h = res.history
+    np.testing.assert_array_equal(np.asarray(h["n_charging"]), 0)
+    np.testing.assert_array_equal(np.asarray(h["n_online"]), N)
+    np.testing.assert_array_equal(
+        np.asarray(h["n_available"]),
+        N - np.concatenate([[0], np.asarray(h["n_dropped"])[:-1]]))
+
+
+# --------------------------------------------------- transition kernels
+
+def test_step_env_deterministic_under_fixed_key():
+    fleet = build_fleet(20, seed=1)
+    sc = get_scenario("commuter-diurnal")
+    env = init_env_state(fleet, sc, key=jax.random.PRNGKey(0))
+    from repro.core import init_fleet_state
+    state = init_fleet_state(fleet)
+    outs = [step_env(sc, fleet, env, state, jnp.asarray(3, jnp.int32),
+                     jax.random.PRNGKey(9), 16e6) for _ in range(2)]
+    for x, y in zip(jax.tree.leaves(outs[0]), jax.tree.leaves(outs[1])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_channel_step_edge_probabilities():
+    key = jax.random.PRNGKey(0)
+    good = jnp.array([True] * 50 + [False] * 50)
+    # p_gb=0, p_bg=1: everyone good next step
+    out = channel_step(key, good, 0.0, 1.0)
+    assert bool(np.asarray(out).all())
+    # p_gb=1, p_bg=0: everyone bad next step
+    out = channel_step(key, good, 1.0, 0.0)
+    assert not bool(np.asarray(out).any())
+
+
+def test_channel_migration_moves_devices():
+    """With nonzero transition rates devices actually migrate between
+    environments (the static model never does)."""
+    fleet = build_fleet(100, seed=0)
+    sc = get_scenario("congested-urban")
+    good = init_env_state(fleet, sc, key=jax.random.PRNGKey(0)).channel_good
+    start = np.asarray(good).copy()
+    key = jax.random.PRNGKey(1)
+    for i in range(20):
+        key, k = jax.random.split(key)
+        good = channel_step(k, good, sc.p_good_to_bad, sc.p_bad_to_good)
+    moved = (np.asarray(good) != start).sum()
+    assert moved > 10
+    rm = np.asarray(effective_rate_mean(good, fleet))
+    assert ((rm == np.asarray(fleet.rate_high))
+            | (rm == np.asarray(fleet.rate_low))).all()
+
+
+def test_charge_and_drain_bounds():
+    fleet = build_fleet(10, seed=0)
+    sc = get_scenario("overnight-charging")
+    full = fleet.battery_j
+    # charging from full never exceeds capacity
+    out = charge_and_drain(full, jnp.ones(10, bool), fleet, sc)
+    assert (np.asarray(out) <= np.asarray(full) + 1e-3).all()
+    # draining from empty never goes negative
+    out = charge_and_drain(jnp.zeros(10), jnp.zeros(10, bool), fleet, sc)
+    assert (np.asarray(out) >= 0.0).all()
+
+
+def test_recovery_clears_dropped_when_charged():
+    """A depleted+dropped device plugged in long enough rejoins."""
+    fleet = build_fleet(10, seed=0)
+    sc = dataclasses.replace(get_scenario("overnight-charging"),
+                             plug_off_day=0.0, plug_off_night=0.0,
+                             plug_on_day=1.0, plug_on_night=1.0,
+                             p_offline_day=0.0, p_offline_night=0.0)
+    from repro.core import init_fleet_state
+    state = init_fleet_state(fleet)
+    state = state._replace(residual_energy=jnp.zeros(10),
+                           dropped=jnp.ones(10, bool))
+    env = init_env_state(fleet, sc, key=jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    for r in range(200):
+        key, k = jax.random.split(key)
+        env, state = step_env(sc, fleet, env, state,
+                              jnp.asarray(r, jnp.int32), k, 16e6)
+        if not np.asarray(state.dropped).any():
+            break
+    assert not np.asarray(state.dropped).any()
+    assert (np.asarray(state.residual_energy)
+            <= np.asarray(fleet.battery_j) + 1e-3).all()
+
+
+def test_diurnal_clock():
+    tod = time_of_day(jnp.asarray(0, jnp.int32), 2.0, jnp.asarray([0.0, 23.5]))
+    np.testing.assert_allclose(np.asarray(tod), [0.0, 23.5])
+    # 30 rounds * 2 min = 1 h
+    tod = time_of_day(jnp.asarray(30, jnp.int32), 2.0, jnp.asarray([23.5]))
+    np.testing.assert_allclose(np.asarray(tod), [0.5], atol=1e-5)
+    w = np.asarray(night_weight(jnp.asarray([0.0, 12.0])))
+    np.testing.assert_allclose(w, [1.0, 0.0], atol=1e-6)
+
+
+# --------------------------------------------- end-to-end dynamic runs
+
+@pytest.mark.parametrize("name", ["commuter-diurnal", "churn-heavy"])
+def test_dynamic_scenario_engine_run(setup, name):
+    """Dynamic scenarios run end-to-end through the scan engine with
+    finite metrics, availability gating, and bounded energy."""
+    res = _engine_run(setup, get_scenario(name), rounds=4)
+    h = res.history
+    assert res.rounds_run == 4
+    assert np.isfinite(np.asarray(h["global_loss"], np.float64)).all()
+    n_avail = np.asarray(h["n_available"])
+    assert n_avail.shape == (4,)
+    assert ((0 <= n_avail) & (n_avail <= N)).all()
+    assert ((0 <= np.asarray(h["n_charging"]))
+            & (np.asarray(h["n_charging"]) <= N)).all()
+    # participants never exceed availability
+    assert (np.asarray(h["n_participating"]) <= n_avail).all()
+    _, fleet, _, _, _ = setup
+    E = np.asarray(res.state.residual_energy)
+    assert (E >= 0).all() and (E <= np.asarray(fleet.battery_j) + 1e-3).all()
+
+
+def test_dynamic_scenario_differs_from_static(setup):
+    a = _engine_run(setup, None)
+    b = _engine_run(setup, get_scenario("congested-urban"))
+    assert not np.allclose(np.asarray(a.history["round_energy"]),
+                           np.asarray(b.history["round_energy"]))
+
+
+def test_offline_devices_never_selected(setup):
+    """Churn gating: a device that is offline this round must not be
+    selected, even if its utility is high."""
+    model, fleet, cx, cy, cfg = setup
+    from repro.core import init_fleet_state, make_round_fn
+    # freeze availability: nobody changes state, half the fleet offline
+    sc = dataclasses.replace(
+        get_scenario("churn-heavy"), name="frozen-churn",
+        p_offline_day=0.0, p_offline_night=0.0,
+        p_online_day=0.0, p_online_night=0.0)
+    rf = make_round_fn(model, fleet, cx, cy, cfg, METHODS["rewafl"], sc)
+    env = init_env_state(fleet, sc, key=jax.random.PRNGKey(0))
+    offline = jnp.arange(N) < N // 2
+    env = env._replace(online=~offline)
+    state = init_fleet_state(fleet, H0=cfg.policy.H0)
+    params = model.init(jax.random.PRNGKey(0))
+    _, _, env2, m = rf(params, state, env, jax.random.PRNGKey(2),
+                       jnp.asarray(0, jnp.int32))
+    sel = np.asarray(m["selected"])
+    assert not sel[:N // 2].any()
+    assert int(m["n_online"]) == N - N // 2
+
+
+def test_run_fl_scenario_end_to_end():
+    """`run_fl(scenario=...)` drives a dynamic campaign through the scan
+    engine and reports the dynamics metrics per round."""
+    res = run_fl("cnn@mnist", "rewafl", rounds=4, n_clients=N, n_select=K,
+                 per_client=8, target_acc=2.0, eval_every=2,
+                 scenario="commuter-diurnal")
+    assert res.rounds_run == 4
+    for k in ("n_available", "n_charging", "n_online"):
+        assert res.history[k].shape == (4,)
+    assert np.isfinite(res.history["global_loss"]).all()
+
+
+def test_build_fleet_arbitrary_sizes():
+    """Non-multiples of 5 build with the remainder spread round-robin;
+    divisible sizes keep the exact legacy layout."""
+    for n in (7, 128):
+        f = build_fleet(n, seed=0)
+        assert f.n == n
+        counts = np.bincount(np.asarray(f.type_id), minlength=5)
+        assert counts.sum() == n
+        assert counts.max() - counts.min() <= 1
+    f10 = build_fleet(10, seed=0)
+    np.testing.assert_array_equal(np.asarray(f10.type_id),
+                                  np.repeat(np.arange(5), 2))

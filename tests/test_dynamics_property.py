@@ -1,0 +1,74 @@
+"""Hypothesis property tests for the fleet-dynamics invariants (skipped
+cleanly when the optional `hypothesis` dependency is absent, matching
+tests/test_property.py)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.sim.devices import build_fleet  # noqa: E402
+from repro.sim.dynamics import get_scenario  # noqa: E402
+from repro.sim.dynamics.availability import online_step  # noqa: E402
+from repro.sim.dynamics.battery import charge_and_drain  # noqa: E402
+from repro.sim.dynamics.channel import channel_step  # noqa: E402
+from repro.sim.dynamics.diurnal import diurnal, night_weight  # noqa: E402
+
+FLEET = build_fleet(10, seed=0)
+PROB = st.floats(0.0, 1.0, allow_nan=False)
+
+
+@settings(max_examples=25, deadline=None)
+@given(tod=st.floats(0.0, 24.0), day=PROB, night=PROB)
+def test_diurnal_interpolation_stays_in_range(tod, day, night):
+    w = float(night_weight(jnp.asarray(tod)))
+    assert 0.0 - 1e-6 <= w <= 1.0 + 1e-6
+    p = float(diurnal(day, night, jnp.asarray(tod)))
+    assert min(day, night) - 1e-6 <= p <= max(day, night) + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(p_gb=PROB, p_bg=PROB, seed=st.integers(0, 2**30))
+def test_channel_step_is_boolean_and_deterministic(p_gb, p_bg, seed):
+    key = jax.random.PRNGKey(seed)
+    good = jax.random.uniform(jax.random.PRNGKey(seed + 1), (10,)) < 0.5
+    a = channel_step(key, good, p_gb, p_bg)
+    b = channel_step(key, good, p_gb, p_bg)
+    assert a.dtype == jnp.bool_
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=25, deadline=None)
+@given(frac=st.floats(0.0, 2.0), charging=st.booleans(),
+       c_rate=st.floats(0.0, 2.0), drain=st.floats(0.0, 5.0))
+def test_energy_always_within_battery_bounds(frac, charging, c_rate, drain):
+    """Post-step residual energy ∈ [0, battery_j] from ANY starting
+    energy (even corrupted > capacity) under any charge/drain rates."""
+    sc = dataclasses.replace(get_scenario("commuter-diurnal"),
+                             charge_c_per_hour=c_rate, idle_drain_w=drain)
+    energy = FLEET.battery_j * frac
+    mask = jnp.full((10,), charging, bool)
+    out = np.asarray(charge_and_drain(energy, mask, FLEET, sc))
+    assert (out >= 0.0).all()
+    assert (out <= np.asarray(FLEET.battery_j) + 1e-3).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(p_on=PROB, p_off=PROB, tod=st.floats(0.0, 24.0),
+       seed=st.integers(0, 2**30))
+def test_online_step_edge_probabilities(p_on, p_off, tod, seed):
+    sc = dataclasses.replace(get_scenario("churn-heavy"),
+                             p_online_day=p_on, p_online_night=p_on,
+                             p_offline_day=p_off, p_offline_night=p_off)
+    online = jax.random.uniform(jax.random.PRNGKey(seed), (20,)) < 0.5
+    out = np.asarray(online_step(jax.random.PRNGKey(seed + 1), online,
+                                 jnp.full((20,), tod), sc))
+    was_on = np.asarray(online)
+    if p_off == 0.0:
+        assert out[was_on].all()       # nobody online leaves
+    if p_on == 0.0:
+        assert not out[~was_on].any()  # nobody offline joins

@@ -6,8 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (FLConfig, METHODS, init_fleet_state, make_round_fn,
-                        replicate_state)
+from repro.core import (FLConfig, METHODS, init_env_state, init_fleet_state,
+                        make_round_fn, replicate_state)
 from repro.core.policy import PolicyCfg
 from repro.launch import engine as eng
 from repro.launch.fl_run import build_task
@@ -32,10 +32,12 @@ def _sequential(model, fleet, cx, cy, cfg, method, rounds, key, params):
     """Reference: per-round jitted dispatch, the seed driver's loop."""
     rf = make_round_fn(model, fleet, cx, cy, cfg, METHODS[method])
     state = init_fleet_state(fleet, H0=cfg.policy.H0)
+    env = init_env_state(fleet)
     hist = []
     for r in range(rounds):
         key, kr = jax.random.split(key)
-        params, state, m = rf(params, state, kr, jnp.asarray(r, jnp.int32))
+        params, state, env, m = rf(params, state, env, kr,
+                                   jnp.asarray(r, jnp.int32))
         hist.append(jax.device_get(m))
     return params, state, hist
 
@@ -112,6 +114,28 @@ def test_campaign_batch_matches_individual_runs(setup):
         np.testing.assert_allclose(
             batch["final_residual_energy"][i],
             np.asarray(solo.state.residual_energy), atol=1e-3)
+
+
+def test_run_rounds_zero_rounds_empty_history(setup):
+    """rounds=0 must not IndexError: empty but correctly-keyed history."""
+    model, fleet, cx, cy, cfg = setup
+    res = eng.run_rounds(model, fleet, cx, cy, cfg, METHODS["rewafl"],
+                         rounds=0, key=jax.random.PRNGKey(1),
+                         init_key=jax.random.PRNGKey(0))
+    assert res.rounds_run == 0
+    for k in ("global_loss", "round_energy", "n_participating",
+              "n_available", "selected"):
+        assert k in res.history, k
+        assert len(res.history[k]) == 0
+    assert res.history["selected"].shape == (0, N)
+
+
+def test_campaign_batch_zero_rounds_empty_history(setup):
+    model, fleet, cx, cy, cfg = setup
+    h = eng.run_campaign_batch(model, fleet, cx, cy, cfg, METHODS["rewafl"],
+                               seeds=(0, 1), rounds=0, chunk_size=2)
+    assert h["global_loss"].shape == (2, 0)
+    assert h["final_residual_energy"].shape == (2, N)
 
 
 def test_replicate_state_shape(setup):

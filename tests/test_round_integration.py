@@ -11,7 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (FLConfig, METHODS, init_fleet_state, make_round_fn)
+from repro.core import (FLConfig, METHODS, init_env_state,
+                        init_fleet_state, make_round_fn)
 from repro.core.policy import PolicyCfg
 from repro.launch.fl_run import build_task
 from repro.models.fl_models import make_fl_model
@@ -53,11 +54,12 @@ def _check_invariants(setup, round_fns, method, rounds=2):
     rf = round_fns(method)
     params = model.init(jax.random.PRNGKey(0))
     state = init_fleet_state(fleet, H0=cfg.policy.H0)
+    env = init_env_state(fleet)
     key = jax.random.PRNGKey(1)
     for r in range(rounds):
         key, kr = jax.random.split(key)
-        params, new_state, m = rf(params, state, kr,
-                                  jnp.asarray(r, jnp.int32))
+        params, new_state, env, m = rf(params, state, env, kr,
+                                       jnp.asarray(r, jnp.int32))
         # residual energy never increases; only participants pay
         dE = np.asarray(state.residual_energy - new_state.residual_energy)
         assert (dE >= -1e-4).all()
@@ -98,8 +100,9 @@ def test_rewafl_never_selects_infeasible(setup, round_fns):
     state = state._replace(residual_energy=drained)
     rf = round_fns("rewafl")
     params = model.init(jax.random.PRNGKey(0))
-    _, new_state, m = rf(params, state, jax.random.PRNGKey(2),
-                         jnp.asarray(0, jnp.int32))
+    _, new_state, _, m = rf(params, state, init_env_state(fleet),
+                            jax.random.PRNGKey(2),
+                            jnp.asarray(0, jnp.int32))
     assert int(m["n_failed"]) == 0
     sel = np.asarray(m["selected"])
     assert not sel[:5].any()
@@ -110,11 +113,13 @@ def test_training_improves_loss(setup, round_fns):
     rf = round_fns("rewafl")
     params = model.init(jax.random.PRNGKey(0))
     state = init_fleet_state(fleet, H0=cfg.policy.H0)
+    env = init_env_state(fleet)
     key = jax.random.PRNGKey(3)
     losses = []
     for r in range(5):
         key, kr = jax.random.split(key)
-        params, state, m = rf(params, state, kr, jnp.asarray(r, jnp.int32))
+        params, state, env, m = rf(params, state, env, kr,
+                                   jnp.asarray(r, jnp.int32))
         losses.append(float(m["global_loss"]))
     assert losses[-1] < losses[0]
 
@@ -126,8 +131,8 @@ def test_fedavg_identity_when_no_participants(setup, round_fns):
     state = state._replace(dropped=jnp.ones(N, bool))
     rf = round_fns("rewafl")
     params = model.init(jax.random.PRNGKey(0))
-    p2, _, m = rf(params, state, jax.random.PRNGKey(4),
-                  jnp.asarray(0, jnp.int32))
+    p2, _, _, m = rf(params, state, init_env_state(fleet),
+                     jax.random.PRNGKey(4), jnp.asarray(0, jnp.int32))
     assert int(m["n_participating"]) == 0
     for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
@@ -141,10 +146,12 @@ def test_staleness_self_contained(setup, round_fns):
     rf = round_fns("rewafl")
     params = model.init(jax.random.PRNGKey(0))
     state = init_fleet_state(fleet, H0=cfg.policy.H0)
+    env = init_env_state(fleet)
     key = jax.random.PRNGKey(5)
     seen = np.zeros(N, bool)
     for r in range(12):
         key, kr = jax.random.split(key)
-        params, state, m = rf(params, state, kr, jnp.asarray(r, jnp.int32))
+        params, state, env, m = rf(params, state, env, kr,
+                                   jnp.asarray(r, jnp.int32))
         seen |= np.asarray(m["selected"])
     assert seen.sum() >= N - 2  # nearly everyone participated at least once
