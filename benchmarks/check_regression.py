@@ -1,0 +1,68 @@
+"""Ratio-based engine-throughput regression gate.
+
+Compares a freshly measured BENCH_engine.json against the committed
+baseline and fails (exit 1) when `device_rounds_s` drops by more than
+`--max-drop` (default 30% — loose enough for shared CI runners, tight
+enough to catch a scan-engine structural regression). Improvements and
+small drifts pass; keys missing from either file are reported and
+skipped, so baselines captured with more scales than CI measures still
+gate the common subset.
+
+  python -m benchmarks.engine_bench --scales 100 --no-dynamic \
+      --out /tmp/bench_fresh.json
+  python -m benchmarks.check_regression BENCH_engine.json \
+      /tmp/bench_fresh.json --keys scan_round_S100 --max-drop 0.30
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(baseline_path: str, fresh_path: str, keys, metric: str,
+          max_drop: float) -> int:
+    with open(baseline_path) as f:
+        base = json.load(f)["results"]
+    with open(fresh_path) as f:
+        fresh = json.load(f)["results"]
+    keys = list(keys) if keys else sorted(
+        k for k in base if isinstance(base[k], dict) and metric in base[k])
+    failures = 0
+    for k in keys:
+        if k not in base or metric not in base.get(k, {}):
+            print(f"SKIP {k}: not in baseline {baseline_path}")
+            continue
+        if k not in fresh or metric not in fresh.get(k, {}):
+            print(f"SKIP {k}: not in fresh run {fresh_path}")
+            continue
+        b, f_ = float(base[k][metric]), float(fresh[k][metric])
+        ratio = f_ / b if b else float("inf")
+        status = "OK" if ratio >= 1.0 - max_drop else "FAIL"
+        if status == "FAIL":
+            failures += 1
+        print(f"{status} {k}.{metric}: baseline={b:.1f} fresh={f_:.1f} "
+              f"ratio={ratio:.3f} (floor {1.0 - max_drop:.2f})")
+    if failures:
+        print(f"# {failures} metric(s) regressed > {max_drop:.0%}")
+    return 1 if failures else 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH_engine.json")
+    ap.add_argument("fresh", help="freshly measured BENCH_engine.json")
+    ap.add_argument("--keys", default=None,
+                    help="comma-separated result keys (default: every "
+                         "baseline key carrying the metric)")
+    ap.add_argument("--metric", default="device_rounds_s")
+    ap.add_argument("--max-drop", type=float, default=0.30,
+                    help="maximum tolerated fractional drop (default 0.30)")
+    args = ap.parse_args()
+    keys = args.keys.split(",") if args.keys else None
+    sys.exit(check(args.baseline, args.fresh, keys, args.metric,
+                   args.max_drop))
+
+
+if __name__ == "__main__":
+    main()

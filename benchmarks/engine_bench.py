@@ -9,13 +9,21 @@ is the fractional slowdown of commuter-diurnal vs static at S=10k
 (acceptance: < 0.10).
 
   make bench-engine            # or: python -m benchmarks.engine_bench
+
+CLI (for the CI regression gate, which measures a single cheap scale):
+
+  python -m benchmarks.engine_bench --scales 100 --no-dynamic \
+      --out /tmp/bench_fresh.json
+  python -m benchmarks.check_regression BENCH_engine.json \
+      /tmp/bench_fresh.json --keys scan_round_S100 --max-drop 0.30
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,9 +37,14 @@ OUT_PATH = os.path.join(ROOT, "BENCH_engine.json")
 
 def measure_engine(S: int, scenario: str = "static-paper", *,
                    chunk: int = 0, timed_chunks: int = 1) -> Dict:
-    """One warm compiled chunk at fleet scale S under `scenario`: fixed
+    """Warm compiled chunks at fleet scale S under `scenario`: fixed
     per-device work (tiny CNN, probe 2, batch 2) so the numbers isolate
-    round dispatch + fleet-axis + dynamics overhead, not model FLOPs."""
+    round dispatch + fleet-axis + dynamics overhead, not model FLOPs.
+
+    With timed_chunks > 1 the reported throughput is the BEST chunk
+    (timeit-style min): shared/contended hosts show ±40% wall-clock
+    swings, and best-of-N approaches the machine's true capability so
+    baseline-vs-fresh ratios reflect code, not contention spikes."""
     from repro.core import FLConfig, METHODS, init_fleet_state
     from repro.core.policy import PolicyCfg
     from repro.launch.engine import make_chunk_fn
@@ -47,7 +60,7 @@ def measure_engine(S: int, scenario: str = "static-paper", *,
                    uplink_bits=16e6, policy=PolicyCfg(H0=2, H_max=4))
     fleet = build_fleet(S, seed=0, init_energy_mean=0.3)
     cx, cy, _ = build_task("cnn@mnist", S, 0.8, per_client=2, n_test=16)
-    ck = make_chunk_fn(model, fleet, cx, cy, cfg, METHODS["rewafl"],
+    ck = make_chunk_fn(model, cfg, METHODS["rewafl"],
                        chunk_size=chunk, scenario=scen)
     params = model.init(jax.random.PRNGKey(0))
     state = init_fleet_state(fleet, H0=cfg.policy.H0)
@@ -55,23 +68,28 @@ def measure_engine(S: int, scenario: str = "static-paper", *,
                          key=jax.random.PRNGKey(3) if scen.dynamic else None)
     key = jax.random.PRNGKey(1)
     t0 = time.time()
-    out = ck(params, state, env, key, jnp.asarray(0, jnp.int32))  # compile
+    out = ck(params, state, env, fleet, cx, cy, key,
+             jnp.asarray(0, jnp.int32))  # compile
     jax.block_until_ready(out[0])
     compile_s = time.time() - t0
-    t0 = time.time()
+    chunk_walls = []
     for i in range(timed_chunks):
-        out = ck(*out[:4], jnp.asarray((i + 1) * chunk, jnp.int32))
-    jax.block_until_ready(out[0])
-    dt = time.time() - t0
-    n_rounds = timed_chunks * chunk
+        t0 = time.time()
+        out = ck(out[0], out[1], out[2], fleet, cx, cy, out[3],
+                 jnp.asarray((i + 1) * chunk, jnp.int32))
+        jax.block_until_ready(out[0])
+        chunk_walls.append(time.time() - t0)
+    dt = min(chunk_walls)
     return {"S": S, "scenario": scenario, "chunk": chunk,
-            "us_per_round": dt / n_rounds * 1e6,
-            "rounds_s": n_rounds / dt,
-            "device_rounds_s": n_rounds / dt * S,
-            "compile_s": compile_s}
+            "us_per_round": dt / chunk * 1e6,
+            "rounds_s": chunk / dt,
+            "device_rounds_s": chunk / dt * S,
+            "compile_s": compile_s,
+            "timed_chunks": timed_chunks}
 
 
-def run(scales=SCALES, dynamic_scenario: str = DYNAMIC_SCENARIO):
+def run(scales=SCALES, dynamic_scenario: Optional[str] = DYNAMIC_SCENARIO,
+        out_path: str = OUT_PATH, timed_chunks: int = 1):
     rows = []
     results: Dict[str, Dict] = {}
     # 3 timed chunks at the largest scale: its static row doubles as the
@@ -79,30 +97,53 @@ def run(scales=SCALES, dynamic_scenario: str = DYNAMIC_SCENARIO):
     # drifts ±20% across a long process, so the ratio needs back-to-back
     # samples — and the 10k build+compile is too expensive to repeat)
     for S in scales:
-        r = measure_engine(S, timed_chunks=3 if S == max(scales) else 1)
+        many = S == max(scales) and dynamic_scenario is not None
+        r = measure_engine(S, timed_chunks=3 if many else timed_chunks)
         results[f"scan_round_S{S}"] = r
         rows.append((f"engine/scan_round_S{S}", r["us_per_round"],
                      f"rounds_s={r['rounds_s']:.2f};"
                      f"device_rounds_s={r['device_rounds_s']:.0f};"
                      f"chunk={r['chunk']}"))
-    S = max(scales)
-    static = results[f"scan_round_S{S}"]
-    r = measure_engine(S, dynamic_scenario, timed_chunks=3)
-    results[f"scan_round_S{S}_{dynamic_scenario}"] = r
-    overhead = r["us_per_round"] / static["us_per_round"] - 1.0
-    results["dyn_overhead"] = overhead
-    rows.append((f"engine/scan_round_S{S}_{dynamic_scenario}",
-                 r["us_per_round"],
-                 f"rounds_s={r['rounds_s']:.2f};"
-                 f"dyn_overhead={overhead:+.3f}"))
+    if dynamic_scenario is not None:
+        S = max(scales)
+        static = results[f"scan_round_S{S}"]
+        r = measure_engine(S, dynamic_scenario, timed_chunks=3)
+        results[f"scan_round_S{S}_{dynamic_scenario}"] = r
+        overhead = r["us_per_round"] / static["us_per_round"] - 1.0
+        results["dyn_overhead"] = overhead
+        rows.append((f"engine/scan_round_S{S}_{dynamic_scenario}",
+                     r["us_per_round"],
+                     f"rounds_s={r['rounds_s']:.2f};"
+                     f"dyn_overhead={overhead:+.3f}"))
     payload = {"bench": "engine", "backend": jax.default_backend(),
+               "jax_version": jax.__version__,
                "results": results}
-    with open(OUT_PATH, "w") as f:
+    with open(out_path, "w") as f:
         json.dump(payload, f, indent=1)
     emit(rows)
-    print(f"# wrote {OUT_PATH}")
+    print(f"# wrote {out_path}")
     return rows
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scales", default=None,
+                    help="comma-separated fleet sizes (default 100,1000,10000)")
+    ap.add_argument("--no-dynamic", action="store_true",
+                    help="skip the dynamic-scenario overhead row")
+    ap.add_argument("--out", default=OUT_PATH,
+                    help="output JSON path (default BENCH_engine.json)")
+    ap.add_argument("--timed-chunks", type=int, default=3,
+                    help="warm chunks per scale; the best one is "
+                         "reported (timeit-style), damping contention "
+                         "noise on shared hosts")
+    args = ap.parse_args()
+    scales = (tuple(int(s) for s in args.scales.split(","))
+              if args.scales else SCALES)
+    run(scales=scales,
+        dynamic_scenario=None if args.no_dynamic else DYNAMIC_SCENARIO,
+        out_path=args.out, timed_chunks=args.timed_chunks)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -1,31 +1,48 @@
 """Fig. 5: REWAFL's H dynamics — growth frequency/increment/saturation by
-device type (high-end vs low-end) and uplink rate."""
+device type (high-end vs low-end) and uplink rate. H at mid-campaign vs
+final H proxies the early/late snapshot means; mean±std across GRID_SEEDS
+per-seed fleets (the fast/slow-uplink split uses each seed's own
+transmission-environment draw)."""
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import cached_run, emit
+from benchmarks.common import (GRID_SEEDS, cached_campaign_grid, emit,
+                               fmt_ms, mean_std)
 
 
-def run():
-    r = cached_run("cnn@mnist", "rewafl")
-    tid = np.array(r["type_id"])
-    rate = np.array(r["rate_mean"])
-    H_final = np.array(r["H_trace_last"])
-    Hq = np.array(r["H_trace_q"])  # (T', S) snapshots over training
+def run(seeds=GRID_SEEDS, **grid_kw):
+    g = cached_campaign_grid("cnn@mnist", ("rewafl",), seeds, **grid_kw)
+    s = g["methods"]["rewafl"]
+    pd = s["per_device"]
+    tid = np.array(pd["type_id"])          # (B, S)
+    rate = np.array(pd["rate_mean"])
+    H_final = np.array(pd["H_final"])
+    H_mid = np.array(pd["H_mid"])
+    B = tid.shape[0]
     rows = []
     for t, name in ((0, "xiaomi12s_highend"), (2, "honorplay6t_lowend")):
-        mask = tid == t
-        early = Hq[: len(Hq) // 2, mask].mean()
-        late = Hq[len(Hq) // 2:, mask].mean()
-        rows.append((f"fig5/type/{name}", r["us_per_round"],
-                     f"H_final={H_final[mask].mean():.1f};"
-                     f"H_early={early:.1f};H_late={late:.1f}"))
-    fast = rate > np.median(rate)
-    rows.append((f"fig5/rate/fast_uplink", r["us_per_round"],
-                 f"H_final={H_final[fast].mean():.1f}"))
-    rows.append((f"fig5/rate/slow_uplink", r["us_per_round"],
-                 f"H_final={H_final[~fast].mean():.1f}"))
+        fin, mid, growth = [], [], []
+        for b in range(B):
+            mask = tid[b] == t
+            fin.append(float(H_final[b][mask].mean()))
+            mid.append(float(H_mid[b][mask].mean()))
+            # late-phase growth: H gained after mid-campaign (H never
+            # shrinks, so saturation shows as growth -> 0)
+            growth.append(fin[-1] - mid[-1])
+        rows.append((f"fig5/type/{name}", s["us_per_round"],
+                     f"H_final={fmt_ms(mean_std(fin), 1)};"
+                     f"H_mid={fmt_ms(mean_std(mid), 1)};"
+                     f"H_late_growth={fmt_ms(mean_std(growth), 1)}"))
+    fast_H, slow_H = [], []
+    for b in range(B):
+        fast = rate[b] > np.median(rate[b])
+        fast_H.append(float(H_final[b][fast].mean()))
+        slow_H.append(float(H_final[b][~fast].mean()))
+    rows.append((f"fig5/rate/fast_uplink", s["us_per_round"],
+                 f"H_final={fmt_ms(mean_std(fast_H), 1)}"))
+    rows.append((f"fig5/rate/slow_uplink", s["us_per_round"],
+                 f"H_final={fmt_ms(mean_std(slow_H), 1)}"))
     emit(rows)
     return rows
 

@@ -1,29 +1,39 @@
 """Fig. 6: staleness — low-end, slow-uplink devices' participation and
 residual energy across PS designs (REWAFL's self-contained mechanism vs
-Oort's bolt-on temporal uncertainty)."""
+Oort's bolt-on temporal uncertainty). Mean±std across GRID_SEEDS
+per-seed fleets, each seed's low-end/slow-uplink mask drawn from its own
+fleet."""
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import cached_run, emit
+from benchmarks.common import (GRID_SEEDS, cached_campaign_grid, emit,
+                               fmt_ms, mean_std)
 
 
-def run(methods=("rewafl", "oort", "random", "autofl")):
+def run(methods=("rewafl", "oort", "random", "autofl"),
+        seeds=GRID_SEEDS, **grid_kw):
+    g = cached_campaign_grid("cnn@mnist", methods, seeds, **grid_kw)
     rows = []
     for method in methods:
-        r = cached_run("cnn@mnist", method)
-        tid = np.array(r["type_id"])
-        rate = np.array(r["rate_mean"])
-        sel = np.array(r["sel_count"])
-        res = np.array(r["residual_energy"])
-        init = np.array(r["init_energy"])
-        lowend = (tid == 2) & (rate < 1e6)  # Honor Play 6T @ 0.64 Mbps
-        if not lowend.any():
-            lowend = tid == 2
-        rows.append((f"fig6/{method}/lowend_slow", r["us_per_round"],
-                     f"mean_selections={sel[lowend].mean():.1f};"
-                     f"residual_frac="
-                     f"{(res[lowend]/np.maximum(init[lowend],1)).mean():.2f}"))
+        s = g["methods"][method]
+        pd = s["per_device"]
+        tid = np.array(pd["type_id"])          # (B, S)
+        rate = np.array(pd["rate_mean"])
+        sel = np.array(pd["sel_count"])
+        res = np.array(pd["residual_energy"])
+        init = np.array(pd["init_energy"])
+        sels, fracs = [], []
+        for b in range(tid.shape[0]):
+            lowend = (tid[b] == 2) & (rate[b] < 1e6)  # Honor Play 6T slow
+            if not lowend.any():
+                lowend = tid[b] == 2
+            sels.append(float(sel[b][lowend].mean()))
+            fracs.append(float((res[b][lowend]
+                                / np.maximum(init[b][lowend], 1)).mean()))
+        rows.append((f"fig6/{method}/lowend_slow", s["us_per_round"],
+                     f"mean_selections={fmt_ms(mean_std(sels), 1)};"
+                     f"residual_frac={fmt_ms(mean_std(fracs), 2)}"))
     emit(rows)
     return rows
 

@@ -1,19 +1,25 @@
 """Fig. 7: α/β sensitivity — larger α favours latency, larger β favours
-energy efficiency / residual-energy balance."""
+energy efficiency / residual-energy balance. Mean±std across GRID_SEEDS
+per-seed fleets per (α, β) grid point."""
 from __future__ import annotations
 
-from benchmarks.common import cached_run, emit
+from benchmarks.common import (GRID_SEEDS, cached_campaign_grid, emit,
+                               fmt_ms, fmt_reached)
 
 
-def run(grid=((1.0, 1.0), (2.0, 1.0), (1.0, 2.0))):
+def run(grid=((1.0, 1.0), (2.0, 1.0), (1.0, 2.0)), seeds=GRID_SEEDS,
+        **grid_kw):
     rows = []
     for alpha, beta in grid:
-        r = cached_run("cnn@har", "rewafl", alpha=alpha, beta=beta)
-        rows.append((f"fig7/alpha{alpha}_beta{beta}", r["us_per_round"],
-                     f"OL_h={r['overall_latency_h']:.3f};"
-                     f"OEC_kJ={r['overall_energy_kj']:.1f};"
-                     f"DR={r['dropout_ratio']:.2f};"
-                     f"reached={r['reached_round']}"))
+        g = cached_campaign_grid("cnn@har", ("rewafl",), seeds,
+                                 alpha=alpha, beta=beta, **grid_kw)
+        s = g["methods"]["rewafl"]
+        ms = s["mean_std"]
+        rows.append((f"fig7/alpha{alpha}_beta{beta}", s["us_per_round"],
+                     f"OL_h={fmt_ms(ms['overall_latency_h'], 3)};"
+                     f"OEC_kJ={fmt_ms(ms['overall_energy_kj'], 1)};"
+                     f"DR={fmt_ms(ms['dropout_ratio'], 2)};"
+                     f"reached={fmt_reached(s)}"))
     emit(rows)
     return rows
 

@@ -1,20 +1,28 @@
 """Table I: dropout ratio of residual-energy-UNAWARE PS designs (Oort,
-AutoFL, Random) at target accuracy — the paper's motivating observation."""
+AutoFL, Random) at target accuracy — the paper's motivating observation.
+Mean±std over GRID_SEEDS per-seed fleets/partitions via the vmapped
+campaign grid."""
 from __future__ import annotations
 
-from benchmarks.common import QUICK_TASKS, ALL_TASKS, cached_run, emit
+from benchmarks.common import (ALL_TASKS, GRID_SEEDS, QUICK_TASKS,
+                               cached_campaign_grid, emit, fmt_ms,
+                               fmt_reached)
+
+METHODS = ("oort", "autofl", "random")
 
 
-def run(tasks=None):
+def run(tasks=None, seeds=GRID_SEEDS, **grid_kw):
     tasks = tasks or QUICK_TASKS
     rows = []
     for task in tasks:
-        for method in ("oort", "autofl", "random"):
-            r = cached_run(task, method)
-            rows.append((f"table1/{task}/{method}", r["us_per_round"],
-                         f"dropout_ratio={r['dropout_ratio']:.2f};"
-                         f"reached={r['reached_round']};"
-                         f"acc={r['final_acc']:.3f}"))
+        g = cached_campaign_grid(task, METHODS, seeds, **grid_kw)
+        for method in METHODS:
+            s = g["methods"][method]
+            ms = s["mean_std"]
+            rows.append((f"table1/{task}/{method}", s["us_per_round"],
+                         f"dropout_ratio={fmt_ms(ms['dropout_ratio'], 2)};"
+                         f"reached={fmt_reached(s)};"
+                         f"acc={fmt_ms(ms['final_acc'], 3)}"))
     emit(rows)
     return rows
 

@@ -1,23 +1,28 @@
 """Table II: DR / OL / OEC to target accuracy for Random, Oort, AutoFL vs
-REAFL (the REA PS utility function, Eqn 2)."""
+REAFL (the REA PS utility function, Eqn 2). Mean±std over GRID_SEEDS
+per-seed fleets/partitions via the vmapped campaign grid."""
 from __future__ import annotations
 
-from benchmarks.common import QUICK_TASKS, ALL_TASKS, cached_run, emit
+from benchmarks.common import (ALL_TASKS, GRID_SEEDS, QUICK_TASKS,
+                               cached_campaign_grid, emit, fmt_ms,
+                               fmt_reached)
 
 METHODS = ("random", "oort", "autofl", "reafl")
 
 
-def run(tasks=None):
+def run(tasks=None, seeds=GRID_SEEDS, **grid_kw):
     tasks = tasks or QUICK_TASKS
     rows = []
     for task in tasks:
+        g = cached_campaign_grid(task, METHODS, seeds, **grid_kw)
         for method in METHODS:
-            r = cached_run(task, method)
-            rows.append((f"table2/{task}/{method}", r["us_per_round"],
-                         f"DR={r['dropout_ratio']:.2f};"
-                         f"OL_h={r['overall_latency_h']:.3f};"
-                         f"OEC_kJ={r['overall_energy_kj']:.1f};"
-                         f"reached={r['reached_round']}"))
+            s = g["methods"][method]
+            ms = s["mean_std"]
+            rows.append((f"table2/{task}/{method}", s["us_per_round"],
+                         f"DR={fmt_ms(ms['dropout_ratio'], 2)};"
+                         f"OL_h={fmt_ms(ms['overall_latency_h'], 3)};"
+                         f"OEC_kJ={fmt_ms(ms['overall_energy_kj'], 1)};"
+                         f"reached={fmt_reached(s)}"))
     emit(rows)
     return rows
 

@@ -1,23 +1,28 @@
 """Table III: REWA local computing policy ablation — REAFL (fixed H) vs
-REAFL+LUPA (AdaH) vs REWAFL (Eqn 3 + Eqn 4)."""
+REAFL+LUPA (AdaH) vs REWAFL (Eqn 3 + Eqn 4). Mean±std over GRID_SEEDS
+per-seed fleets/partitions via the vmapped campaign grid."""
 from __future__ import annotations
 
-from benchmarks.common import QUICK_TASKS, ALL_TASKS, cached_run, emit
+from benchmarks.common import (ALL_TASKS, GRID_SEEDS, QUICK_TASKS,
+                               cached_campaign_grid, emit, fmt_ms,
+                               fmt_reached)
 
 METHODS = ("reafl", "reafl_lupa", "rewafl")
 
 
-def run(tasks=None):
+def run(tasks=None, seeds=GRID_SEEDS, **grid_kw):
     tasks = tasks or QUICK_TASKS
     rows = []
     for task in tasks:
+        g = cached_campaign_grid(task, METHODS, seeds, **grid_kw)
         for method in METHODS:
-            r = cached_run(task, method)
-            rows.append((f"table3/{task}/{method}", r["us_per_round"],
-                         f"OL_h={r['overall_latency_h']:.3f};"
-                         f"OEC_kJ={r['overall_energy_kj']:.1f};"
-                         f"reached={r['reached_round']};"
-                         f"meanH={r['mean_H_final']:.1f}"))
+            s = g["methods"][method]
+            ms = s["mean_std"]
+            rows.append((f"table3/{task}/{method}", s["us_per_round"],
+                         f"OL_h={fmt_ms(ms['overall_latency_h'], 3)};"
+                         f"OEC_kJ={fmt_ms(ms['overall_energy_kj'], 1)};"
+                         f"reached={fmt_reached(s)};"
+                         f"meanH={fmt_ms(ms['mean_H_final'], 1)}"))
     emit(rows)
     return rows
 

@@ -1,24 +1,30 @@
 """Table IV: data-heterogeneity sweep — λ ∈ {0, 0.8, 1} on CNN@MNIST for
-REWAFL vs Oort / AutoFL / Random."""
+REWAFL vs Oort / AutoFL / Random. Mean±std over GRID_SEEDS per-seed
+fleets/partitions (each seed redraws its λ-partition) via the vmapped
+campaign grid."""
 from __future__ import annotations
 
-from benchmarks.common import cached_run, emit
+from benchmarks.common import (GRID_SEEDS, cached_campaign_grid, emit,
+                               fmt_ms, fmt_reached)
 
 # iid is easier: higher target (paper uses 97% iid vs 91% non-iid)
 LAM_TARGETS = {0.0: 0.93, 0.8: 0.90, 1.0: 0.88}
 
 
-def run(methods=("rewafl", "oort"), lams=(0.0, 0.8, 1.0)):
+def run(methods=("rewafl", "oort"), lams=(0.0, 0.8, 1.0),
+        seeds=GRID_SEEDS, **grid_kw):
     rows = []
     for lam in lams:
+        g = cached_campaign_grid("cnn@mnist", methods, seeds, lam=lam,
+                                 target_acc=LAM_TARGETS[lam], **grid_kw)
         for method in methods:
-            r = cached_run("cnn@mnist", method, lam=lam,
-                           target_acc=LAM_TARGETS[lam])
-            rows.append((f"table4/lam{lam}/{method}", r["us_per_round"],
-                         f"DR={r['dropout_ratio']:.2f};"
-                         f"OL_h={r['overall_latency_h']:.3f};"
-                         f"OEC_kJ={r['overall_energy_kj']:.1f};"
-                         f"reached={r['reached_round']}"))
+            s = g["methods"][method]
+            ms = s["mean_std"]
+            rows.append((f"table4/lam{lam}/{method}", s["us_per_round"],
+                         f"DR={fmt_ms(ms['dropout_ratio'], 2)};"
+                         f"OL_h={fmt_ms(ms['overall_latency_h'], 3)};"
+                         f"OEC_kJ={fmt_ms(ms['overall_energy_kj'], 1)};"
+                         f"reached={fmt_reached(s)}"))
     emit(rows)
     return rows
 

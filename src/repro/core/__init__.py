@@ -12,7 +12,8 @@
 from repro.core.state import (FleetState, init_fleet_state,  # noqa: F401
                               replicate_state)
 from repro.core.methods import METHODS, MethodSpec  # noqa: F401
-from repro.core.round import (FLConfig, make_round_body, make_round_fn,  # noqa: F401
-                              make_eval_fn)
+from repro.core.round import (FLConfig, bind_round_body,  # noqa: F401
+                              make_round_body, make_round_fn, make_eval_fn,
+                              select_slots)
 from repro.sim.dynamics import (EnvState, SCENARIOS, Scenario,  # noqa: F401
                                 get_scenario, init_env_state)

@@ -10,7 +10,6 @@ fleet-state update (Algorithm 1 lines 18–27).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -90,12 +89,35 @@ def _fedavg(global_params, client_params, weights):
     return jax.tree.map(combine, global_params, client_params)
 
 
-def make_round_body(model: FLModel, fleet: DeviceFleet, cx, cy,
-                    cfg: FLConfig, method: MethodSpec,
+def select_slots(selected: jax.Array, k: int):
+    """(sel_idx, slot_live) for the K training slots of a selection mask.
+
+    `jnp.nonzero(..., size=k, fill_value=0)` pads ascending indices with
+    device index 0 when fewer than k devices are selected — without a
+    slot mask, a participating device 0 would occupy every pad slot and
+    be re-trained, re-weighted, and re-scattered once per pad.
+    `slot_live` marks the real (non-pad) slots; every downstream per-slot
+    quantity (participation, FedAvg weight, state scatter) must be gated
+    on it so each device owns at most one live slot.
+    """
+    sel_idx = jnp.nonzero(selected, size=k, fill_value=0)[0]
+    slot_live = jnp.arange(k) < jnp.sum(selected)
+    return sel_idx, slot_live
+
+
+def make_round_body(model: FLModel, cfg: FLConfig, method: MethodSpec,
                     scenario: Optional[Scenario] = None):
-    """Returns the *un-jitted* round(params, state, env, key, round_idx)
-    -> (params', state', env', metrics). cx/cy: stacked client data
-    (S, n, ...); env: `sim.dynamics.EnvState`.
+    """Returns the *un-jitted*, closure-free
+    round(params, state, env, fleet, cx, cy, key, round_idx)
+    -> (params', state', env', metrics).
+
+    The fleet (`sim.devices.DeviceFleet`) and stacked client data
+    cx/cy ((S, n, ...)) are explicit pytree *arguments*, not trace-time
+    constants — so the same traced body vmaps over per-seed fleets and
+    partitions (engine.run_campaign_batch(per_seed_fleets=True)) and the
+    engine shards them as argument pytrees. `bind_round_body` recovers
+    the legacy round(params, state, env, key, round_idx) view by partial
+    application; env: `sim.dynamics.EnvState`.
 
     `scenario` picks the fleet-dynamics regime (None ≡ static-paper):
     static scenarios skip every dynamics branch at trace time — identical
@@ -108,7 +130,6 @@ def make_round_body(model: FLModel, fleet: DeviceFleet, cx, cy,
     re-traces it per chunk); `make_round_fn` is the one-round jitted view
     of the same computation, so engine and loop share numerics exactly.
     """
-    S = fleet.n
     K = cfg.n_select
     model_bits = float(cfg.uplink_bits or model.param_bits)
     dyn = scenario is not None and scenario.dynamic
@@ -118,7 +139,9 @@ def make_round_body(model: FLModel, fleet: DeviceFleet, cx, cy,
         cfg = dataclasses.replace(
             cfg, policy=dataclasses.replace(pcfg, H_max=pcfg.H0))
 
-    def round_fn(params, state: FleetState, env: EnvState, key, round_idx):
+    def round_fn(params, state: FleetState, env: EnvState,
+                 fleet: DeviceFleet, cx, cy, key, round_idx):
+        S = fleet.n
         if dyn:
             k_env, k_rate, k_sel, k_train = jax.random.split(key, 4)
             env, state = step_env(scenario, fleet, env, state, round_idx,
@@ -175,8 +198,10 @@ def make_round_body(model: FLModel, fleet: DeviceFleet, cx, cy,
         failed = selected & ~feasible
 
         # --- local training on the K selected slots ----------------------
-        sel_idx = jnp.nonzero(selected, size=K, fill_value=0)[0]
-        part_k = participating[sel_idx]
+        # pad slots (fewer than K selected) are dead: their (harmless)
+        # training of device 0's data is discarded by the slot mask
+        sel_idx, slot_live = select_slots(selected, K)
+        part_k = participating[sel_idx] & slot_live
         Hk = H_cand[sel_idx]
         xk, yk = cx[sel_idx], cy[sel_idx]
         keys = jax.random.split(k_train, K)
@@ -202,9 +227,15 @@ def make_round_body(model: FLModel, fleet: DeviceFleet, cx, cy,
         new_H = jnp.where(participating, H_cand, state.H)
         new_last_round = jnp.where(participating, round_idx, state.last_round)
 
+        # dead pad slots scatter to an out-of-bounds index and are
+        # dropped: a live slot for device 0 must not race a pad slot
+        # writing device 0's stale value back
+        scatter_idx = jnp.where(slot_live, sel_idx, S)
+
         def scatter(base, vals_k, mask_k):
-            upd = base.at[sel_idx].set(jnp.where(mask_k, vals_k,
-                                                 base[sel_idx]))
+            upd = base.at[scatter_idx].set(jnp.where(mask_k, vals_k,
+                                                     base[sel_idx]),
+                                           mode="drop")
             return upd
 
         stat_k = util.statistical_utility(fleet.data_size[sel_idx], l_sq_k)
@@ -265,14 +296,28 @@ def make_round_body(model: FLModel, fleet: DeviceFleet, cx, cy,
     return round_fn
 
 
+def bind_round_body(body, fleet: DeviceFleet, cx, cy):
+    """Partial-apply fleet/client data onto a closure-free round body,
+    recovering the legacy round(params, state, env, key, round_idx)
+    signature (same computation graph — trace-time constants instead of
+    arguments, so numerics are unchanged)."""
+
+    def round_fn(params, state: FleetState, env: EnvState, key, round_idx):
+        return body(params, state, env, fleet, cx, cy, key, round_idx)
+
+    return round_fn
+
+
 def make_round_fn(model: FLModel, fleet: DeviceFleet, cx, cy,
                   cfg: FLConfig, method: MethodSpec,
                   scenario: Optional[Scenario] = None):
     """Returns jitted round(params, state, env, key, round_idx) ->
     (params', state', env', metrics). cx/cy: stacked client data
-    (S, n, ...)."""
-    return jax.jit(make_round_body(model, fleet, cx, cy, cfg, method,
-                                   scenario))
+    (S, n, ...). The thin bound view of the closure-free
+    `make_round_body` — today's API, same bitwise static-paper history."""
+    return jax.jit(bind_round_body(make_round_body(model, cfg, method,
+                                                   scenario),
+                                   fleet, cx, cy))
 
 
 def make_eval_fn(model: FLModel, test_x, test_y):

@@ -9,7 +9,11 @@ NEG = -1e30
 
 def top_k_select(utils: jax.Array, k: int, available: jax.Array) -> jax.Array:
     """Boolean (S,) selection mask of the top-k available devices
-    (Algorithm 1, line 15: RankingDevice)."""
+    (Algorithm 1, line 15: RankingDevice). k beyond the fleet size
+    selects every available device (lax.top_k itself rejects k > S)."""
+    k = min(k, utils.shape[-1])
+    if k <= 0:
+        return jnp.zeros(available.shape, bool)
     masked = jnp.where(available, utils, NEG)
     _, idx = jax.lax.top_k(masked, k)
     sel = jnp.zeros(utils.shape, bool).at[idx].set(True)
@@ -25,7 +29,10 @@ def random_select(key: jax.Array, k: int, available: jax.Array) -> jax.Array:
 def epsilon_greedy(key: jax.Array, utils: jax.Array, k: int,
                    available: jax.Array, eps: float = 0.1) -> jax.Array:
     """Oort's exploit/explore split: (1−ε)K by utility, εK random."""
-    k_explore = max(1, int(round(eps * k)))
+    k = min(k, available.shape[-1])
+    if k <= 0:
+        return jnp.zeros(available.shape, bool)
+    k_explore = min(k, max(1, int(round(eps * k))))
     k_exploit = k - k_explore
     sel_x = top_k_select(utils, k_exploit, available)
     rest = available & ~sel_x

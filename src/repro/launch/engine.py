@@ -7,10 +7,17 @@ round into `jax.lax.scan` chunks so R rounds run as a single device
 program with on-device metric accumulation, and makes the fleet axis `S`
 shardable so 10k–100k-device fleets spread across available devices.
 
+The round body is closure-free (`core.round.make_round_body`): the fleet
+and client data enter every chunk as explicit pytree *arguments*, never
+as trace-time constants. That is what lets the campaign layer vmap over
+per-seed fleets/partitions (real fleet-heterogeneity error bars) and the
+sharding layer place them as argument shardings.
+
 Layers (each usable on its own):
 
   make_chunk_fn   — jit(scan(round_body, length=chunk)) with a
-                    (params, FleetState, EnvState, key) carry; the key
+                    (params, FleetState, EnvState, key) carry and
+                    (fleet, cx, cy) as loop-invariant arguments; the key
                     folds exactly like the sequential loop
                     (`key, kr = split(key)` per round), so engine ≡ loop
                     to float tolerance. EnvState carries the fleet
@@ -28,12 +35,15 @@ Layers (each usable on its own):
                   — vmap independent campaigns (one per seed) through
                     the same chunk body for the benchmark grids; methods
                     differ structurally, so grids loop methods in Python
-                    and vmap the seed axis.
+                    and vmap the seed axis. With `per_seed_fleets=True`
+                    the fleet/data pytrees carry a leading seed axis and
+                    every seed runs its own fleet draw and λ-partition.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+import time
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -84,20 +94,22 @@ def replicate(tree, mesh):
 # ------------------------------------------------------------ chunked scan
 
 def _chunk_body(round_body, length: int, collect_per_device: bool):
-    """R-round scan body: carry (params, state, env, key); ys = metric
-    pytree.
+    """R-round scan body: carry (params, state, env, key); fleet/cx/cy
+    are loop-invariant arguments threaded to the closure-free round body;
+    ys = metric pytree.
 
     PRNG folding matches the sequential driver exactly: one
     `jax.random.split` of the carried key per round.
     """
 
-    def chunk(params, state: FleetState, env: EnvState, key, start_round):
+    def chunk(params, state: FleetState, env: EnvState,
+              fleet: DeviceFleet, cx, cy, key, start_round):
         rounds = jnp.arange(length, dtype=jnp.int32) + start_round
 
         def step(carry, r):
             p, s, e, k = carry
             k, kr = jax.random.split(k)
-            p, s, e, m = round_body(p, s, e, kr, r)
+            p, s, e, m = round_body(p, s, e, fleet, cx, cy, kr, r)
             m = dict(m, H=s.H)
             if not collect_per_device:
                 m.pop("selected")
@@ -111,14 +123,15 @@ def _chunk_body(round_body, length: int, collect_per_device: bool):
     return chunk
 
 
-def make_chunk_fn(model: FLModel, fleet: DeviceFleet, cx, cy,
-                  cfg: FLConfig, method: MethodSpec, *,
+def make_chunk_fn(model: FLModel, cfg: FLConfig, method: MethodSpec, *,
                   chunk_size: int = 8, collect_per_device: bool = True,
                   donate: bool = False, scenario: Optional[Scenario] = None):
-    """jitted chunk(params, state, env, key, start_round) ->
-    (params', state', env', key', history) running `chunk_size` rounds on
-    device. `history` leaves have leading axis chunk_size."""
-    body = make_round_body(model, fleet, cx, cy, cfg, method, scenario)
+    """jitted chunk(params, state, env, fleet, cx, cy, key, start_round)
+    -> (params', state', env', key', history) running `chunk_size` rounds
+    on device. Closure-free like the round body: one compiled chunk
+    serves any same-shaped fleet/dataset. `history` leaves have leading
+    axis chunk_size."""
+    body = make_round_body(model, cfg, method, scenario)
     chunk = _chunk_body(body, chunk_size, collect_per_device)
     donate_argnums = (0, 1) if donate else ()
     return jax.jit(chunk, donate_argnums=donate_argnums)
@@ -142,6 +155,11 @@ class EngineResult:
     reached_round: Optional[int]     # first chunk-boundary round ≥ target
     acc_curve: np.ndarray            # one accuracy per completed chunk
     env: Optional[EnvState] = None   # final environment state
+    # per-chunk wall clock (first entry includes JIT compile) + rounds per
+    # chunk: lets callers report steady-state throughput separately from
+    # compile time (benchmarks.common.cached_run)
+    chunk_wall_s: Optional[np.ndarray] = None
+    chunk_rounds: Optional[np.ndarray] = None
 
 
 def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
@@ -187,20 +205,26 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
     def chunk_fn(length: int):
         if length not in chunk_fns:
             chunk_fns[length] = make_chunk_fn(
-                model, fleet, cx, cy, cfg, method, chunk_size=length,
+                model, cfg, method, chunk_size=length,
                 collect_per_device=ecfg.collect_per_device,
                 donate=ecfg.donate, scenario=scenario)
         return chunk_fns[length]
 
     hists: List = []
     acc_curve: List[float] = []
+    chunk_wall: List[float] = []
+    chunk_len: List[int] = []
     reached = None
     done = 0
     while done < rounds:
         length = min(ecfg.chunk_size, rounds - done)
+        t0 = time.time()
         params, state, env, key, hist = chunk_fn(length)(
-            params, state, env, key, jnp.asarray(done, jnp.int32))
-        hists.append(jax.device_get(hist))
+            params, state, env, fleet, cx, cy, key,
+            jnp.asarray(done, jnp.int32))
+        hists.append(jax.device_get(hist))   # blocks on the chunk
+        chunk_wall.append(time.time() - t0)
+        chunk_len.append(length)
         done += length
         if eval_fn is not None:
             acc = float(eval_fn(params))
@@ -213,12 +237,14 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
                    for k in hists[0]}
     else:  # rounds=0: empty but correctly-keyed history
         history = _empty_history(
-            chunk_fn(1), (params, state, env, key,
+            chunk_fn(1), (params, state, env, fleet, cx, cy, key,
                           jnp.asarray(0, jnp.int32)))
     return EngineResult(params=params, state=state, history=history,
                         rounds_run=done, reached_round=reached,
                         acc_curve=np.asarray(acc_curve, np.float64),
-                        env=env)
+                        env=env,
+                        chunk_wall_s=np.asarray(chunk_wall, np.float64),
+                        chunk_rounds=np.asarray(chunk_len, np.int64))
 
 
 # ------------------------------------------------------- campaign batching
@@ -228,35 +254,72 @@ def run_campaign_batch(model: FLModel, fleet: DeviceFleet, cx, cy,
                        seeds: Sequence[int], rounds: int,
                        chunk_size: int = 8,
                        collect_per_device: bool = False,
-                       scenario: Optional[Scenario] = None) -> Dict[str, np.ndarray]:
-    """vmap independent campaigns over the seed axis: one shared fleet and
-    dataset, per-seed init params and PRNG streams (the key derivation
-    matches run_fl's `PRNGKey(seed+2)` init / `PRNGKey(seed+1)` loop-key
-    / `PRNGKey(seed+3)` env convention). NOTE: unlike per-seed `run_fl`
-    calls — which rebuild the fleet and dataset with `seed` — the batch
-    varies only initialisation and round randomness, so cross-seed
-    variance here excludes fleet/data heterogeneity and results differ
-    from `run_fl(seed=s)` for the same s.
-    Returns history with leading axes (n_seeds, rounds)."""
+                       scenario: Optional[Scenario] = None,
+                       per_seed_fleets: bool = False,
+                       eval_fn: Optional[Callable] = None,
+                       target_acc: Optional[float] = None
+                       ) -> Dict[str, np.ndarray]:
+    """vmap independent campaigns over the seed axis. Per-seed init params
+    and PRNG streams always (the key derivation matches run_fl's
+    `PRNGKey(seed+2)` init / `PRNGKey(seed+1)` loop-key / `PRNGKey(seed+3)`
+    env convention).
+
+    `per_seed_fleets=False` (legacy): one shared fleet/dataset — cross-seed
+    variance covers init + round randomness only, and results differ from
+    per-seed `run_fl(seed=s)` calls (which rebuild fleet and data).
+    `per_seed_fleets=True`: fleet/cx/cy leaves carry a leading seed axis
+    B = len(seeds) (`sim.devices.build_fleet_batch` /
+    `launch.fl_run.build_task_batch`) and the vmap runs every seed on its
+    own fleet draw and λ-partition — cross-seed variance then includes the
+    fleet/data heterogeneity the paper's rankings are about, and seed i
+    reproduces `run_fl(seed=seeds[i])` round-for-round.
+
+    `eval_fn(params_batch) -> (B,)` is evaluated at every chunk boundary
+    (batched campaigns never early-stop — all seeds run all rounds);
+    with `target_acc` the history gains `reached_round` (B,), the first
+    chunk-end round index where a seed's accuracy met the target (-1 if
+    never), mirroring run_rounds' chunk-granular early-stop semantics.
+
+    Returns history with leading axes (n_seeds, rounds), plus
+    `final_residual_energy`/`final_H` (B, S), `chunk_wall_s`/`chunk_rounds`
+    (n_chunks,) timing, and `acc_curve` (n_chunks, B) when `eval_fn` is
+    given."""
     if chunk_size < 1:
         raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
-    body = make_round_body(model, fleet, cx, cy, cfg, method, scenario)
+    body = make_round_body(model, cfg, method, scenario)
     B = len(seeds)
+    fleet_ax = 0 if per_seed_fleets else None
     chunk = _chunk_body(body, chunk_size, collect_per_device)
-    in_axes = (0, 0, 0, 0, None)
+    in_axes = (0, 0, 0, fleet_ax, fleet_ax, fleet_ax, 0, None)
     batched = jax.jit(jax.vmap(chunk, in_axes=in_axes))
 
     params = jax.vmap(model.init)(
         jnp.stack([jax.random.PRNGKey(s + 2) for s in seeds]))
-    state = replicate_state(init_fleet_state(fleet, H0=cfg.policy.H0), B)
-    if scenario is not None and scenario.dynamic:
-        env = jax.vmap(lambda k: init_env_state(fleet, scenario, key=k))(
-            jnp.stack([jax.random.PRNGKey(s + 3) for s in seeds]))
+    H0 = cfg.policy.H0
+    dyn = scenario is not None and scenario.dynamic
+    env_keys = jnp.stack([jax.random.PRNGKey(s + 3) for s in seeds])
+    if per_seed_fleets:
+        state = jax.vmap(lambda f: init_fleet_state(f, H0=H0))(fleet)
+        if dyn:
+            env = jax.vmap(
+                lambda f, k: init_env_state(f, scenario, key=k))(
+                    fleet, env_keys)
+        else:
+            env = jax.vmap(lambda f: init_env_state(f, scenario))(fleet)
     else:
-        env = replicate_state(init_env_state(fleet, scenario), B)
+        state = replicate_state(init_fleet_state(fleet, H0=H0), B)
+        if dyn:
+            env = jax.vmap(lambda k: init_env_state(fleet, scenario,
+                                                    key=k))(env_keys)
+        else:
+            env = replicate_state(init_env_state(fleet, scenario), B)
     keys = jnp.stack([jax.random.PRNGKey(s + 1) for s in seeds])
 
     hists: List = []
+    acc_curve: List[np.ndarray] = []
+    chunk_wall: List[float] = []
+    chunk_len: List[int] = []
+    reached = np.full((B,), -1, np.int64)
     done = 0
     while done < rounds:
         length = min(chunk_size, rounds - done)
@@ -264,21 +327,38 @@ def run_campaign_batch(model: FLModel, fleet: DeviceFleet, cx, cy,
             batched = jax.jit(jax.vmap(
                 _chunk_body(body, length, collect_per_device),
                 in_axes=in_axes))
+        t0 = time.time()
         params, state, env, keys, hist = batched(
-            params, state, env, keys, jnp.asarray(done, jnp.int32))
-        hists.append(jax.device_get(hist))
+            params, state, env, fleet, cx, cy, keys,
+            jnp.asarray(done, jnp.int32))
+        hists.append(jax.device_get(hist))   # blocks on the chunk
+        chunk_wall.append(time.time() - t0)
+        chunk_len.append(length)
         done += length
+        if eval_fn is not None:
+            acc = np.asarray(eval_fn(params), np.float64)
+            acc_curve.append(acc)
+            if target_acc is not None:
+                newly = (acc >= target_acc) & (reached < 0)
+                reached[newly] = done - 1
     if hists:
         history = {k: np.concatenate([np.asarray(h[k]) for h in hists],
                                      axis=1)
                    for k in hists[0]}
     else:  # rounds=0: empty but correctly-keyed (n_seeds, 0, ...) history
-        shapes = jax.eval_shape(batched, params, state, env, keys,
-                                jnp.asarray(0, jnp.int32))[4]
+        shapes = jax.eval_shape(batched, params, state, env, fleet, cx, cy,
+                                keys, jnp.asarray(0, jnp.int32))[4]
         history = {k: np.zeros((B, 0) + tuple(v.shape[2:]), v.dtype)
                    for k, v in shapes.items()}
     history["final_residual_energy"] = np.asarray(state.residual_energy)
     history["final_H"] = np.asarray(state.H)
+    history["chunk_wall_s"] = np.asarray(chunk_wall, np.float64)
+    history["chunk_rounds"] = np.asarray(chunk_len, np.int64)
+    if eval_fn is not None:
+        history["acc_curve"] = (np.stack(acc_curve) if acc_curve
+                                else np.zeros((0, B)))
+        if target_acc is not None:
+            history["reached_round"] = reached
     return history
 
 
@@ -286,13 +366,22 @@ def run_campaign_grid(model: FLModel, fleet: DeviceFleet, cx, cy,
                       cfg: FLConfig, methods: Dict[str, MethodSpec], *,
                       seeds: Sequence[int], rounds: int,
                       chunk_size: int = 8,
-                      scenario: Optional[Scenario] = None
+                      collect_per_device: bool = False,
+                      scenario: Optional[Scenario] = None,
+                      per_seed_fleets: bool = False,
+                      eval_fn: Optional[Callable] = None,
+                      target_acc: Optional[float] = None
                       ) -> Dict[str, Dict[str, np.ndarray]]:
     """(seed × method) benchmark grid: methods differ structurally (python
     branches in the round body), so they compile separately; the seed axis
-    of each method is a single vmapped program."""
+    of each method is a single vmapped program. All batching options
+    (per-seed fleets, chunk-boundary eval, per-device collection) pass
+    through to `run_campaign_batch`."""
     return {name: run_campaign_batch(model, fleet, cx, cy, cfg, spec,
                                      seeds=seeds, rounds=rounds,
                                      chunk_size=chunk_size,
-                                     scenario=scenario)
+                                     collect_per_device=collect_per_device,
+                                     scenario=scenario,
+                                     per_seed_fleets=per_seed_fleets,
+                                     eval_fn=eval_fn, target_acc=target_acc)
             for name, spec in methods.items()}

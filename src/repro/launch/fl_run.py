@@ -43,6 +43,10 @@ class RunResult:
     dropout_ratio: float               # dropped / fleet at stop point
     acc_curve: np.ndarray
     final_params: object = None        # trained global model pytree
+    # scan engine only: per-chunk wall clock (first entry includes JIT
+    # compile) + rounds per chunk, for steady-state throughput reporting
+    chunk_wall_s: Optional[np.ndarray] = None
+    chunk_rounds: Optional[np.ndarray] = None
 
 
 def build_task(task: str, n_clients: int, lam: float, *, per_client: int = 128,
@@ -71,6 +75,24 @@ def build_task(task: str, n_clients: int, lam: float, *, per_client: int = 128,
                              per_client, n_classes, seed=seed)
     return (jnp.asarray(cx), jnp.asarray(cy),
             {"x": jnp.asarray(tx), "y": jnp.asarray(ty)})
+
+
+def build_task_batch(task: str, seeds, n_clients: int, lam: float, *,
+                     per_client: int = 128, n_test: int = 512):
+    """Per-seed stacked client data for vmapped campaign batches
+    (`engine.run_campaign_batch(per_seed_fleets=True)`): seed s rebuilds
+    the dataset and λ-partition exactly like `run_fl(seed=s)` does via
+    `build_task(..., seed=s)`.
+
+    Returns (cx, cy, test): cx (B, S, n, ...), cy (B, S, n) and the
+    per-seed test sets test = {"x": (B, n_test, ...), "y": (B, n_test)},
+    B = len(seeds)."""
+    outs = [build_task(task, n_clients, lam, per_client=per_client,
+                       n_test=n_test, seed=s) for s in seeds]
+    cx = jnp.stack([o[0] for o in outs])
+    cy = jnp.stack([o[1] for o in outs])
+    test = {k: jnp.stack([o[2][k] for o in outs]) for k in outs[0][2]}
+    return cx, cy, test
 
 
 def quick_cfg(n_select: int = 20, alpha: float = 1.0,
@@ -167,7 +189,8 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
             overall_energy_j=float(np.sum(h["round_energy"])),
             dropout_ratio=(float(h["n_dropped"][-1]) / n_clients
                            if res.rounds_run else 0.0),
-            acc_curve=res.acc_curve, final_params=params)
+            acc_curve=res.acc_curve, final_params=params,
+            chunk_wall_s=res.chunk_wall_s, chunk_rounds=res.chunk_rounds)
     if engine != "loop":
         raise ValueError(f"unknown engine {engine!r} (use 'scan' or 'loop')")
 

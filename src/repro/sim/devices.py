@@ -13,7 +13,7 @@ Joule results therefore validate the paper's *relative* claims
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, NamedTuple
+from typing import Dict, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -116,3 +116,23 @@ def build_fleet(n_devices: int = 100, *, seed: int = 0,
         e0_reserve=jnp.asarray(battery * e0_frac, jnp.float32),
         data_size=jnp.asarray(sizes, jnp.int32),
     )
+
+
+def build_fleet_batch(seeds: Sequence[int], n_devices: int = 100,
+                      **kwargs) -> DeviceFleet:
+    """Stack per-seed fleets into a DeviceFleet with (B, S) leaves
+    (B = len(seeds)) for vmapped campaign batches
+    (`launch.engine.run_campaign_batch(per_seed_fleets=True)`).
+
+    Seed s draws exactly the fleet `build_fleet(n_devices, seed=s,
+    **kwargs)` — the same convention `launch.fl_run.run_fl(seed=s)` uses —
+    so a batched campaign's seed axis reproduces per-seed solo runs and
+    its cross-seed spread covers real fleet heterogeneity (device-type
+    layout is fixed, but initial charge, transmission environment, and
+    data sizes are per-seed draws).
+
+    NOTE: the `.n` property of the batched fleet reports B, not S — read
+    `type_id.shape[-1]` for the fleet size of a batch.
+    """
+    fleets = [build_fleet(n_devices, seed=s, **kwargs) for s in seeds]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *fleets)

@@ -100,6 +100,35 @@ def test_static_paper_matches_pre_dynamics_golden(setup):
         GOLDEN["residual_sum"], rtol=1e-3)
 
 
+@pytest.mark.skipif(os.environ.get("REPRO_SKIP_GOLDEN") == "1",
+                    reason="machine-captured golden values: skipped on "
+                           "hosts/jax builds that differ from the capture")
+def test_static_paper_golden_tight_through_closure_free_engine(setup):
+    """ISSUE 3 acceptance, extended golden parity: the closure-free round
+    signature (fleet/data as chunk *arguments* instead of trace-time
+    constants) must not perturb the static-paper engine history.
+
+    Selection masks and participation counts are asserted exactly;
+    floats at rtol=1e-6 — three orders tighter than the original golden
+    test. Strict float-bitwise-vs-capture is not assertable even for
+    unmodified code: XLA CPU reduction partitioning is machine-state
+    dependent (the pre-PR HEAD reproduces the captured residual_sum only
+    to ~4e-8 relative, run-to-run). Pre/post-refactor code was verified
+    to produce identical histories side-by-side in one process."""
+    res = _engine_run(setup, get_scenario("static-paper"))
+    h = res.history
+    np.testing.assert_array_equal(np.asarray(h["selected"]).astype(int),
+                                  GOLDEN["selected"])
+    np.testing.assert_array_equal(np.asarray(h["n_participating"]),
+                                  GOLDEN["n_participating"])
+    for k in ("global_loss", "round_energy", "round_latency"):
+        np.testing.assert_allclose(np.asarray(h[k], np.float64), GOLDEN[k],
+                                   rtol=1e-6, err_msg=k)
+    np.testing.assert_allclose(
+        float(np.asarray(res.state.residual_energy, np.float64).sum()),
+        GOLDEN["residual_sum"], rtol=1e-6)
+
+
 def test_static_paper_bitwise_identical_to_scenario_none(setup):
     """scenario='static-paper' and scenario=None must share the exact
     trace — bitwise-equal histories and final state."""
@@ -261,6 +290,32 @@ def test_offline_devices_never_selected(setup):
     sel = np.asarray(m["selected"])
     assert not sel[:N // 2].any()
     assert int(m["n_online"]) == N - N // 2
+
+
+def test_churn_under_k_selection_bounded_by_availability(setup):
+    """Churn so heavy that n_online < n_select most rounds: the selection
+    mask must never exceed availability, never pick an offline device,
+    and the under-K padding must not inflate participation counts."""
+    model, fleet, cx, cy, cfg = setup
+    sc = dataclasses.replace(
+        get_scenario("churn-heavy"), name="churn-storm",
+        p_offline_day=0.8, p_offline_night=0.8,
+        p_online_day=0.1, p_online_night=0.1, frac_online0=0.3)
+    cfg8 = dataclasses.replace(cfg, n_select=8)
+    res = eng.run_rounds(model, fleet, cx, cy, cfg8, METHODS["rewafl"],
+                         rounds=6, key=jax.random.PRNGKey(7),
+                         params=model.init(jax.random.PRNGKey(0)),
+                         ecfg=eng.EngineCfg(chunk_size=3),
+                         scenario=sc, env_key=jax.random.PRNGKey(3))
+    sel = np.asarray(res.history["selected"])          # (R, S)
+    n_avail = np.asarray(res.history["n_available"])
+    assert (sel.sum(1) <= n_avail).all()
+    assert (sel.sum(1) <= 8).all()
+    assert (n_avail < 8).any()  # the regime actually exercises under-K
+    # each device participates at most once per round
+    assert (np.asarray(res.state.n_participations) <= res.rounds_run).all()
+    assert np.isfinite(np.asarray(res.history["global_loss"],
+                                  np.float64)).all()
 
 
 def test_run_fl_scenario_end_to_end():

@@ -59,6 +59,39 @@ def test_h_monotone_nondecreasing_under_rewa(H0, eps, rate):
     assert out >= min(H0, 30) or out == 30
 
 
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 12), st.integers(3, 40), st.floats(0.0, 1.0),
+       st.integers(0, 2**31 - 1), st.data())
+def test_epsilon_greedy_cardinality_and_availability(k, n, eps, seed, data):
+    """Churn-shaped invariant: whatever the availability draw (including
+    n_online < k and k > fleet size), ε-greedy selects exactly
+    min(k, n_available) devices, never an unavailable one — and a
+    boolean mask cannot double-count."""
+    avail_list = data.draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    utils = jnp.arange(float(n))
+    avail = jnp.array(avail_list)
+    mask = np.asarray(S.epsilon_greedy(jax.random.PRNGKey(seed), utils, k,
+                                       avail, eps=eps))
+    assert mask.sum() == min(k, int(avail.sum()))
+    assert not (mask & ~np.asarray(avail)).any()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 32), st.data())
+def test_select_slots_live_slots_never_duplicate(k, n, data):
+    """The round body's K training slots (core.round.select_slots): live
+    slots are exactly the selected devices (capped at k), each at most
+    once — the under-K nonzero padding never leaks a duplicate."""
+    from repro.core.round import select_slots
+    mask_list = data.draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    selected = jnp.array(mask_list)
+    sel_idx, slot_live = select_slots(selected, k)
+    live = np.asarray(sel_idx)[np.asarray(slot_live)]
+    assert len(set(live.tolist())) == len(live)
+    np.testing.assert_array_equal(np.sort(live),
+                                  np.flatnonzero(mask_list)[:k])
+
+
 @settings(max_examples=25, deadline=None)
 @given(st.integers(2, 6), st.integers(4, 64))
 def test_fedavg_convex_combination_bounds(k, p):

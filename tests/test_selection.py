@@ -78,6 +78,44 @@ def test_top_k_all_dropped_selects_nothing():
                                            none, eps=0.5)).any()
 
 
+def test_top_k_zero_k_selects_nothing():
+    """k=0 (e.g. a degenerate n_select sweep point) must be a no-op."""
+    avail = jnp.ones(6, bool)
+    assert not np.asarray(S.top_k_select(jnp.arange(6.0), 0, avail)).any()
+    assert not np.asarray(S.epsilon_greedy(jax.random.PRNGKey(0),
+                                           jnp.arange(6.0), 0, avail)).any()
+
+
+def test_epsilon_greedy_k_exploit_zero_with_scarce_availability():
+    """k_exploit rounds to 0 AND fewer devices are available than the
+    explore quota: exactly the available ones, nobody twice."""
+    key = jax.random.PRNGKey(4)
+    utils = jnp.arange(10.0)
+    avail = jnp.zeros(10, bool).at[jnp.array([1, 8])].set(True)
+    mask = np.asarray(S.epsilon_greedy(key, utils, 4, avail, eps=1.0))
+    assert mask.sum() == 2
+    assert mask[[1, 8]].all()
+
+
+def test_k_larger_than_fleet_selects_all_available():
+    """k > S (e.g. run_fl with n_select=20 on a 10-client debug fleet)
+    must select every available device instead of crashing lax.top_k."""
+    avail = jnp.ones(6, bool).at[2].set(False)
+    mask = np.asarray(S.top_k_select(jnp.arange(6.0), 9, avail))
+    assert mask.sum() == 5 and not mask[2]
+    mask = np.asarray(S.epsilon_greedy(jax.random.PRNGKey(6),
+                                       jnp.arange(6.0), 9, avail, eps=0.25))
+    assert mask.sum() == 5 and not mask[2]
+
+
+def test_epsilon_greedy_eps_above_one_clamps_to_k():
+    """ε > 1 must not push k_exploit negative (lax.top_k rejects k<0)."""
+    mask = np.asarray(S.epsilon_greedy(jax.random.PRNGKey(5),
+                                       jnp.arange(12.0), 4,
+                                       jnp.ones(12, bool), eps=1.5))
+    assert mask.sum() == 4
+
+
 def test_temporal_uncertainty_boosts_neglected():
     stat = jnp.array([1.0, 1.0])
     out = np.asarray(S.temporal_uncertainty(
