@@ -8,10 +8,17 @@ small drifts pass; keys missing from either file are reported and
 skipped, so baselines captured with more scales than CI measures still
 gate the common subset.
 
-  python -m benchmarks.engine_bench --scales 100 --no-dynamic \
+  python -m benchmarks.engine_bench --scales 100 --no-dynamic --no-grid \
       --out /tmp/bench_fresh.json
   python -m benchmarks.check_regression BENCH_engine.json \
       /tmp/bench_fresh.json --keys scan_round_S100 --max-drop 0.30
+
+Time-like metrics (lower is better) gate with `--direction lower`, e.g.
+the method-batched campaign-grid row recorded by the full bench run:
+
+  python -m benchmarks.check_regression BENCH_engine.json \
+      /tmp/bench_fresh.json --keys campaign_grid_4x5 \
+      --metric grid_wall_s --direction lower --max-drop 0.30
 """
 from __future__ import annotations
 
@@ -21,7 +28,7 @@ import sys
 
 
 def check(baseline_path: str, fresh_path: str, keys, metric: str,
-          max_drop: float) -> int:
+          max_drop: float, direction: str = "higher") -> int:
     with open(baseline_path) as f:
         base = json.load(f)["results"]
     with open(fresh_path) as f:
@@ -38,11 +45,15 @@ def check(baseline_path: str, fresh_path: str, keys, metric: str,
             continue
         b, f_ = float(base[k][metric]), float(fresh[k][metric])
         ratio = f_ / b if b else float("inf")
-        status = "OK" if ratio >= 1.0 - max_drop else "FAIL"
-        if status == "FAIL":
+        if direction == "higher":   # throughput-like: drop is bad
+            ok, bound = ratio >= 1.0 - max_drop, f"floor {1.0 - max_drop:.2f}"
+        else:                       # wall/compile-like: rise is bad
+            ok, bound = ratio <= 1.0 + max_drop, f"cap {1.0 + max_drop:.2f}"
+        status = "OK" if ok else "FAIL"
+        if not ok:
             failures += 1
         print(f"{status} {k}.{metric}: baseline={b:.1f} fresh={f_:.1f} "
-              f"ratio={ratio:.3f} (floor {1.0 - max_drop:.2f})")
+              f"ratio={ratio:.3f} ({bound})")
     if failures:
         print(f"# {failures} metric(s) regressed > {max_drop:.0%}")
     return 1 if failures else 0
@@ -57,11 +68,17 @@ def main() -> None:
                          "baseline key carrying the metric)")
     ap.add_argument("--metric", default="device_rounds_s")
     ap.add_argument("--max-drop", type=float, default=0.30,
-                    help="maximum tolerated fractional drop (default 0.30)")
+                    help="maximum tolerated fractional regression "
+                         "(default 0.30)")
+    ap.add_argument("--direction", choices=("higher", "lower"),
+                    default="higher",
+                    help="'higher': metric is better when higher "
+                         "(device_rounds_s); 'lower': better when lower "
+                         "(grid_wall_s, compile_s)")
     args = ap.parse_args()
     keys = args.keys.split(",") if args.keys else None
     sys.exit(check(args.baseline, args.fresh, keys, args.metric,
-                   args.max_drop))
+                   args.max_drop, args.direction))
 
 
 if __name__ == "__main__":

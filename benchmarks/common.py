@@ -17,7 +17,12 @@ Two cache layers:
                          draws, transmission environments, data sizes),
                          not just init/round noise. Cached per
                          (task, method, config) so tables sharing a
-                         method reuse one campaign.
+                         method reuse one campaign. Multi-method grids
+                         run METHOD-BATCHED (v=7): the method axis is
+                         vmapped on top of the seed vmap via the traced
+                         MethodParams round body, so the whole grid
+                         compiles once (`engine.run_campaign_grid
+                         (method_batched=True)`).
 """
 from __future__ import annotations
 
@@ -50,19 +55,33 @@ def _key(params: Dict) -> str:
 
 
 def _steady_timing(chunk_wall, chunk_rounds, wall_s: float,
-                   total_rounds: int):
-    """(us_per_round, compile_s): per-round wall of the warm chunks —
-    the first chunk folds JIT compile time in and dominated the old
-    wall/rounds number at small R (compare `compile_s` in
-    BENCH_engine.json). A trailing remainder chunk (rounds % chunk_size)
-    traces a *fresh* program, so its wall also hides a compile and is
-    excluded from the steady sample. compile_s is the first-chunk wall
-    minus its steady-rate execution estimate; None when there is no
-    warm full-length chunk to separate it with."""
+                   total_rounds: int, compile_s=None):
+    """(us_per_round, compile_s): steady per-round wall with JIT compile
+    separated out — the compile dominated the old wall/rounds number at
+    small R (compare `compile_s` in BENCH_engine.json).
+
+    When the engine measured `compile_s` explicitly (the async-off-load
+    drivers time the dispatches that trigger a fresh jit — dispatch
+    returns right after compile, before execution), the steady rate is
+    simply (total chunk wall − compile) / rounds: with deferred history
+    fetches the per-chunk walls form a pipeline whose sum tracks total
+    execution, but no single entry is one chunk's execution any more.
+    Chunk-boundary eval (including its one-off jit compile) counts as
+    campaign time here — it amortizes over a real campaign's rounds but
+    inflates toy runs with only a handful of rounds.
+
+    Fallback (no explicit compile_s, e.g. a hand-rolled chunk loop):
+    infer from the chunk walls — the first chunk and any recompiled
+    trailing remainder chunk fold a compile in and are excluded from the
+    steady sample; compile_s is then the first-chunk wall minus its
+    steady-rate execution estimate, or None when inseparable."""
     cw = np.asarray(chunk_wall if chunk_wall is not None else [],
                     np.float64)
     cr = np.asarray(chunk_rounds if chunk_rounds is not None else [],
                     np.float64)
+    if compile_s is not None and cw.size and cr.sum() > 0:
+        exec_s = max(float(cw.sum()) - float(compile_s), 0.0)
+        return exec_s / cr.sum() * 1e6, float(compile_s)
     steady = np.zeros(cw.shape, bool)
     steady[1:] = True
     if cw.size > 1 and cr[-1] != cr[0]:   # remainder chunk: recompiled
@@ -111,7 +130,7 @@ def cached_run(task: str, method: str, *, rounds: int = 50,
     folded into the perf trajectory.)"""
     target = TARGETS[task] if target_acc is None else target_acc
     params = dict(task=task, method=method, rounds=rounds, lam=lam,
-                  alpha=alpha, beta=beta, seed=seed, target=target, v=6,
+                  alpha=alpha, beta=beta, seed=seed, target=target, v=7,
                   chunk=chunk_size, scenario=scenario)
     os.makedirs(FL_DIR, exist_ok=True)
     path = os.path.join(FL_DIR, f"{task.replace('@','_')}__{method}__"
@@ -127,7 +146,8 @@ def cached_run(task: str, method: str, *, rounds: int = 50,
                scenario=scenario)
     wall = time.time() - t0
     us_per_round, compile_s = _steady_timing(r.chunk_wall_s, r.chunk_rounds,
-                                             wall, r.rounds_run)
+                                             wall, r.rounds_run,
+                                             r.compile_s)
     h = r.history
     out = {
         "params": params,
@@ -208,7 +228,8 @@ def _summarize_method(h: Dict[str, np.ndarray], n_clients: int,
         "H_mid": Htr[:, R // 2, :].astype(np.int64).tolist(),
     }
     us, compile_s = _steady_timing(h.get("chunk_wall_s"),
-                                   h.get("chunk_rounds"), wall_s, R)
+                                   h.get("chunk_rounds"), wall_s, R,
+                                   h.get("compile_s"))
     return {"per_seed": per_seed,
             "mean_std": {k: mean_std(per_seed[k]) for k in PER_SEED_KEYS},
             "per_device": per_device,
@@ -225,8 +246,12 @@ def cached_campaign_grid(task: str, methods, seeds=GRID_SEEDS, *,
                          per_seed_fleets: bool = True,
                          per_client: int = 64, n_select: int = 20,
                          force: bool = False) -> Dict:
-    """(seed × method) grid through the vmapped campaign engine (v=6):
-    one compiled program per method, all seeds batched.
+    """(seed × method) grid through the vmapped campaign engine (v=7):
+    all seeds batched, and all (uncached) methods batched too — the
+    traced MethodParams round body vmaps the method axis on top of the
+    seed axis, so a whole multi-method grid traces and compiles ONCE
+    (single-method refreshes keep the per-method static-dispatch path;
+    the two paths agree to float tolerance with identical selection).
 
     With `per_seed_fleets=True` (default) every seed draws its own fleet
     and λ-partition exactly like `run_fl(seed=s)` — the closure-free
@@ -246,7 +271,7 @@ def cached_campaign_grid(task: str, methods, seeds=GRID_SEEDS, *,
     target = TARGETS[task] if target_acc is None else target_acc
     base = dict(task=task, seeds=seeds, rounds=rounds, lam=lam,
                 alpha=alpha, beta=beta, n=n_clients, chunk=chunk_size,
-                scenario=scenario, target=target, v=6,
+                scenario=scenario, target=target, v=7,
                 per_seed_fleets=per_seed_fleets, per_client=per_client,
                 k=n_select)
     os.makedirs(FL_DIR, exist_ok=True)

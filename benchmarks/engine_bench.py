@@ -8,11 +8,17 @@ row doubles as the dynamics-overhead regression check: `dyn_overhead`
 is the fractional slowdown of commuter-diurnal vs static at S=10k
 (acceptance: < 0.10).
 
+Full runs additionally measure the `campaign_grid_4x5` row: a 4-method
+× 5-seed campaign grid through the one-compile method-batched engine
+(`run_campaign_grid(method_batched=True)`) against the per-method
+fallback, reporting grid wall-clock, total compile seconds both ways,
+and the compile-amortization ratio (ISSUE 4 acceptance: ≥ 3×).
+
   make bench-engine            # or: python -m benchmarks.engine_bench
 
 CLI (for the CI regression gate, which measures a single cheap scale):
 
-  python -m benchmarks.engine_bench --scales 100 --no-dynamic \
+  python -m benchmarks.engine_bench --scales 100 --no-dynamic --no-grid \
       --out /tmp/bench_fresh.json
   python -m benchmarks.check_regression BENCH_engine.json \
       /tmp/bench_fresh.json --keys scan_round_S100 --max-drop 0.30
@@ -27,11 +33,14 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import ROOT, emit
+from benchmarks.common import ROOT, _steady_timing, emit
 
 SCALES = (100, 1_000, 10_000)
 DYNAMIC_SCENARIO = "commuter-diurnal"
+GRID_METHODS = ("random", "oort", "autofl", "rewafl")
+GRID_SEEDS = 5
 OUT_PATH = os.path.join(ROOT, "BENCH_engine.json")
 
 
@@ -88,8 +97,62 @@ def measure_engine(S: int, scenario: str = "static-paper", *,
             "timed_chunks": timed_chunks}
 
 
+def measure_campaign_grid(S: int = 100, *, n_seeds: int = GRID_SEEDS,
+                          rounds: int = 12, chunk: int = 4) -> Dict:
+    """4-method × n_seeds campaign grid, method-batched vs per-method.
+
+    Runs the same (method × seed) grid twice through
+    `engine.run_campaign_grid`: once with `method_batched=True` (one
+    MethodParams trace, one XLA compile for the whole grid) and once with
+    the per-method fallback (one compile per method). Reports each path's
+    wall-clock and total compile seconds (recovered per method from the
+    chunk timing, as `benchmarks.common._steady_timing` does for the
+    paper grids) plus the compile-amortization ratio the ISSUE-4
+    acceptance gates on (≥ 3×)."""
+    from repro.core import FLConfig, METHODS
+    from repro.core.policy import PolicyCfg
+    from repro.launch.engine import run_campaign_grid
+    from repro.launch.fl_run import build_task
+    from repro.models.fl_models import make_fl_model
+    from repro.sim.devices import build_fleet
+
+    model = make_fl_model("cnn@mnist", small=True)
+    cfg = FLConfig(n_select=20, batch_size=2, probe_size=2, lr=0.05,
+                   uplink_bits=16e6, policy=PolicyCfg(H0=2, H_max=4))
+    fleet = build_fleet(S, seed=0, init_energy_mean=0.3)
+    cx, cy, _ = build_task("cnn@mnist", S, 0.8, per_client=2, n_test=16)
+    methods = {m: METHODS[m] for m in GRID_METHODS}
+    seeds = tuple(range(n_seeds))
+
+    def one(batched: bool):
+        t0 = time.time()
+        grids = run_campaign_grid(model, fleet, cx, cy, cfg, methods,
+                                  seeds=seeds, rounds=rounds,
+                                  chunk_size=chunk, method_batched=batched)
+        wall = time.time() - t0
+        compile_total, us_cells = 0.0, []
+        for h in grids.values():
+            us, comp = _steady_timing(h["chunk_wall_s"], h["chunk_rounds"],
+                                      wall, rounds, h["compile_s"])
+            us_cells.append(us)
+            compile_total += comp or 0.0
+        return wall, compile_total, float(np.mean(us_cells))
+
+    wall_b, compile_b, us_b = one(batched=True)
+    wall_p, compile_p, us_p = one(batched=False)
+    return {"S": S, "methods": list(GRID_METHODS), "n_seeds": n_seeds,
+            "rounds": rounds, "chunk": chunk,
+            "grid_wall_s": wall_b, "compile_s": compile_b,
+            "us_per_round": us_b,
+            "per_method_wall_s": wall_p, "per_method_compile_s": compile_p,
+            "per_method_us_per_round": us_p,
+            "compile_speedup": compile_p / max(compile_b, 1e-9),
+            "compile_s_per_cell": compile_b / (len(GRID_METHODS) * n_seeds)}
+
+
 def run(scales=SCALES, dynamic_scenario: Optional[str] = DYNAMIC_SCENARIO,
-        out_path: str = OUT_PATH, timed_chunks: int = 1):
+        out_path: str = OUT_PATH, timed_chunks: int = 1,
+        grid: bool = True):
     rows = []
     results: Dict[str, Dict] = {}
     # 3 timed chunks at the largest scale: its static row doubles as the
@@ -115,6 +178,23 @@ def run(scales=SCALES, dynamic_scenario: Optional[str] = DYNAMIC_SCENARIO,
                      r["us_per_round"],
                      f"rounds_s={r['rounds_s']:.2f};"
                      f"dyn_overhead={overhead:+.3f}"))
+    if grid:
+        g = measure_campaign_grid()
+        results["campaign_grid_4x5"] = g
+        rows.append((
+            "engine/campaign_grid_4x5", g["us_per_round"],
+            f"grid_wall_s={g['grid_wall_s']:.1f};"
+            f"compile_s={g['compile_s']:.1f};"
+            f"per_method_compile_s={g['per_method_compile_s']:.1f};"
+            f"compile_speedup={g['compile_speedup']:.1f}x"))
+        cells = len(g["methods"]) * g["n_seeds"]
+        print(f"# compile amortization ({len(g['methods'])} methods x "
+              f"{g['n_seeds']} seeds = {cells} cells): "
+              f"batched {g['compile_s']:.1f}s total "
+              f"({g['compile_s_per_cell']:.2f}s/cell) vs per-method "
+              f"{g['per_method_compile_s']:.1f}s "
+              f"({g['per_method_compile_s'] / cells:.2f}s/cell) -> "
+              f"{g['compile_speedup']:.1f}x")
     payload = {"bench": "engine", "backend": jax.default_backend(),
                "jax_version": jax.__version__,
                "results": results}
@@ -131,6 +211,9 @@ def main() -> None:
                     help="comma-separated fleet sizes (default 100,1000,10000)")
     ap.add_argument("--no-dynamic", action="store_true",
                     help="skip the dynamic-scenario overhead row")
+    ap.add_argument("--no-grid", action="store_true",
+                    help="skip the method-batched campaign-grid row "
+                         "(the CI bench-gate measures S=100 only)")
     ap.add_argument("--out", default=OUT_PATH,
                     help="output JSON path (default BENCH_engine.json)")
     ap.add_argument("--timed-chunks", type=int, default=3,
@@ -142,7 +225,8 @@ def main() -> None:
               if args.scales else SCALES)
     run(scales=scales,
         dynamic_scenario=None if args.no_dynamic else DYNAMIC_SCENARIO,
-        out_path=args.out, timed_chunks=args.timed_chunks)
+        out_path=args.out, timed_chunks=args.timed_chunks,
+        grid=not args.no_grid)
 
 
 if __name__ == "__main__":

@@ -11,9 +11,11 @@
 """
 from repro.core.state import (FleetState, init_fleet_state,  # noqa: F401
                               replicate_state)
-from repro.core.methods import METHODS, MethodSpec  # noqa: F401
+from repro.core.methods import (METHODS, MethodParams,  # noqa: F401
+                                MethodSpec, batchable, method_params,
+                                method_params_batch)
 from repro.core.round import (FLConfig, bind_round_body,  # noqa: F401
-                              make_round_body, make_round_fn, make_eval_fn,
-                              select_slots)
+                              make_round_body, make_round_body_mp,
+                              make_round_fn, make_eval_fn, select_slots)
 from repro.sim.dynamics import (EnvState, SCENARIOS, Scenario,  # noqa: F401
                                 get_scenario, init_env_state)

@@ -8,10 +8,27 @@
 | reafl       | Eqn (2)                       | fixed H                    |
 | reafl_lupa  | Eqn (2)                       | AdaH [23]                  |
 | rewafl      | Eqn (2)                       | Eqn (3) + stopping Eqn (4) |
+
+Two views of a method:
+
+  MethodSpec   — the static (Python) description: selector/policy branch
+                 *strings* dispatched with Python `if` at trace time.
+                 One compiled program per method; the bitwise-golden
+                 single-method path.
+  MethodParams — the *traced* description: branch ids + hyperparameters
+                 as jnp scalars forming a vmappable pytree, dispatched
+                 with `lax.switch` inside the round body. Stacking M of
+                 them (`method_params_batch`) gives the (M,)-leaf axis
+                 that `engine.run_campaign_grid` vmaps so a whole
+                 (method × seed) campaign grid traces and compiles once.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,3 +47,65 @@ METHODS = {
     "reafl_lupa": MethodSpec("reafl_lupa", "rea", "adah"),
     "rewafl": MethodSpec("rewafl", "rea", "rewa"),
 }
+
+# lax.switch branch orders — must match the branch lists in
+# core.round's traced dispatch.
+SELECTOR_IDS = {"random": 0, "oort": 1, "autofl": 2, "rea": 3}
+POLICY_IDS = {"fixed": 0, "adah": 1, "rewa": 2}
+
+
+class MethodParams(NamedTuple):
+    """Traced per-method parameters (all 0-d jnp scalars; stacked to (M,)
+    leaves by `method_params_batch` for the method-axis vmap).
+
+    `exploration` is the *effective* ε of the one unified rank-space
+    selection the traced round body compiles (every paper selector is an
+    ε-greedy special case): pure ranking (rea) ≡ ε=0 — zero exploration
+    slots — and uniform-random ≡ ε=1 — every slot explored with the same
+    uniform draw `random_select` makes. `selector_id` then only switches
+    the cheap *score* arithmetic, so the batched program carries one
+    sort-based selection mechanism instead of four."""
+    selector_id: jax.Array   # i32 — index into SELECTOR_IDS branch order
+    policy_id: jax.Array     # i32 — index into POLICY_IDS branch order
+    exploration: jax.Array   # f32 — effective ε (random=1, rea=0)
+    alpha: jax.Array         # f32 — latency-utility exponent
+    beta: jax.Array          # f32 — energy-utility exponent
+    autofl_eta: jax.Array    # f32 — AutoFL reward scale
+    autofl_ema: jax.Array    # f32 — AutoFL bandit EMA factor
+
+
+def method_params(spec: MethodSpec, *, alpha: float = 1.0,
+                  beta: float = 1.0, autofl_eta: float = 1.0,
+                  autofl_ema: float = 0.5) -> MethodParams:
+    """Lower a static MethodSpec (+ the FLConfig's utility/bandit
+    hyperparameters) to the traced MethodParams pytree."""
+    if spec.selector not in SELECTOR_IDS:
+        raise ValueError(f"selector {spec.selector!r} has no traced branch")
+    if spec.policy not in POLICY_IDS:
+        raise ValueError(f"policy {spec.policy!r} has no traced branch")
+    eps_eff = {"random": 1.0, "rea": 0.0}.get(spec.selector,
+                                              spec.exploration)
+    return MethodParams(
+        selector_id=jnp.asarray(SELECTOR_IDS[spec.selector], jnp.int32),
+        policy_id=jnp.asarray(POLICY_IDS[spec.policy], jnp.int32),
+        exploration=jnp.asarray(eps_eff, jnp.float32),
+        alpha=jnp.asarray(alpha, jnp.float32),
+        beta=jnp.asarray(beta, jnp.float32),
+        autofl_eta=jnp.asarray(autofl_eta, jnp.float32),
+        autofl_ema=jnp.asarray(autofl_ema, jnp.float32),
+    )
+
+
+def method_params_batch(specs: Sequence[MethodSpec], **kw) -> MethodParams:
+    """Stack specs into (M,)-leaf MethodParams for the method-axis vmap."""
+    mps = [method_params(s, **kw) for s in specs]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *mps)
+
+
+def batchable(specs: Sequence[MethodSpec]) -> bool:
+    """True when every spec lowers to MethodParams — i.e. its selector and
+    policy have traced lax.switch branches. Methods failing this are
+    structurally incompatible with the one-compile grid and fall back to
+    per-method compilation in `engine.run_campaign_grid`."""
+    return all(s.selector in SELECTOR_IDS and s.policy in POLICY_IDS
+               for s in specs)

@@ -6,6 +6,21 @@ vmapped local SGD on the K selected clients (lax.fori_loop to the static
 H_max with per-client iteration masks — TPU-style static shapes instead
 of ragged loops) → FedAvg (Pallas-kernel-backed weighted aggregation) →
 fleet-state update (Algorithm 1 lines 18–27).
+
+Method dispatch has two flavours sharing this one body:
+
+  `make_round_body(model, cfg, method: MethodSpec, scenario)` — the
+  selector/policy branches are Python `if`s resolved at trace time: one
+  compiled program per method, bitwise-stable (the golden-history path).
+
+  `make_round_body_mp(model, cfg, scenario)` — the method enters as a
+  *traced* `methods.MethodParams` argument and the branches dispatch via
+  `lax.switch` on its branch ids. Because the method is an argument
+  pytree, the engine vmaps it: a whole (method × seed) campaign grid
+  traces and compiles **once** (`engine.run_campaign_grid`). Under the
+  method-axis vmap the switch lowers to compute-all-branches + select —
+  the branches are cheap (S,) selector/policy math, while the expensive
+  probe/training/aggregation work is shared outside the switch.
 """
 from __future__ import annotations
 
@@ -18,8 +33,9 @@ import jax.numpy as jnp
 from repro.core import policy as pol
 from repro.core import selection as sel
 from repro.core import utility as util
-from repro.core.methods import MethodSpec
+from repro.core.methods import MethodParams, MethodSpec
 from repro.core.state import FleetState
+from repro.kernels.fedavg import ops as fedavg_ops
 from repro.models.fl_models import FLModel
 from repro.sim.devices import DeviceFleet
 from repro.sim.dynamics.channel import effective_rate_mean
@@ -46,18 +62,31 @@ class FLConfig:
     policy: pol.PolicyCfg = dataclasses.field(default_factory=pol.PolicyCfg)
     autofl_eta: float = 1.0
     autofl_ema: float = 0.5
+    # probe the global model every N rounds instead of every round,
+    # carrying the last probed per-device loss in FleetState.g_loss
+    # between probes. 1 (default) probes every round — exact paper
+    # semantics, bitwise-identical history. N > 1 amortises the (S·probe)
+    # forward and staleness-lags Eqn (4)'s |Loss(θ_i)−Loss(θ)| signal,
+    # the AutoFL reward, and the `global_loss` metric by < N rounds.
+    probe_every: int = 1
 
 
 def _probe_losses(model: FLModel, params, cx, cy, probe: int) -> jax.Array:
     """(S,) mean loss and (S,) mean squared loss of the global model on a
-    per-client probe subsample. cx: (S, n, ...), cy: (S, n)."""
+    per-client probe subsample. cx: (S, n, ...), cy: (S, n).
+
+    One flat (S·probe) forward instead of a vmap of S per-device
+    forwards: the model sees a single batch axis (bitwise-identical
+    per-sample losses — batching is outside every reduction — but a
+    flat batched matmul/conv instead of S tiny ones)."""
+    S = cx.shape[0]
     px, py = cx[:, :probe], cy[:, :probe]
-
-    def one(x, y):
-        ls = model.per_sample_loss(params, {"x": x, "y": y})
-        return jnp.mean(ls), jnp.mean(ls ** 2)
-
-    return jax.vmap(one)(px, py)
+    p = px.shape[1]  # the slice clamps when probe > samples-per-client
+    flat_x = px.reshape((S * p,) + px.shape[2:])
+    flat_y = py.reshape((S * p,) + py.shape[2:])
+    ls = model.per_sample_loss(params, {"x": flat_x, "y": flat_y})
+    ls = ls.reshape(S, p)
+    return jnp.mean(ls, axis=1), jnp.mean(ls ** 2, axis=1)
 
 
 def _local_sgd(model: FLModel, params, x, y, H, key, cfg: FLConfig):
@@ -77,7 +106,6 @@ def _local_sgd(model: FLModel, params, x, y, H, key, cfg: FLConfig):
 
 def _fedavg(global_params, client_params, weights):
     """θ' = θ + Σ w_k·(θ_k − θ)/Σw — via the fedavg kernel op."""
-    from repro.kernels.fedavg import ops as fedavg_ops
     wsum = jnp.maximum(jnp.sum(weights), 1e-9)
     wn = weights / wsum
     has = jnp.sum(weights) > 0
@@ -105,42 +133,25 @@ def select_slots(selected: jax.Array, k: int):
     return sel_idx, slot_live
 
 
-def make_round_body(model: FLModel, cfg: FLConfig, method: MethodSpec,
-                    scenario: Optional[Scenario] = None):
-    """Returns the *un-jitted*, closure-free
-    round(params, state, env, fleet, cx, cy, key, round_idx)
-    -> (params', state', env', metrics).
-
-    The fleet (`sim.devices.DeviceFleet`) and stacked client data
-    cx/cy ((S, n, ...)) are explicit pytree *arguments*, not trace-time
-    constants — so the same traced body vmaps over per-seed fleets and
-    partitions (engine.run_campaign_batch(per_seed_fleets=True)) and the
-    engine shards them as argument pytrees. `bind_round_body` recovers
-    the legacy round(params, state, env, key, round_idx) view by partial
-    application; env: `sim.dynamics.EnvState`.
-
-    `scenario` picks the fleet-dynamics regime (None ≡ static-paper):
-    static scenarios skip every dynamics branch at trace time — identical
-    PRNG stream and numerics to the pre-dynamics simulator, with env
-    carried through untouched. Dynamic scenarios evolve env between
-    rounds (channel migration, charging, churn) and gate selection on
-    `env.online`.
-
-    The raw body is what `launch.engine` scans over (`jax.lax.scan`
-    re-traces it per chunk); `make_round_fn` is the one-round jitted view
-    of the same computation, so engine and loop share numerics exactly.
-    """
+def _build_round_body(model: FLModel, cfg: FLConfig,
+                      method: Optional[MethodSpec],
+                      scenario: Optional[Scenario]):
+    """Shared body factory. `method` is a static MethodSpec (Python
+    branch dispatch, one compile per method) or None — in which case the
+    returned function takes a traced `MethodParams` as leading argument
+    and dispatches selector/policy via `lax.switch`."""
     K = cfg.n_select
     model_bits = float(cfg.uplink_bits or model.param_bits)
     dyn = scenario is not None and scenario.dynamic
     pcfg = cfg.policy
-    if method.policy == "fixed":
+    if method is not None and method.policy == "fixed":
         # fixed-H baselines never exceed H0 — shrink the static loop bound
+        # (the traced path cannot: its loop bound must cover every method)
         cfg = dataclasses.replace(
             cfg, policy=dataclasses.replace(pcfg, H_max=pcfg.H0))
 
-    def round_fn(params, state: FleetState, env: EnvState,
-                 fleet: DeviceFleet, cx, cy, key, round_idx):
+    def round_fn(mp: Optional[MethodParams], params, state: FleetState,
+                 env: EnvState, fleet: DeviceFleet, cx, cy, key, round_idx):
         S = fleet.n
         if dyn:
             k_env, k_rate, k_sel, k_train = jax.random.split(key, 4)
@@ -153,18 +164,43 @@ def make_round_body(model: FLModel, cfg: FLConfig, method: MethodSpec,
             k_rate, k_sel, k_train = jax.random.split(key, 3)
             rates = sample_rates(k_rate, fleet)
 
+        # method hyperparameters: trace-time constants (MethodSpec) or
+        # traced MethodParams leaves (the batched grid)
+        if mp is None:
+            alpha, beta = cfg.alpha, cfg.beta
+            autofl_eta, autofl_ema = cfg.autofl_eta, cfg.autofl_ema
+        else:
+            alpha, beta = mp.alpha, mp.beta
+            autofl_eta, autofl_ema = mp.autofl_eta, mp.autofl_ema
+
+        # --- global-model probe (amortised when probe_every > 1) ---------
+        if cfg.probe_every > 1:
+            g_loss = jax.lax.cond(
+                round_idx % cfg.probe_every == 0,
+                lambda: _probe_losses(model, params, cx, cy,
+                                      cfg.probe_size)[0],
+                lambda: state.g_loss)
+        else:
+            g_loss, _ = _probe_losses(model, params, cx, cy, cfg.probe_size)
+
         # --- candidate H per policy (Algorithm 1 line 8) -----------------
-        g_loss, g_loss_sq = _probe_losses(model, params, cx, cy,
-                                          cfg.probe_size)
-        if method.policy == "fixed":
-            H_cand = state.H  # stays at H0
-        elif method.policy == "adah":
-            H_cand = pol.h_adah(round_idx, S, pcfg)
-        else:  # rewa — Eqn (3) growth gated by Eqn (4)
+        def h_fixed():
+            return state.H  # stays at H0
+
+        def h_adah():
+            return pol.h_adah(round_idx, S, pcfg)
+
+        def h_rewa():  # Eqn (3) growth gated by Eqn (4)
             eps = pol.stopping_eps(state.last_local_loss, g_loss,
                                    state.last_energy, fleet.e0_reserve,
                                    state.last_ecp)
-            H_cand = pol.h_rewa(state.H, rates, eps, pcfg)
+            return pol.h_rewa(state.H, rates, eps, pcfg)
+
+        if mp is None:
+            H_cand = {"fixed": h_fixed, "adah": h_adah,
+                      "rewa": h_rewa}[method.policy]()
+        else:  # branch order = methods.POLICY_IDS
+            H_cand = jax.lax.switch(mp.policy_id, (h_fixed, h_adah, h_rewa))
 
         # --- cost estimates (line 9) -------------------------------------
         costs = round_costs(fleet, H_cand, rates, model_bits)
@@ -173,24 +209,49 @@ def make_round_body(model: FLModel, cfg: FLConfig, method: MethodSpec,
         # churn gates selection exactly like dropout, but is transient
         available = (~state.dropped & env.online) if dyn else ~state.dropped
         stat = state.last_stat
-        if method.selector == "random":
-            selected = sel.random_select(k_sel, K, available)
-        elif method.selector == "oort":
+
+        def sel_random():
+            return sel.random_select(k_sel, K, available)
+
+        def oort_utils():
             stat_tu = sel.temporal_uncertainty(stat, round_idx,
                                                state.last_round)
-            utils = util.oort_utility(stat_tu, costs.t_total,
-                                      T_round=cfg.T_round, alpha=cfg.alpha)
-            selected = sel.epsilon_greedy(k_sel, utils, K, available,
-                                          method.exploration)
-        elif method.selector == "autofl":
-            selected = sel.epsilon_greedy(k_sel, state.q_value, K, available,
-                                          method.exploration)
-        else:  # "rea": Eqn (2) — REAFL / REAFL+LUPA / REWAFL
-            utils = util.rewafl_utility(
+            return util.oort_utility(stat_tu, costs.t_total,
+                                     T_round=cfg.T_round, alpha=alpha)
+
+        def rea_utils():
+            return util.rewafl_utility(
                 stat, costs.t_total, costs.e_total, state.residual_energy,
-                fleet.e0_reserve, T_round=cfg.T_round, alpha=cfg.alpha,
-                beta=cfg.beta)
-            selected = sel.top_k_select(utils, K, available)
+                fleet.e0_reserve, T_round=cfg.T_round, alpha=alpha,
+                beta=beta)
+
+        if mp is None:
+            if method.selector == "random":
+                selected = sel_random()
+            elif method.selector == "oort":
+                selected = sel.epsilon_greedy(k_sel, oort_utils(), K,
+                                              available, method.exploration)
+            elif method.selector == "autofl":
+                selected = sel.epsilon_greedy(k_sel, state.q_value, K,
+                                              available, method.exploration)
+            else:  # "rea": Eqn (2) — REAFL / REAFL+LUPA / REWAFL
+                selected = sel.top_k_select(rea_utils(), K, available)
+        else:
+            # one unified rank-space ε-greedy serves every selector: the
+            # switch (branch order = methods.SELECTOR_IDS) only picks the
+            # cheap score arithmetic, and mp.exploration is the effective
+            # ε (random ≡ 1: all slots from the same uniform draw
+            # random_select makes; rea ≡ 0: pure ranking). One sort-based
+            # mechanism to compile instead of four — masks stay
+            # bit-identical to the static branches above.
+            scores = jax.lax.switch(mp.selector_id, (
+                lambda: jnp.zeros_like(stat),   # random: ε=1 ignores them
+                oort_utils,
+                lambda: state.q_value,
+                rea_utils,
+            ))
+            selected = sel.epsilon_greedy_traced(k_sel, scores, K,
+                                                 available, mp.exploration)
 
         # --- feasibility: selected devices without enough battery fail ---
         feasible = costs.e_total < (state.residual_energy - fleet.e0_reserve)
@@ -248,9 +309,9 @@ def make_round_body(model: FLModel, cfg: FLConfig, method: MethodSpec,
         # AutoFL bandit value: EMA of (global-loss drop proxy)/energy
         loss_drop_k = jnp.maximum(g_loss[sel_idx] - l_loss_k, 0.0)
         reward_k = util.autofl_reward(loss_drop_k, costs.e_total[sel_idx],
-                                      eta=cfg.autofl_eta)
-        q_sel = (cfg.autofl_ema * state.q_value[sel_idx]
-                 + (1 - cfg.autofl_ema) * reward_k * 1e3)
+                                      eta=autofl_eta)
+        q_sel = (autofl_ema * state.q_value[sel_idx]
+                 + (1 - autofl_ema) * reward_k * 1e3)
         new_q = scatter(state.q_value, q_sel, part_k)
 
         # dropout: can no longer afford even H=1 + uplink at its mean
@@ -274,6 +335,7 @@ def make_round_body(model: FLModel, cfg: FLConfig, method: MethodSpec,
             n_participations=state.n_participations
             + participating.astype(jnp.int32),
             n_selected=state.n_selected + selected.astype(jnp.int32),
+            g_loss=g_loss,
         )
         n_part = jnp.sum(participating)
         metrics = {
@@ -294,6 +356,53 @@ def make_round_body(model: FLModel, cfg: FLConfig, method: MethodSpec,
         return new_params, new_state, env, metrics
 
     return round_fn
+
+
+def make_round_body(model: FLModel, cfg: FLConfig, method: MethodSpec,
+                    scenario: Optional[Scenario] = None):
+    """Returns the *un-jitted*, closure-free
+    round(params, state, env, fleet, cx, cy, key, round_idx)
+    -> (params', state', env', metrics).
+
+    The fleet (`sim.devices.DeviceFleet`) and stacked client data
+    cx/cy ((S, n, ...)) are explicit pytree *arguments*, not trace-time
+    constants — so the same traced body vmaps over per-seed fleets and
+    partitions (engine.run_campaign_batch(per_seed_fleets=True)) and the
+    engine shards them as argument pytrees. `bind_round_body` recovers
+    the legacy round(params, state, env, key, round_idx) view by partial
+    application; env: `sim.dynamics.EnvState`.
+
+    `scenario` picks the fleet-dynamics regime (None ≡ static-paper):
+    static scenarios skip every dynamics branch at trace time — identical
+    PRNG stream and numerics to the pre-dynamics simulator, with env
+    carried through untouched. Dynamic scenarios evolve env between
+    rounds (channel migration, charging, churn) and gate selection on
+    `env.online`.
+
+    The raw body is what `launch.engine` scans over (`jax.lax.scan`
+    re-traces it per chunk); `make_round_fn` is the one-round jitted view
+    of the same computation, so engine and loop share numerics exactly.
+    """
+    body = _build_round_body(model, cfg, method, scenario)
+
+    def round_fn(params, state: FleetState, env: EnvState,
+                 fleet: DeviceFleet, cx, cy, key, round_idx):
+        return body(None, params, state, env, fleet, cx, cy, key, round_idx)
+
+    return round_fn
+
+
+def make_round_body_mp(model: FLModel, cfg: FLConfig,
+                       scenario: Optional[Scenario] = None):
+    """The traced-method view of the round:
+    round(mp, params, state, env, fleet, cx, cy, key, round_idx) with
+    `mp: methods.MethodParams` a vmappable argument pytree — selector and
+    policy dispatch via `lax.switch` on its branch ids, so one trace (and
+    one XLA compile) covers every batchable method. Same PRNG stream,
+    same ranking semantics, bit-identical selection masks to the static
+    `make_round_body(model, cfg, spec, scenario)` at equal
+    hyperparameters (`tests/test_engine.py` grid-parity tests)."""
+    return _build_round_body(model, cfg, None, scenario)
 
 
 def bind_round_body(body, fleet: DeviceFleet, cx, cy):

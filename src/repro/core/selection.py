@@ -1,4 +1,17 @@
-"""Participant selection: top-K ranking + baseline selection mechanisms."""
+"""Participant selection: top-K ranking + baseline selection mechanisms.
+
+Every mechanism exists in two flavours sharing one ranking semantics
+(stable descending order, ties broken toward the lower device index —
+exactly `lax.top_k`'s tie rule):
+
+  static k / ε   — `top_k_select` / `epsilon_greedy`: k and ε are Python
+                   values fixed at trace time (the per-method path).
+  traced ε       — `epsilon_greedy_traced`: ε enters as a jnp scalar
+                   (e.g. from `methods.MethodParams`) so one traced
+                   selection serves every method of a batched campaign
+                   grid. Produces bit-identical masks to the static
+                   version for the same (key, utils, availability, ε).
+"""
 from __future__ import annotations
 
 import jax
@@ -26,17 +39,69 @@ def random_select(key: jax.Array, k: int, available: jax.Array) -> jax.Array:
     return top_k_select(scores, k, available)
 
 
+def _explore_slots(eps: float, k: int) -> int:
+    """ε-greedy exploration quota: round(ε·K), at least one slot for any
+    positive ε (Oort keeps exploring as long as ε > 0) and exactly zero
+    for ε ≤ 0 — pure exploitation must be expressible (an Oort/AutoFL
+    configuration with eps=0 previously still explored one slot)."""
+    if eps <= 0:
+        return 0
+    return min(k, max(1, int(round(eps * k))))
+
+
 def epsilon_greedy(key: jax.Array, utils: jax.Array, k: int,
                    available: jax.Array, eps: float = 0.1) -> jax.Array:
     """Oort's exploit/explore split: (1−ε)K by utility, εK random."""
     k = min(k, available.shape[-1])
     if k <= 0:
         return jnp.zeros(available.shape, bool)
-    k_explore = min(k, max(1, int(round(eps * k))))
+    k_explore = _explore_slots(eps, k)
     k_exploit = k - k_explore
     sel_x = top_k_select(utils, k_exploit, available)
     rest = available & ~sel_x
     sel_r = random_select(key, k_explore, rest)
+    return sel_x | sel_r
+
+
+# ------------------------------------------------- traced-ε (MethodParams)
+
+def _desc_rank(scores: jax.Array) -> jax.Array:
+    """rank[i] = position of device i in a stable descending sort — the
+    rank-space dual of lax.top_k (ties go to the lower index)."""
+    order = jnp.argsort(-scores, stable=True)
+    S = scores.shape[-1]
+    return jnp.zeros((S,), jnp.int32).at[order].set(
+        jnp.arange(S, dtype=jnp.int32))
+
+
+def top_k_select_traced(utils: jax.Array, k: jax.Array,
+                        available: jax.Array) -> jax.Array:
+    """`top_k_select` with a *traced* k: mask of devices whose stable
+    descending rank (among available) is < k. Identical masks to the
+    static version for any 0 ≤ k ≤ S."""
+    masked = jnp.where(available, utils, NEG)
+    return (_desc_rank(masked) < k) & available
+
+
+def epsilon_greedy_traced(key: jax.Array, utils: jax.Array, k: int,
+                          available: jax.Array,
+                          eps: jax.Array) -> jax.Array:
+    """`epsilon_greedy` with a traced ε (static k): the exploration quota
+    round(ε·k) becomes a traced integer and both sub-selections use the
+    rank-space top-k. PRNG use matches the static path exactly (one
+    `uniform(key, (S,))` draw), as does the quota rule — `jnp.round` is
+    round-half-even like Python's `round`, ε ≤ 0 means zero exploration
+    slots, any positive ε at least one — so masks are bit-identical to
+    the static version at equal ε."""
+    k = min(k, available.shape[-1])
+    if k <= 0:
+        return jnp.zeros(available.shape, bool)
+    k_explore = jnp.clip(jnp.round(eps * k).astype(jnp.int32), 0, k)
+    k_explore = jnp.where(eps > 0, jnp.maximum(k_explore, 1), 0)
+    sel_x = top_k_select_traced(utils, k - k_explore, available)
+    rest = available & ~sel_x
+    scores = jax.random.uniform(key, available.shape)
+    sel_r = top_k_select_traced(scores, k_explore, rest)
     return sel_x | sel_r
 
 

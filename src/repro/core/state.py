@@ -22,6 +22,10 @@ class FleetState(NamedTuple):
     q_value: jax.Array           # f32 — AutoFL bandit value estimate
     n_participations: jax.Array  # i32
     n_selected: jax.Array        # i32 — times selected (incl. failed)
+    g_loss: jax.Array            # f32 — last probed global-model loss per
+                                 # device (refreshed every probe_every
+                                 # rounds; round 0 always probes, so the
+                                 # init value is never consumed)
 
 
 def replicate_state(state: FleetState, n: int) -> FleetState:
@@ -51,4 +55,5 @@ def init_fleet_state(fleet: DeviceFleet, *, H0: int = 5,
         q_value=jnp.full((S,), 1e3, f32),
         n_participations=jnp.zeros((S,), jnp.int32),
         n_selected=jnp.zeros((S,), jnp.int32),
+        g_loss=jnp.zeros((S,), f32),
     )

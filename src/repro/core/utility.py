@@ -22,33 +22,45 @@ def statistical_utility(data_size: jax.Array,
         jnp.maximum(loss_sq_mean, 0.0))
 
 
-def latency_utility(t: jax.Array, T_round: float, alpha: float) -> jax.Array:
+def _pow(base: jax.Array, exponent) -> jax.Array:
+    """base**exponent with the exponent-1 case guarded to return `base`
+    exactly. XLA's simplifier already does this for a *static* exponent;
+    the guard extends the exact identity to a traced exponent (e.g.
+    `MethodParams.alpha`), so the method-batched campaign path ranks
+    devices bit-identically to the per-method path at the paper's α=β=1
+    (runtime pow is only a few-ulp approximation of x^1)."""
+    return jnp.where(exponent == 1, base, base ** exponent)
+
+
+def latency_utility(t: jax.Array, T_round: float, alpha) -> jax.Array:
     """(T/t)^(I(T<t)·α): penalise only devices slower than the preferred
-    round duration T (Oort's global system utility)."""
+    round duration T (Oort's global system utility). `alpha` may be a
+    Python float or a traced jnp scalar (MethodParams)."""
     ratio = T_round / jnp.maximum(t, 1e-9)
-    pen = jnp.where(t > T_round, ratio ** alpha, 1.0)
+    pen = jnp.where(t > T_round, _pow(ratio, alpha), 1.0)
     return pen.astype(jnp.float32)
 
 
 def energy_utility(residual: jax.Array, e0: jax.Array, e: jax.Array,
-                   beta: float) -> jax.Array:
-    """((E−E0)/e)^β when e < E−E0, else exactly 0 (U(x)=∞ branch)."""
+                   beta) -> jax.Array:
+    """((E−E0)/e)^β when e < E−E0, else exactly 0 (U(x)=∞ branch).
+    `beta` may be a Python float or a traced jnp scalar (MethodParams)."""
     avail = residual - e0
     ratio = avail / jnp.maximum(e, 1e-9)
     feasible = e < avail
-    return jnp.where(feasible, jnp.maximum(ratio, 1e-9) ** beta,
+    return jnp.where(feasible, _pow(jnp.maximum(ratio, 1e-9), beta),
                      0.0).astype(jnp.float32)
 
 
 def oort_utility(stat: jax.Array, t: jax.Array, *, T_round: float,
-                 alpha: float) -> jax.Array:
+                 alpha) -> jax.Array:
     """Eqn (1)."""
     return stat * latency_utility(t, T_round, alpha)
 
 
 def rewafl_utility(stat: jax.Array, t: jax.Array, e: jax.Array,
                    residual: jax.Array, e0: jax.Array, *, T_round: float,
-                   alpha: float, beta: float) -> jax.Array:
+                   alpha, beta) -> jax.Array:
     """Eqn (2) — the REA PS utility (used by both REAFL and REWAFL)."""
     return (stat
             * latency_utility(t, T_round, alpha)

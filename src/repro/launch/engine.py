@@ -24,20 +24,30 @@ Layers (each usable on its own):
                     dynamics (sim.dynamics: Markov channels, charging,
                     churn) selected by a `Scenario`.
   EngineCfg/run_rounds
-                  — chunked driver: runs chunks back-to-back, stacks the
-                    per-round history pytree host-side, and early-stops
-                    on target accuracy at chunk boundaries.
+                  — chunked driver: runs chunks back-to-back with the
+                    carry donated between chunks, streams each chunk's
+                    history to preallocated host buffers *while the next
+                    chunk runs*, and early-stops on target accuracy at
+                    chunk boundaries.
   shard_over_fleet— place every array whose leading axis is S on a 1-D
                     "fleet" mesh (jax.sharding.NamedSharding); selection
                     top-k and the K-slot gathers stay global ops and are
                     partitioned by GSPMD.
   run_campaign_batch
                   — vmap independent campaigns (one per seed) through
-                    the same chunk body for the benchmark grids; methods
-                    differ structurally, so grids loop methods in Python
-                    and vmap the seed axis. With `per_seed_fleets=True`
-                    the fleet/data pytrees carry a leading seed axis and
-                    every seed runs its own fleet draw and λ-partition.
+                    the same chunk body for the benchmark grids. With
+                    `per_seed_fleets=True` the fleet/data pytrees carry a
+                    leading seed axis and every seed runs its own fleet
+                    draw and λ-partition.
+  run_campaign_grid
+                  — (method × seed) grids. Batchable methods lower to a
+                    `MethodParams` pytree (`core.methods`) and the whole
+                    grid runs as ONE compiled program: the traced round
+                    body (`make_round_body_mp`, lax.switch dispatch) is
+                    vmapped over the seed axis and then over the method
+                    axis — one trace, one XLA compile, M·B campaigns.
+                    Structurally incompatible methods fall back to
+                    per-method compilation (`run_campaign_batch`).
 """
 from __future__ import annotations
 
@@ -49,8 +59,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.methods import MethodSpec
-from repro.core.round import FLConfig, make_round_body
+from repro.core.methods import (MethodSpec, batchable, method_params_batch)
+from repro.core.round import (FLConfig, make_round_body, make_round_body_mp)
 from repro.core.state import FleetState, init_fleet_state, replicate_state
 from repro.launch.mesh import make_fleet_mesh
 from repro.models.fl_models import FLModel
@@ -63,9 +73,13 @@ class EngineCfg:
     chunk_size: int = 8          # rounds per compiled scan chunk
     collect_per_device: bool = True   # keep (R, S) traces (selected, H)
     fleet_shards: Optional[int] = None  # shard S over this many devices
-    # donate params/state between chunks (off by default: the fresh-init
-    # state aliases fleet buffers, and XLA rejects doubly-donated buffers)
-    donate: bool = False
+    # donate params/state between chunks so XLA reuses the carry buffers
+    # in place. Safe by default: run_rounds hands the first chunk private
+    # copies of params/state, so the caller's arrays survive and the
+    # fresh-init state leaves that alias fleet buffers (residual_energy /
+    # last_energy ARE fleet.init_energy) are never both donated and
+    # passed as an un-donated fleet argument.
+    donate: bool = True
 
 
 # --------------------------------------------------------------- sharding
@@ -89,6 +103,13 @@ def replicate(tree, mesh):
     """device_put every leaf fully replicated on the fleet mesh."""
     repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
     return jax.tree.map(lambda x: jax.device_put(x, repl), tree)
+
+
+def _copy_tree(tree):
+    """Leaf-wise defensive copy: every leaf gets its own buffer (breaks
+    caller aliasing before donation). asarray first — pytrees may carry
+    Python-scalar leaves, which have no .copy()."""
+    return jax.tree.map(lambda x: jnp.asarray(x).copy(), tree)
 
 
 # ------------------------------------------------------------ chunked scan
@@ -123,6 +144,21 @@ def _chunk_body(round_body, length: int, collect_per_device: bool):
     return chunk
 
 
+def _chunk_body_mp(round_body_mp, length: int, collect_per_device: bool):
+    """`_chunk_body` for the traced-method round: the `MethodParams`
+    pytree leads the signature as a loop-invariant argument, so the
+    campaign grid can vmap it over the method axis."""
+
+    def chunk(mp, params, state, env, fleet, cx, cy, key, start_round):
+        inner = _chunk_body(
+            lambda p, s, e, f, x, y, k, r:
+                round_body_mp(mp, p, s, e, f, x, y, k, r),
+            length, collect_per_device)
+        return inner(params, state, env, fleet, cx, cy, key, start_round)
+
+    return chunk
+
+
 def make_chunk_fn(model: FLModel, cfg: FLConfig, method: MethodSpec, *,
                   chunk_size: int = 8, collect_per_device: bool = True,
                   donate: bool = False, scenario: Optional[Scenario] = None):
@@ -130,7 +166,8 @@ def make_chunk_fn(model: FLModel, cfg: FLConfig, method: MethodSpec, *,
     -> (params', state', env', key', history) running `chunk_size` rounds
     on device. Closure-free like the round body: one compiled chunk
     serves any same-shaped fleet/dataset. `history` leaves have leading
-    axis chunk_size."""
+    axis chunk_size. With `donate=True` the params/state inputs are
+    consumed (aliased into the outputs) — callers must not reuse them."""
     body = make_round_body(model, cfg, method, scenario)
     chunk = _chunk_body(body, chunk_size, collect_per_device)
     donate_argnums = (0, 1) if donate else ()
@@ -146,6 +183,64 @@ def _empty_history(chunk_fn, args) -> Dict[str, np.ndarray]:
             for k, v in shapes.items()}
 
 
+# ----------------------------------------------------- async history fetch
+
+class _HostHistory:
+    """Preallocated host-side history buffers with deferred device fetch.
+
+    The old drivers called `jax.device_get(hist)` right after each chunk
+    dispatch — a host-sync stall for the full chunk execution — and then
+    paid an O(R) `np.concatenate` over all chunks at the end. Here the
+    fetch of chunk *i* is deferred until chunk *i+1* has been dispatched
+    (`push` then `drain` next iteration), so the host copies one chunk's
+    history while the device runs the next, and every chunk lands
+    directly in its slice of a preallocated per-metric buffer (allocated
+    lazily from the first fetched chunk's shapes, `round_axis` scaled to
+    the campaign length — no concatenate churn)."""
+
+    def __init__(self, total_rounds: int, round_axis: int):
+        self.total = total_rounds
+        self.axis = round_axis
+        self.bufs: Optional[Dict[str, np.ndarray]] = None
+        self._pending: List = []
+
+    def push(self, hist, offset: int, length: int) -> None:
+        """Register a chunk's on-device history for a later fetch."""
+        self._pending.append((hist, offset, length))
+
+    def drain(self) -> None:
+        """Fetch every pending chunk into the host buffers (blocks only
+        on those chunks' completion, not on anything dispatched after)."""
+        for hist, off, length in self._pending:
+            h = jax.device_get(hist)
+            if self.bufs is None:
+                self.bufs = {}
+                for k, v in h.items():
+                    shape = list(v.shape)
+                    shape[self.axis] = self.total
+                    self.bufs[k] = np.empty(shape, v.dtype)
+            for k, v in h.items():
+                sl = [slice(None)] * v.ndim
+                sl[self.axis] = slice(off, off + length)
+                self.bufs[k][tuple(sl)] = v
+        self._pending.clear()
+
+    def finalize(self, rounds_done: int) -> Optional[Dict[str, np.ndarray]]:
+        """Drain and return the buffers truncated to `rounds_done` (early
+        stop). None when no chunk ever ran (rounds=0)."""
+        self.drain()
+        if self.bufs is None:
+            return None
+        if rounds_done == self.total:
+            return self.bufs
+        out = {}
+        for k, v in self.bufs.items():
+            sl = [slice(None)] * v.ndim
+            sl[self.axis] = slice(0, rounds_done)
+            out[k] = v[tuple(sl)]
+        return out
+
+
 @dataclasses.dataclass
 class EngineResult:
     params: object
@@ -157,9 +252,20 @@ class EngineResult:
     env: Optional[EnvState] = None   # final environment state
     # per-chunk wall clock (first entry includes JIT compile) + rounds per
     # chunk: lets callers report steady-state throughput separately from
-    # compile time (benchmarks.common.cached_run)
+    # compile time (benchmarks.common.cached_run). With the async history
+    # off-load, chunk i's wall covers its dispatch, the fetch of chunk
+    # i−1's history, and the chunk-boundary eval (which blocks on chunk
+    # i) when eval_fn is given; the final fetch is folded into the last
+    # entry, so the sum still tracks total loop wall and
+    # (sum − compile_s) / rounds is the steady campaign throughput.
     chunk_wall_s: Optional[np.ndarray] = None
     chunk_rounds: Optional[np.ndarray] = None
+    # host-side wall of the chunk dispatches that triggered a fresh jit
+    # (first chunk + any remainder length): with async dispatch the call
+    # returns right after trace+compile without waiting on execution, so
+    # this isolates compile time directly instead of inferring it from
+    # the wall of a chunk that mixes compile and execution
+    compile_s: float = 0.0
 
 
 def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
@@ -191,6 +297,13 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
             env_key = jax.random.fold_in(key, 0x0d1f)
         env = init_env_state(fleet, scenario, key=env_key if dyn else None)
 
+    if ecfg.donate:
+        # the first chunk consumes (donates) its params/state inputs:
+        # private copies keep the caller's arrays alive and un-alias the
+        # fresh-init state leaves that share buffers with the fleet
+        params = _copy_tree(params)
+        state = _copy_tree(state)
+
     if ecfg.fleet_shards and ecfg.fleet_shards > 1:
         mesh = make_fleet_mesh(ecfg.fleet_shards)
         fleet = shard_over_fleet(fleet, mesh, S)
@@ -210,32 +323,41 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
                 donate=ecfg.donate, scenario=scenario)
         return chunk_fns[length]
 
-    hists: List = []
+    hh = _HostHistory(rounds, round_axis=0)
     acc_curve: List[float] = []
     chunk_wall: List[float] = []
     chunk_len: List[int] = []
+    compile_s = 0.0
     reached = None
     done = 0
     while done < rounds:
         length = min(ecfg.chunk_size, rounds - done)
+        fresh = length not in chunk_fns
         t0 = time.time()
         params, state, env, key, hist = chunk_fn(length)(
             params, state, env, fleet, cx, cy, key,
             jnp.asarray(done, jnp.int32))
-        hists.append(jax.device_get(hist))   # blocks on the chunk
-        chunk_wall.append(time.time() - t0)
+        if fresh:                    # dispatch wall ≈ trace + compile
+            compile_s += time.time() - t0
+        hh.drain()                   # fetch chunk i−1 while chunk i runs
+        hh.push(hist, done, length)
         chunk_len.append(length)
         done += length
-        if eval_fn is not None:
-            acc = float(eval_fn(params))
-            acc_curve.append(acc)
+        stop = False
+        if eval_fn is not None:      # blocks on this chunk — timed in,
+            acc = float(eval_fn(params))   # so chunk walls keep covering
+            acc_curve.append(acc)          # the execution they used to
             if target_acc is not None and acc >= target_acc:
                 reached = done - 1
-                break
-    if hists:
-        history = {k: np.concatenate([np.asarray(h[k]) for h in hists])
-                   for k in hists[0]}
-    else:  # rounds=0: empty but correctly-keyed history
+                stop = True
+        chunk_wall.append(time.time() - t0)
+        if stop:
+            break
+    t0 = time.time()
+    history = hh.finalize(done)
+    if chunk_wall:                   # last fetch blocks on the last chunk
+        chunk_wall[-1] += time.time() - t0
+    if history is None:  # rounds=0: empty but correctly-keyed history
         history = _empty_history(
             chunk_fn(1), (params, state, env, fleet, cx, cy, key,
                           jnp.asarray(0, jnp.int32)))
@@ -244,55 +366,20 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
                         acc_curve=np.asarray(acc_curve, np.float64),
                         env=env,
                         chunk_wall_s=np.asarray(chunk_wall, np.float64),
-                        chunk_rounds=np.asarray(chunk_len, np.int64))
+                        chunk_rounds=np.asarray(chunk_len, np.int64),
+                        compile_s=compile_s)
 
 
 # ------------------------------------------------------- campaign batching
 
-def run_campaign_batch(model: FLModel, fleet: DeviceFleet, cx, cy,
-                       cfg: FLConfig, method: MethodSpec, *,
-                       seeds: Sequence[int], rounds: int,
-                       chunk_size: int = 8,
-                       collect_per_device: bool = False,
-                       scenario: Optional[Scenario] = None,
-                       per_seed_fleets: bool = False,
-                       eval_fn: Optional[Callable] = None,
-                       target_acc: Optional[float] = None
-                       ) -> Dict[str, np.ndarray]:
-    """vmap independent campaigns over the seed axis. Per-seed init params
-    and PRNG streams always (the key derivation matches run_fl's
-    `PRNGKey(seed+2)` init / `PRNGKey(seed+1)` loop-key / `PRNGKey(seed+3)`
-    env convention).
-
-    `per_seed_fleets=False` (legacy): one shared fleet/dataset — cross-seed
-    variance covers init + round randomness only, and results differ from
-    per-seed `run_fl(seed=s)` calls (which rebuild fleet and data).
-    `per_seed_fleets=True`: fleet/cx/cy leaves carry a leading seed axis
-    B = len(seeds) (`sim.devices.build_fleet_batch` /
-    `launch.fl_run.build_task_batch`) and the vmap runs every seed on its
-    own fleet draw and λ-partition — cross-seed variance then includes the
-    fleet/data heterogeneity the paper's rankings are about, and seed i
-    reproduces `run_fl(seed=seeds[i])` round-for-round.
-
-    `eval_fn(params_batch) -> (B,)` is evaluated at every chunk boundary
-    (batched campaigns never early-stop — all seeds run all rounds);
-    with `target_acc` the history gains `reached_round` (B,), the first
-    chunk-end round index where a seed's accuracy met the target (-1 if
-    never), mirroring run_rounds' chunk-granular early-stop semantics.
-
-    Returns history with leading axes (n_seeds, rounds), plus
-    `final_residual_energy`/`final_H` (B, S), `chunk_wall_s`/`chunk_rounds`
-    (n_chunks,) timing, and `acc_curve` (n_chunks, B) when `eval_fn` is
-    given."""
-    if chunk_size < 1:
-        raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
-    body = make_round_body(model, cfg, method, scenario)
+def _campaign_init(model: FLModel, fleet: DeviceFleet, cfg: FLConfig,
+                   seeds: Sequence[int], scenario: Optional[Scenario],
+                   per_seed_fleets: bool):
+    """Per-seed init params / state / env / loop keys for a vmapped
+    campaign batch (the key derivation matches run_fl's `PRNGKey(seed+2)`
+    init / `PRNGKey(seed+1)` loop-key / `PRNGKey(seed+3)` env
+    convention)."""
     B = len(seeds)
-    fleet_ax = 0 if per_seed_fleets else None
-    chunk = _chunk_body(body, chunk_size, collect_per_device)
-    in_axes = (0, 0, 0, fleet_ax, fleet_ax, fleet_ax, 0, None)
-    batched = jax.jit(jax.vmap(chunk, in_axes=in_axes))
-
     params = jax.vmap(model.init)(
         jnp.stack([jax.random.PRNGKey(s + 2) for s in seeds]))
     H0 = cfg.policy.H0
@@ -314,38 +401,94 @@ def run_campaign_batch(model: FLModel, fleet: DeviceFleet, cx, cy,
         else:
             env = replicate_state(init_env_state(fleet, scenario), B)
     keys = jnp.stack([jax.random.PRNGKey(s + 1) for s in seeds])
+    return params, state, env, keys
 
-    hists: List = []
+
+def run_campaign_batch(model: FLModel, fleet: DeviceFleet, cx, cy,
+                       cfg: FLConfig, method: MethodSpec, *,
+                       seeds: Sequence[int], rounds: int,
+                       chunk_size: int = 8,
+                       collect_per_device: bool = False,
+                       scenario: Optional[Scenario] = None,
+                       per_seed_fleets: bool = False,
+                       eval_fn: Optional[Callable] = None,
+                       target_acc: Optional[float] = None
+                       ) -> Dict[str, np.ndarray]:
+    """vmap independent campaigns over the seed axis. Per-seed init params
+    and PRNG streams always.
+
+    `per_seed_fleets=False` (legacy): one shared fleet/dataset — cross-seed
+    variance covers init + round randomness only, and results differ from
+    per-seed `run_fl(seed=s)` calls (which rebuild fleet and data).
+    `per_seed_fleets=True`: fleet/cx/cy leaves carry a leading seed axis
+    B = len(seeds) (`sim.devices.build_fleet_batch` /
+    `launch.fl_run.build_task_batch`) and the vmap runs every seed on its
+    own fleet draw and λ-partition — cross-seed variance then includes the
+    fleet/data heterogeneity the paper's rankings are about, and seed i
+    reproduces `run_fl(seed=seeds[i])` round-for-round.
+
+    `eval_fn(params_batch) -> (B,)` is evaluated at every chunk boundary
+    (batched campaigns never early-stop — all seeds run all rounds);
+    with `target_acc` the history gains `reached_round` (B,), the first
+    chunk-end round index where a seed's accuracy met the target (-1 if
+    never), mirroring run_rounds' chunk-granular early-stop semantics.
+
+    Per-chunk histories stream into preallocated host buffers while the
+    next chunk runs (`_HostHistory`) — no end-of-campaign concatenate.
+
+    Returns history with leading axes (n_seeds, rounds), plus
+    `final_residual_energy`/`final_H` (B, S), `chunk_wall_s`/`chunk_rounds`
+    (n_chunks,) timing, and `acc_curve` (n_chunks, B) when `eval_fn` is
+    given."""
+    if chunk_size < 1:
+        raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+    body = make_round_body(model, cfg, method, scenario)
+    B = len(seeds)
+    fleet_ax = 0 if per_seed_fleets else None
+    chunk = _chunk_body(body, chunk_size, collect_per_device)
+    in_axes = (0, 0, 0, fleet_ax, fleet_ax, fleet_ax, 0, None)
+    batched = jax.jit(jax.vmap(chunk, in_axes=in_axes))
+
+    params, state, env, keys = _campaign_init(model, fleet, cfg, seeds,
+                                              scenario, per_seed_fleets)
+
+    hh = _HostHistory(rounds, round_axis=1)
     acc_curve: List[np.ndarray] = []
     chunk_wall: List[float] = []
     chunk_len: List[int] = []
+    compile_s = 0.0
     reached = np.full((B,), -1, np.int64)
     done = 0
     while done < rounds:
         length = min(chunk_size, rounds - done)
+        fresh = done == 0
         if length != chunk_size:  # remainder chunk: separate trace
             batched = jax.jit(jax.vmap(
                 _chunk_body(body, length, collect_per_device),
                 in_axes=in_axes))
+            fresh = True
         t0 = time.time()
         params, state, env, keys, hist = batched(
             params, state, env, fleet, cx, cy, keys,
             jnp.asarray(done, jnp.int32))
-        hists.append(jax.device_get(hist))   # blocks on the chunk
-        chunk_wall.append(time.time() - t0)
+        if fresh:                    # dispatch wall ≈ trace + compile
+            compile_s += time.time() - t0
+        hh.drain()                   # fetch chunk i−1 while chunk i runs
+        hh.push(hist, done, length)
         chunk_len.append(length)
         done += length
-        if eval_fn is not None:
+        if eval_fn is not None:      # blocks on this chunk — timed in
             acc = np.asarray(eval_fn(params), np.float64)
             acc_curve.append(acc)
             if target_acc is not None:
                 newly = (acc >= target_acc) & (reached < 0)
                 reached[newly] = done - 1
-    if hists:
-        history = {k: np.concatenate([np.asarray(h[k]) for h in hists],
-                                     axis=1)
-                   for k in hists[0]}
-    else:  # rounds=0: empty but correctly-keyed (n_seeds, 0, ...) history
+        chunk_wall.append(time.time() - t0)
+    t0 = time.time()
+    history = hh.finalize(done)
+    if chunk_wall:
+        chunk_wall[-1] += time.time() - t0
+    if history is None:  # rounds=0: empty but correctly-keyed history
         shapes = jax.eval_shape(batched, params, state, env, fleet, cx, cy,
                                 keys, jnp.asarray(0, jnp.int32))[4]
         history = {k: np.zeros((B, 0) + tuple(v.shape[2:]), v.dtype)
@@ -354,12 +497,148 @@ def run_campaign_batch(model: FLModel, fleet: DeviceFleet, cx, cy,
     history["final_H"] = np.asarray(state.H)
     history["chunk_wall_s"] = np.asarray(chunk_wall, np.float64)
     history["chunk_rounds"] = np.asarray(chunk_len, np.int64)
+    history["compile_s"] = np.float64(compile_s)
     if eval_fn is not None:
         history["acc_curve"] = (np.stack(acc_curve) if acc_curve
                                 else np.zeros((0, B)))
         if target_acc is not None:
             history["reached_round"] = reached
     return history
+
+
+def _run_grid_batched(model: FLModel, fleet: DeviceFleet, cx, cy,
+                      cfg: FLConfig, methods: Dict[str, MethodSpec], *,
+                      seeds: Sequence[int], rounds: int, chunk_size: int,
+                      collect_per_device: bool,
+                      scenario: Optional[Scenario],
+                      per_seed_fleets: bool,
+                      eval_fn: Optional[Callable],
+                      target_acc: Optional[float]
+                      ) -> Dict[str, Dict[str, np.ndarray]]:
+    """One-compile (method × seed) grid: the M×B grid cells flatten into
+    ONE vmapped axis of length M·B — cell i·B+j runs method i on seed j —
+    so the whole grid is a single XLA program with a single batching
+    level (a nested method-over-seed vmap measures ~35% more compile for
+    the same math). Per-cell `MethodParams` repeat each method B times;
+    selector/policy dispatch via lax.switch on its ids, with all
+    selectors sharing one rank-space ε-greedy mechanism. With per-seed
+    fleets the (B,)-leaf fleet/data pytrees stay *unbatched* arguments
+    and each cell gathers its seed's slice on device (`x[seed_idx]`) —
+    the host never tiles the M× client-data copies. Returns the same
+    per-method history dicts as the fallback path, with `chunk_wall_s` /
+    `compile_s` divided by M (each method's share of the shared program)
+    so per-method `us_per_round` stays comparable."""
+    names = list(methods)
+    M, B = len(names), len(seeds)
+    mp = method_params_batch([methods[n] for n in names],
+                             alpha=cfg.alpha, beta=cfg.beta,
+                             autofl_eta=cfg.autofl_eta,
+                             autofl_ema=cfg.autofl_ema)
+    if all(methods[n].policy == "fixed" for n in names):
+        # the shared local-SGD loop bound must cover every method in the
+        # grid: an all-fixed grid never exceeds H0, so shrink the static
+        # bound exactly like the per-method path does (a grid that mixes
+        # in adah/rewa keeps H_max — its fixed members pay masked no-op
+        # iterations beyond H0, the price of the single shared program)
+        cfg = dataclasses.replace(cfg, policy=dataclasses.replace(
+            cfg.policy, H_max=cfg.policy.H0))
+    body = make_round_body_mp(model, cfg, scenario)
+    # cell layout: method-major — mp leaves repeat per seed, seed_idx
+    # tiles per method
+    mp_cells = jax.tree.map(lambda x: jnp.repeat(x, B, axis=0), mp)
+    seed_idx = jnp.tile(jnp.arange(B, dtype=jnp.int32), M)
+
+    def cell_chunk(length: int):
+        chunk = _chunk_body_mp(body, length, collect_per_device)
+
+        def run(mp_c, sidx, params, state, env, fleet, cx, cy, key, start):
+            if per_seed_fleets:   # on-device per-cell gather of seed data
+                fleet = jax.tree.map(lambda x: x[sidx], fleet)
+                cx, cy = cx[sidx], cy[sidx]
+            return chunk(mp_c, params, state, env, fleet, cx, cy, key,
+                         start)
+
+        return run
+
+    cell_axes = (0, 0, 0, 0, 0, None, None, None, 0, None)
+
+    def grid_fn(length: int):
+        return jax.jit(jax.vmap(cell_chunk(length), in_axes=cell_axes))
+
+    params, state, env, keys = _campaign_init(model, fleet, cfg, seeds,
+                                              scenario, per_seed_fleets)
+    # every method starts from the same per-seed init: tile the (B, ...)
+    # carry leaves to (M·B, ...) cells
+    tile = lambda t: jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (M,) + x.shape).reshape(
+            (M * B,) + x.shape[1:]), t)
+    params, state, env, keys = (tile(params), tile(state), tile(env),
+                                tile(keys))
+
+    batched = grid_fn(chunk_size)
+    hh = _HostHistory(rounds, round_axis=1)
+    acc_curve: List[np.ndarray] = []
+    chunk_wall: List[float] = []
+    chunk_len: List[int] = []
+    compile_s = 0.0
+    reached = np.full((M, B), -1, np.int64)
+    done = 0
+    while done < rounds:
+        length = min(chunk_size, rounds - done)
+        fresh = done == 0
+        if length != chunk_size:  # remainder chunk: separate trace
+            batched = grid_fn(length)
+            fresh = True
+        t0 = time.time()
+        params, state, env, keys, hist = batched(
+            mp_cells, seed_idx, params, state, env, fleet, cx, cy, keys,
+            jnp.asarray(done, jnp.int32))
+        if fresh:                    # dispatch wall ≈ trace + compile
+            compile_s += time.time() - t0
+        hh.drain()                   # fetch chunk i−1 while chunk i runs
+        hh.push(hist, done, length)
+        chunk_len.append(length)
+        done += length
+        if eval_fn is not None:      # blocks on this chunk — timed in;
+            # eval_fn is per-batch ((B,) accuracies) — slice per method
+            acc = np.stack([np.asarray(eval_fn(jax.tree.map(
+                lambda x: x[i * B:(i + 1) * B], params)), np.float64)
+                for i in range(M)])
+            acc_curve.append(acc)
+            if target_acc is not None:
+                newly = (acc >= target_acc) & (reached < 0)
+                reached[newly] = done - 1
+        chunk_wall.append(time.time() - t0)
+    t0 = time.time()
+    bufs = hh.finalize(done)
+    if chunk_wall:
+        chunk_wall[-1] += time.time() - t0
+    if bufs is None:  # rounds=0
+        shapes = jax.eval_shape(grid_fn(1), mp_cells, seed_idx, params,
+                                state, env, fleet, cx, cy, keys,
+                                jnp.asarray(0, jnp.int32))[4]
+        bufs = {k: np.zeros((M * B, 0) + tuple(v.shape[2:]), v.dtype)
+                for k, v in shapes.items()}
+    final_E = np.asarray(state.residual_energy)
+    final_H = np.asarray(state.H)
+    wall = np.asarray(chunk_wall, np.float64) / M
+    lens = np.asarray(chunk_len, np.int64)
+    accs = np.stack(acc_curve) if acc_curve else np.zeros((0, M, B))
+    out: Dict[str, Dict[str, np.ndarray]] = {}
+    for i, name in enumerate(names):
+        rows = slice(i * B, (i + 1) * B)
+        h = {k: v[rows] for k, v in bufs.items()}
+        h["final_residual_energy"] = final_E[rows]
+        h["final_H"] = final_H[rows]
+        h["chunk_wall_s"] = wall
+        h["chunk_rounds"] = lens
+        h["compile_s"] = np.float64(compile_s / M)  # per-method share
+        if eval_fn is not None:
+            h["acc_curve"] = accs[:, i, :]
+            if target_acc is not None:
+                h["reached_round"] = reached[i]
+        out[name] = h
+    return out
 
 
 def run_campaign_grid(model: FLModel, fleet: DeviceFleet, cx, cy,
@@ -370,13 +649,28 @@ def run_campaign_grid(model: FLModel, fleet: DeviceFleet, cx, cy,
                       scenario: Optional[Scenario] = None,
                       per_seed_fleets: bool = False,
                       eval_fn: Optional[Callable] = None,
-                      target_acc: Optional[float] = None
+                      target_acc: Optional[float] = None,
+                      method_batched: bool = True
                       ) -> Dict[str, Dict[str, np.ndarray]]:
-    """(seed × method) benchmark grid: methods differ structurally (python
-    branches in the round body), so they compile separately; the seed axis
-    of each method is a single vmapped program. All batching options
-    (per-seed fleets, chunk-boundary eval, per-device collection) pass
-    through to `run_campaign_batch`."""
+    """(method × seed) benchmark grid.
+
+    `method_batched=True` (default): methods that lower to `MethodParams`
+    (`core.methods.batchable`) run as ONE compiled program — the method
+    axis is vmapped on top of the seed vmap, so a 4-method × 5-seed grid
+    pays one trace and one XLA compile instead of four. Histories match
+    the per-method path to float tolerance with bit-identical selection
+    masks (`tests/test_engine.py::test_method_batched_grid_matches_per_
+    method`). A single-method grid, `method_batched=False`, or any
+    structurally incompatible method keeps the per-method fallback: each
+    method compiles its own seed-vmapped program (the bitwise-golden
+    static dispatch)."""
+    if (method_batched and len(methods) > 1
+            and batchable(list(methods.values()))):
+        return _run_grid_batched(
+            model, fleet, cx, cy, cfg, methods, seeds=seeds, rounds=rounds,
+            chunk_size=chunk_size, collect_per_device=collect_per_device,
+            scenario=scenario, per_seed_fleets=per_seed_fleets,
+            eval_fn=eval_fn, target_acc=target_acc)
     return {name: run_campaign_batch(model, fleet, cx, cy, cfg, spec,
                                      seeds=seeds, rounds=rounds,
                                      chunk_size=chunk_size,

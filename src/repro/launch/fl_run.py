@@ -44,9 +44,11 @@ class RunResult:
     acc_curve: np.ndarray
     final_params: object = None        # trained global model pytree
     # scan engine only: per-chunk wall clock (first entry includes JIT
-    # compile) + rounds per chunk, for steady-state throughput reporting
+    # compile) + rounds per chunk, for steady-state throughput reporting,
+    # and the directly-measured jit trace+compile seconds
     chunk_wall_s: Optional[np.ndarray] = None
     chunk_rounds: Optional[np.ndarray] = None
+    compile_s: Optional[float] = None
 
 
 def build_task(task: str, n_clients: int, lam: float, *, per_client: int = 128,
@@ -119,7 +121,8 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
            eval_every: int = 5, verbose: bool = False,
            engine: str = "scan", chunk_size: int = 8,
            fleet_shards: Optional[int] = None,
-           scenario: str = "static-paper") -> RunResult:
+           scenario: str = "static-paper",
+           probe_every: int = 1) -> RunResult:
     """Run one FL campaign.
 
     engine="scan" (default) runs rounds in compiled `lax.scan` chunks via
@@ -135,6 +138,10 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
     bit-for-bit; dynamic presets (commuter-diurnal, congested-urban,
     overnight-charging, churn-heavy) evolve wireless environments,
     charging batteries, and availability between rounds.
+
+    `probe_every=N` re-probes the global model every N rounds instead of
+    every round, carrying `FleetState.g_loss` between probes (1 = exact
+    paper semantics; see `FLConfig.probe_every`).
     """
     model = make_fl_model(task, small=small)
     scen = get_scenario(scenario)
@@ -147,6 +154,8 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
                               seed=seed)
     cfg = fl_cfg or (quick_cfg(n_select, alpha, beta) if small else
                      FLConfig(n_select=n_select, alpha=alpha, beta=beta))
+    if probe_every != 1:
+        cfg = dataclasses.replace(cfg, probe_every=probe_every)
     spec = METHODS[method]
     if task == "lstm@shakespeare":
         eval_fn = jax.jit(lambda p: model.accuracy(p, test))
@@ -190,7 +199,8 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
             dropout_ratio=(float(h["n_dropped"][-1]) / n_clients
                            if res.rounds_run else 0.0),
             acc_curve=res.acc_curve, final_params=params,
-            chunk_wall_s=res.chunk_wall_s, chunk_rounds=res.chunk_rounds)
+            chunk_wall_s=res.chunk_wall_s, chunk_rounds=res.chunk_rounds,
+            compile_s=res.compile_s)
     if engine != "loop":
         raise ValueError(f"unknown engine {engine!r} (use 'scan' or 'loop')")
 
@@ -271,6 +281,9 @@ def main() -> None:
     ap.add_argument("--fleet-shards", type=int, default=None)
     ap.add_argument("--scenario", default="static-paper",
                     choices=sorted(SCENARIOS))
+    ap.add_argument("--probe-every", type=int, default=1,
+                    help="re-probe the global model every N rounds "
+                         "(1 = every round, the paper's exact semantics)")
     args = ap.parse_args()
     t0 = time.time()
     res = run_fl(args.task, args.method, rounds=args.rounds,
@@ -278,7 +291,8 @@ def main() -> None:
                  target_acc=args.target_acc, alpha=args.alpha,
                  beta=args.beta, seed=args.seed, verbose=True,
                  engine=args.engine, chunk_size=args.chunk_size,
-                 fleet_shards=args.fleet_shards, scenario=args.scenario)
+                 fleet_shards=args.fleet_shards, scenario=args.scenario,
+                 probe_every=args.probe_every)
     print(json.dumps({
         "task": res.task, "method": res.method,
         "scenario": args.scenario,

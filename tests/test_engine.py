@@ -1,6 +1,9 @@
 """Scan-engine tests: chunked-scan ≡ sequential round loop (PRNG folding
-and numerics), campaign vmap batching, early stop, fleet sharding, and a
-mega-fleet compile/run smoke."""
+and numerics), campaign vmap batching, method-axis batching (one-compile
+grids), async history off-load + carry donation, early stop, fleet
+sharding, and a mega-fleet compile/run smoke."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -229,6 +232,142 @@ def test_per_seed_fleet_variance_exceeds_shared(setup):
     l_sh = shared["global_loss"][:, -1]
     l_ps = per_seed["global_loss"][:, -1]
     assert l_ps.std() > 1.5 * l_sh.std()
+
+
+GRID_METHODS = ("random", "oort", "autofl", "rewafl")
+
+
+def test_method_batched_grid_matches_per_method(setup):
+    """ISSUE 4 tentpole acceptance: the one-compile (method × seed) grid
+    (MethodParams + lax.switch dispatch, method axis vmapped over the
+    seed vmap) reproduces the per-method `run_campaign_batch` histories —
+    selection masks exactly, floats to tolerance — for every method and
+    seed."""
+    model, fleet, cx, cy, cfg = setup
+    seeds = (0, 3)
+    rounds = 3
+    kw = dict(seeds=seeds, rounds=rounds, chunk_size=2,
+              collect_per_device=True)
+    methods = {m: METHODS[m] for m in GRID_METHODS}
+    batched = eng.run_campaign_grid(model, fleet, cx, cy, cfg, methods,
+                                    method_batched=True, **kw)
+    for m in GRID_METHODS:
+        solo = eng.run_campaign_batch(model, fleet, cx, cy, cfg,
+                                      METHODS[m], **kw)
+        hb = batched[m]
+        np.testing.assert_array_equal(
+            np.asarray(hb["selected"]), np.asarray(solo["selected"]),
+            err_msg=f"{m}: selection masks diverged")
+        for k in ("global_loss", "round_energy", "round_latency",
+                  "mean_H_selected", "n_participating"):
+            np.testing.assert_allclose(
+                np.asarray(hb[k], np.float64),
+                np.asarray(solo[k], np.float64), atol=1e-5, err_msg=f"{m}/{k}")
+        np.testing.assert_allclose(hb["final_residual_energy"],
+                                   solo["final_residual_energy"], atol=1e-3)
+
+
+def test_method_batched_grid_per_seed_fleets_and_eval(setup):
+    """Batched grid with per-seed fleets + chunk-boundary eval: history
+    axes are (B, R), acc_curve (n_chunks, B), reached_round (B,) per
+    method, matching the per-method fallback."""
+    model, _, _, _, cfg = setup
+    seeds = (0, 2)
+    fleetb = build_fleet_batch(seeds, N, init_energy_mean=0.3)
+    cxb, cyb, _ = build_task_batch("cnn@mnist", seeds, N, 0.8,
+                                   per_client=16, n_test=16)
+    kw = dict(seeds=seeds, rounds=4, chunk_size=2, per_seed_fleets=True,
+              eval_fn=lambda p: jnp.full((len(seeds),), 0.7),
+              target_acc=0.5)
+    methods = {m: METHODS[m] for m in ("random", "rewafl")}
+    grid = eng.run_campaign_grid(model, fleetb, cxb, cyb, cfg, methods,
+                                 method_batched=True, **kw)
+    for m, h in grid.items():
+        assert h["global_loss"].shape == (2, 4)
+        assert h["acc_curve"].shape == (2, 2)
+        np.testing.assert_array_equal(h["reached_round"], [1, 1])
+        solo = eng.run_campaign_batch(model, fleetb, cxb, cyb, cfg,
+                                      METHODS[m], **kw)
+        np.testing.assert_allclose(h["global_loss"], solo["global_loss"],
+                                   atol=1e-5)
+
+
+def test_method_batched_grid_zero_rounds(setup):
+    model, fleet, cx, cy, cfg = setup
+    methods = {m: METHODS[m] for m in ("random", "rewafl")}
+    grid = eng.run_campaign_grid(model, fleet, cx, cy, cfg, methods,
+                                 seeds=(0, 1), rounds=0, chunk_size=2)
+    for h in grid.values():
+        assert h["global_loss"].shape == (2, 0)
+        assert h["final_residual_energy"].shape == (2, N)
+
+
+def test_single_method_grid_uses_fallback(setup):
+    """A 1-method grid keeps the static-dispatch path (the bitwise-golden
+    MethodSpec branch) and still returns the same schema."""
+    model, fleet, cx, cy, cfg = setup
+    grid = eng.run_campaign_grid(model, fleet, cx, cy, cfg,
+                                 {"rewafl": METHODS["rewafl"]},
+                                 seeds=(0, 1), rounds=2, chunk_size=2)
+    assert grid["rewafl"]["global_loss"].shape == (2, 2)
+
+
+def test_donate_matches_non_donate(setup):
+    """EngineCfg(donate=True) (the default) must agree with donate=False
+    and must not consume the caller's params/state (run_rounds copies
+    before the first donated chunk)."""
+    model, fleet, cx, cy, cfg = setup
+    key = jax.random.PRNGKey(7)
+    params0 = model.init(jax.random.PRNGKey(0))
+    don = eng.run_rounds(model, fleet, cx, cy, cfg, METHODS["rewafl"],
+                         rounds=5, key=key, params=params0,
+                         ecfg=eng.EngineCfg(chunk_size=2, donate=True))
+    # caller's buffers must still be alive after the donated run
+    _ = [np.asarray(x) for x in jax.tree.leaves(params0)]
+    ref = eng.run_rounds(model, fleet, cx, cy, cfg, METHODS["rewafl"],
+                         rounds=5, key=key, params=params0,
+                         ecfg=eng.EngineCfg(chunk_size=2, donate=False))
+    np.testing.assert_array_equal(np.asarray(don.history["selected"]),
+                                  np.asarray(ref.history["selected"]))
+    for k in ("global_loss", "round_energy", "round_latency"):
+        np.testing.assert_allclose(np.asarray(don.history[k], np.float64),
+                                   np.asarray(ref.history[k], np.float64),
+                                   atol=1e-6, err_msg=k)
+    _assert_trees_close(don.state, ref.state, 1e-5)
+
+
+def test_probe_every_amortizes_global_loss(setup):
+    """probe_every=2: non-probe rounds reuse the carried g_loss — the
+    global_loss metric repeats the last probed value — while selection
+    and training still run every round."""
+    model, fleet, cx, cy, cfg = setup
+    cfg2 = dataclasses.replace(cfg, probe_every=2)
+    res = eng.run_rounds(model, fleet, cx, cy, cfg2, METHODS["rewafl"],
+                         rounds=4, key=jax.random.PRNGKey(7),
+                         init_key=jax.random.PRNGKey(0),
+                         ecfg=eng.EngineCfg(chunk_size=2))
+    gl = np.asarray(res.history["global_loss"], np.float64)
+    assert gl[1] == gl[0] and gl[3] == gl[2]  # carried between probes
+    assert gl[2] != gl[0]                     # refreshed at round 2
+    assert (np.asarray(res.history["n_participating"]) > 0).all()
+
+
+def test_probe_every_one_is_exact(setup):
+    """probe_every=1 (the default) is the exact paper semantics: history
+    identical to an explicit probe_every=1 config and g_loss refreshed
+    every round (global_loss strictly follows the fresh probe)."""
+    model, fleet, cx, cy, cfg = setup
+    kw = dict(rounds=3, key=jax.random.PRNGKey(7),
+              init_key=jax.random.PRNGKey(0),
+              ecfg=eng.EngineCfg(chunk_size=2))
+    a = eng.run_rounds(model, fleet, cx, cy, cfg, METHODS["rewafl"], **kw)
+    b = eng.run_rounds(model, fleet, cx, cy,
+                       dataclasses.replace(cfg, probe_every=1),
+                       METHODS["rewafl"], **kw)
+    np.testing.assert_array_equal(np.asarray(a.history["global_loss"]),
+                                  np.asarray(b.history["global_loss"]))
+    np.testing.assert_array_equal(np.asarray(a.state.g_loss),
+                                  np.asarray(b.state.g_loss))
 
 
 def test_campaign_batch_eval_curve_and_reached_round(setup):

@@ -116,6 +116,60 @@ def test_epsilon_greedy_eps_above_one_clamps_to_k():
     assert mask.sum() == 4
 
 
+def test_epsilon_greedy_zero_eps_is_pure_exploit():
+    """ISSUE 4 satellite regression: eps=0 must mean ZERO exploration
+    slots — the mask is exactly the top-k by utility (the old
+    max(1, round(eps·k)) forced one random slot, making a pure-exploit
+    Oort/AutoFL configuration impossible)."""
+    key = jax.random.PRNGKey(7)
+    utils = jnp.arange(30.0)
+    avail = jnp.ones(30, bool)
+    mask = np.asarray(S.epsilon_greedy(key, utils, 10, avail, eps=0.0))
+    np.testing.assert_array_equal(
+        mask, np.asarray(S.top_k_select(utils, 10, avail)))
+    assert mask[-10:].all() and mask.sum() == 10
+
+
+def test_epsilon_greedy_tiny_eps_still_explores_one():
+    """Any positive eps keeps at least one exploration slot (Oort's
+    always-explore behaviour) — only exactly-zero eps disables it."""
+    key = jax.random.PRNGKey(8)
+    utils = jnp.arange(30.0)
+    avail = jnp.ones(30, bool)
+    mask = np.asarray(S.epsilon_greedy(key, utils, 10, avail, eps=0.01))
+    assert mask.sum() == 10
+    assert mask[-9:].all()  # 9 exploit slots: one went to exploration
+
+
+def test_traced_selection_matches_static():
+    """The traced-ε path (MethodParams / one-compile grids) produces
+    bit-identical masks to the static path across ε values, k values,
+    and availability patterns — including the ε=0 pure-exploit rule."""
+    utils = jax.random.normal(jax.random.PRNGKey(0), (40,))
+    for i, avail in enumerate([jnp.ones(40, bool),
+                               jnp.ones(40, bool).at[:30].set(False),
+                               jnp.zeros(40, bool)]):
+        for k in (0, 3, 12, 40):
+            for eps in (0.0, 0.01, 0.1, 0.5, 1.0):
+                key = jax.random.PRNGKey(100 + i)
+                static = S.epsilon_greedy(key, utils, k, avail, eps)
+                traced = S.epsilon_greedy_traced(
+                    key, utils, k, avail, jnp.asarray(eps, jnp.float32))
+                np.testing.assert_array_equal(
+                    np.asarray(static), np.asarray(traced),
+                    err_msg=f"k={k} eps={eps} avail#{i}")
+
+
+def test_traced_top_k_matches_static():
+    utils = jax.random.normal(jax.random.PRNGKey(1), (25,))
+    avail = jnp.ones(25, bool).at[jnp.arange(0, 25, 3)].set(False)
+    for k in (0, 1, 7, 25):
+        np.testing.assert_array_equal(
+            np.asarray(S.top_k_select(utils, k, avail)),
+            np.asarray(S.top_k_select_traced(
+                utils, jnp.asarray(k, jnp.int32), avail)))
+
+
 def test_temporal_uncertainty_boosts_neglected():
     stat = jnp.array([1.0, 1.0])
     out = np.asarray(S.temporal_uncertainty(
