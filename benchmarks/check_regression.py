@@ -27,21 +27,34 @@ import json
 import sys
 
 
+def _carries(results, key, metric) -> bool:
+    entry = results.get(key)
+    return isinstance(entry, dict) and metric in entry
+
+
 def check(baseline_path: str, fresh_path: str, keys, metric: str,
           max_drop: float, direction: str = "higher") -> int:
     with open(baseline_path) as f:
         base = json.load(f)["results"]
     with open(fresh_path) as f:
         fresh = json.load(f)["results"]
+    # default key set: the union of both files, so a PR that adds a new
+    # bench key sees it reported (and skipped) instead of silently
+    # ignored; keys present in only one file — or naming a non-dict
+    # entry like the scalar `dyn_overhead` — warn-and-skip rather than
+    # KeyError, keeping the gate green while baselines lag the code
     keys = list(keys) if keys else sorted(
-        k for k in base if isinstance(base[k], dict) and metric in base[k])
+        k for k in set(base) | set(fresh)
+        if _carries(base, k, metric) or _carries(fresh, k, metric))
     failures = 0
     for k in keys:
-        if k not in base or metric not in base.get(k, {}):
-            print(f"SKIP {k}: not in baseline {baseline_path}")
+        if not _carries(base, k, metric):
+            print(f"SKIP {k}.{metric}: not in baseline {baseline_path} "
+                  f"(new bench key? refresh the committed baseline to "
+                  f"gate it)")
             continue
-        if k not in fresh or metric not in fresh.get(k, {}):
-            print(f"SKIP {k}: not in fresh run {fresh_path}")
+        if not _carries(fresh, k, metric):
+            print(f"SKIP {k}.{metric}: not in fresh run {fresh_path}")
             continue
         b, f_ = float(base[k][metric]), float(fresh[k][metric])
         ratio = f_ / b if b else float("inf")

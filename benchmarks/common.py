@@ -18,11 +18,15 @@ Two cache layers:
                          not just init/round noise. Cached per
                          (task, method, config) so tables sharing a
                          method reuse one campaign. Multi-method grids
-                         run METHOD-BATCHED (v=7): the method axis is
+                         run METHOD-BATCHED: the method axis is
                          vmapped on top of the seed vmap via the traced
                          MethodParams round body, so the whole grid
                          compiles once (`engine.run_campaign_grid
-                         (method_batched=True)`).
+                         (method_batched=True)`). Since v=8 the grids
+                         also run with STREAMING telemetry
+                         (`core.metrics`): per-device aggregates fold
+                         as on-device reducers instead of dense
+                         (B, R, S) host arrays.
 """
 from __future__ import annotations
 
@@ -187,7 +191,14 @@ def _summarize_method(h: Dict[str, np.ndarray], n_clients: int,
                       init_energy, type_id, rate_mean, wall_s: float) -> Dict:
     """Per-seed summary of one method's batched campaign history (the
     grid-cache schema): per_seed scalars, mean_std aggregates, per_device
-    (B, S) arrays for the figure analyses, and steady-state timing."""
+    (B, S) arrays for the figure analyses, and steady-state timing.
+
+    Since v=8 the grids run with streaming telemetry: `sel_count`,
+    `H_final`, and `H_mid` come straight from the on-device reducer
+    outputs (`tel/selected/count`, `tel/H/last`, the strided `tel/H/ring`
+    snapshots) instead of reducing dense (B, R, S) host arrays — same
+    values, O(B·S) host memory. Dense histories (old caches, explicit
+    `collect_per_device=True` runs) keep the host-reduction path."""
     gl = np.asarray(h["global_loss"], np.float64)        # (B, R)
     lat = np.asarray(h["round_latency"], np.float64)
     en = np.asarray(h["round_energy"], np.float64)
@@ -215,18 +226,37 @@ def _summarize_method(h: Dict[str, np.ndarray], n_clients: int,
             float(en[b, :s + 1].sum()) / 1e3)
         per_seed["energy_kj"].append(float(en[b].sum()) / 1e3)
         per_seed["mean_H_final"].append(float(mh[b, s]))
-    sel = np.asarray(h["selected"])                      # (B, R, S)
-    Htr = np.asarray(h["H"])                             # (B, R, S)
+    if "tel/selected/count" in h:    # streaming reducer outputs (v=8)
+        sel_count = np.asarray(h["tel/selected/count"], np.int64)
+        H_final = np.asarray(h["tel/H/last"], np.int64)
+        ring = np.asarray(h["tel/H/ring"])               # (B, cap, S)
+        # ring stride every=max(1, R//2): slot 0 = round 0, slot 1 =
+        # round R//2 — the mid-campaign snapshot (slot 0 when R < 2)
+        mid_slot = 1 if int(np.asarray(h["tel/H/ring/n"]).max()) >= 2 else 0
+        H_mid = ring[:, mid_slot, :].astype(np.int64)
+    else:                            # dense (B, R, S) host history
+        sel_count = np.asarray(h["selected"]).sum(1).astype(np.int64)
+        Htr = np.asarray(h["H"])
+        H_final = Htr[:, -1, :].astype(np.int64)
+        H_mid = Htr[:, R // 2, :].astype(np.int64)
     per_device = {
-        "sel_count": sel.sum(1).astype(np.int64).tolist(),
+        "sel_count": sel_count.tolist(),
         "residual_energy": np.asarray(
             h["final_residual_energy"], np.float64).tolist(),
         "init_energy": np.asarray(init_energy, np.float64).tolist(),
         "type_id": np.asarray(type_id, np.int64).tolist(),
         "rate_mean": np.asarray(rate_mean, np.float64).tolist(),
-        "H_final": Htr[:, -1, :].astype(np.int64).tolist(),
-        "H_mid": Htr[:, R // 2, :].astype(np.int64).tolist(),
+        "H_final": H_final.tolist(),
+        "H_mid": H_mid.tolist(),
     }
+    # longitudinal per-device aggregates only the reducers can provide
+    # without an O(R·S) trace: mean/peak residual energy, staleness
+    for tk, name in (("tel/residual_energy/mean", "residual_energy_mean"),
+                     ("tel/residual_energy/max", "residual_energy_max"),
+                     ("tel/staleness/mean", "staleness_mean"),
+                     ("tel/staleness/max", "staleness_max")):
+        if tk in h:
+            per_device[name] = np.asarray(h[tk], np.float64).tolist()
     us, compile_s = _steady_timing(h.get("chunk_wall_s"),
                                    h.get("chunk_rounds"), wall_s, R,
                                    h.get("compile_s"))
@@ -262,6 +292,15 @@ def cached_campaign_grid(task: str, methods, seeds=GRID_SEEDS, *,
     to-target metrics per seed use the first chunk-end round meeting
     `target_acc` (task default from TARGETS).
 
+    v=8: the grids run with STREAMING telemetry — per-device aggregates
+    (selection counts, final/mid H, residual-energy and staleness
+    profiles) fold as on-device reducers in the scan carry
+    (`core.metrics`) instead of materializing dense (B, R, S) host
+    arrays, so grid host memory is O(B·S) regardless of campaign
+    length. The cached `per_device` schema is unchanged (values match
+    the dense reduction; `tests/test_engine.py` parity tests), with new
+    `residual_energy_mean/max` and `staleness_mean/max` columns.
+
     Cached per (task, method, config): tables and figures sharing a
     method reuse one campaign. Each method entry carries `per_seed`
     scalars, their `mean_std`, `per_device` (B, S) arrays, and
@@ -271,7 +310,7 @@ def cached_campaign_grid(task: str, methods, seeds=GRID_SEEDS, *,
     target = TARGETS[task] if target_acc is None else target_acc
     base = dict(task=task, seeds=seeds, rounds=rounds, lam=lam,
                 alpha=alpha, beta=beta, n=n_clients, chunk=chunk_size,
-                scenario=scenario, target=target, v=7,
+                scenario=scenario, target=target, v=8,
                 per_seed_fleets=per_seed_fleets, per_client=per_client,
                 k=n_select)
     os.makedirs(FL_DIR, exist_ok=True)
@@ -291,7 +330,8 @@ def cached_campaign_grid(task: str, methods, seeds=GRID_SEEDS, *,
         return out
 
     import jax
-    from repro.core import METHODS
+    from repro.core import METHODS, MetricSpec, TelemetryCfg
+    from repro.core.metrics import DEFAULT_SPECS
     from repro.launch.engine import run_campaign_grid
     from repro.launch.fl_run import build_task, build_task_batch, quick_cfg
     from repro.models.fl_models import make_fl_model
@@ -321,16 +361,21 @@ def cached_campaign_grid(task: str, methods, seeds=GRID_SEEDS, *,
         type_id = np.broadcast_to(np.asarray(fleet.type_id), (B, n_clients))
         rate_mean = np.broadcast_to(np.asarray(fleet.rate_mean),
                                     (B, n_clients))
+    # streaming telemetry: DEFAULT_SPECS aggregates plus a 3-slot H ring
+    # strided to capture rounds 0 and R//2 (the H_mid table column)
+    tcfg = TelemetryCfg(mode="streaming", specs=DEFAULT_SPECS + (
+        MetricSpec("H", "ring", every=max(1, rounds // 2), cap=3),))
     t0 = time.time()
     grids = run_campaign_grid(model, fleet, cx, cy,
                               quick_cfg(n_select, alpha, beta),
                               {m: METHODS[m] for m in todo},
                               seeds=seeds, rounds=rounds,
                               chunk_size=chunk_size,
-                              collect_per_device=True,
+                              collect_per_device=False,
                               scenario=get_scenario(scenario),
                               per_seed_fleets=per_seed_fleets,
-                              eval_fn=eval_fn, target_acc=target)
+                              eval_fn=eval_fn, target_acc=target,
+                              telemetry=tcfg)
     wall = time.time() - t0
     for m, h in grids.items():
         summ = _summarize_method(h, n_clients, init_energy, type_id,

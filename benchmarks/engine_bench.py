@@ -8,20 +8,29 @@ row doubles as the dynamics-overhead regression check: `dyn_overhead`
 is the fractional slowdown of commuter-diurnal vs static at S=10k
 (acceptance: < 0.10).
 
-Full runs additionally measure the `campaign_grid_4x5` row: a 4-method
+Full runs additionally measure the `campaign_grid_4x5` row — a 4-method
 × 5-seed campaign grid through the one-compile method-batched engine
 (`run_campaign_grid(method_batched=True)`) against the per-method
 fallback, reporting grid wall-clock, total compile seconds both ways,
-and the compile-amortization ratio (ISSUE 4 acceptance: ≥ 3×).
+and the compile-amortization ratio (ISSUE 4 acceptance: ≥ 3×) — plus
+the streaming-telemetry rows: `scan_round_S100000_streaming` runs
+per-device telemetry (DEFAULT_SPECS reducers in the scan carry) at a
+fleet scale where dense (R, S) collection would OOM/thrash the host,
+and `telemetry_host_bytes_S10000` records the measured dense-vs-
+streaming host history footprint with mega-fleet projections.
 
   make bench-engine            # or: python -m benchmarks.engine_bench
 
-CLI (for the CI regression gate, which measures a single cheap scale):
+CLI (for the CI regression gate, which measures the cheap S=100 scale
+plus the batched-only grid row):
 
-  python -m benchmarks.engine_bench --scales 100 --no-dynamic --no-grid \
-      --out /tmp/bench_fresh.json
+  python -m benchmarks.engine_bench --scales 100 --no-dynamic \
+      --no-streaming --grid-no-per-method --out /tmp/bench_fresh.json
   python -m benchmarks.check_regression BENCH_engine.json \
       /tmp/bench_fresh.json --keys scan_round_S100 --max-drop 0.30
+  python -m benchmarks.check_regression BENCH_engine.json \
+      /tmp/bench_fresh.json --keys campaign_grid_4x5 \
+      --metric grid_wall_s --direction lower --max-drop 0.75
 """
 from __future__ import annotations
 
@@ -45,7 +54,8 @@ OUT_PATH = os.path.join(ROOT, "BENCH_engine.json")
 
 
 def measure_engine(S: int, scenario: str = "static-paper", *,
-                   chunk: int = 0, timed_chunks: int = 1) -> Dict:
+                   chunk: int = 0, timed_chunks: int = 1,
+                   streaming: bool = False) -> Dict:
     """Warm compiled chunks at fleet scale S under `scenario`: fixed
     per-device work (tiny CNN, probe 2, batch 2) so the numbers isolate
     round dispatch + fleet-axis + dynamics overhead, not model FLOPs.
@@ -53,10 +63,16 @@ def measure_engine(S: int, scenario: str = "static-paper", *,
     With timed_chunks > 1 the reported throughput is the BEST chunk
     (timeit-style min): shared/contended hosts show ±40% wall-clock
     swings, and best-of-N approaches the machine's true capability so
-    baseline-vs-fresh ratios reflect code, not contention spikes."""
-    from repro.core import FLConfig, METHODS, init_fleet_state
+    baseline-vs-fresh ratios reflect code, not contention spikes.
+
+    `streaming=True` runs the chunk with the DEFAULT_SPECS telemetry
+    reducers folded in the carry instead of dense (R, S) history — the
+    regime that makes S ≥ 100k per-device telemetry feasible at all
+    (dense collection is O(R·S) host bytes)."""
+    from repro.core import FLConfig, METHODS, TelemetryCfg, init_fleet_state
     from repro.core.policy import PolicyCfg
-    from repro.launch.engine import make_chunk_fn
+    from repro.core.round import make_round_body
+    from repro.launch.engine import _telemetry_carry, make_chunk_fn
     from repro.launch.fl_run import build_task
     from repro.models.fl_models import make_fl_model
     from repro.sim.devices import build_fleet
@@ -69,27 +85,37 @@ def measure_engine(S: int, scenario: str = "static-paper", *,
                    uplink_bits=16e6, policy=PolicyCfg(H0=2, H_max=4))
     fleet = build_fleet(S, seed=0, init_energy_mean=0.3)
     cx, cy, _ = build_task("cnn@mnist", S, 0.8, per_client=2, n_test=16)
+    tcfg = TelemetryCfg(mode="streaming") if streaming else None
     ck = make_chunk_fn(model, cfg, METHODS["rewafl"],
-                       chunk_size=chunk, scenario=scen)
+                       chunk_size=chunk, scenario=scen,
+                       collect_per_device=not streaming, telemetry=tcfg)
     params = model.init(jax.random.PRNGKey(0))
     state = init_fleet_state(fleet, H0=cfg.policy.H0)
     env = init_env_state(fleet, scen,
                          key=jax.random.PRNGKey(3) if scen.dynamic else None)
     key = jax.random.PRNGKey(1)
+    extra = ()
+    if streaming:
+        body = make_round_body(model, cfg, METHODS["rewafl"], scen)
+        extra = (_telemetry_carry(tcfg, body,
+                                  (params, state, env, fleet, cx, cy, key,
+                                   jnp.asarray(0, jnp.int32))),)
     t0 = time.time()
     out = ck(params, state, env, fleet, cx, cy, key,
-             jnp.asarray(0, jnp.int32))  # compile
+             jnp.asarray(0, jnp.int32), *extra)  # compile
     jax.block_until_ready(out[0])
     compile_s = time.time() - t0
     chunk_walls = []
     for i in range(timed_chunks):
         t0 = time.time()
+        extra = (out[4],) if streaming else ()
         out = ck(out[0], out[1], out[2], fleet, cx, cy, out[3],
-                 jnp.asarray((i + 1) * chunk, jnp.int32))
+                 jnp.asarray((i + 1) * chunk, jnp.int32), *extra)
         jax.block_until_ready(out[0])
         chunk_walls.append(time.time() - t0)
     dt = min(chunk_walls)
     return {"S": S, "scenario": scenario, "chunk": chunk,
+            "telemetry": "streaming" if streaming else "dense",
             "us_per_round": dt / chunk * 1e6,
             "rounds_s": chunk / dt,
             "device_rounds_s": chunk / dt * S,
@@ -97,8 +123,65 @@ def measure_engine(S: int, scenario: str = "static-paper", *,
             "timed_chunks": timed_chunks}
 
 
+def measure_host_bytes(S: int = 10_000, rounds: int = 8,
+                       chunk: int = 2) -> Dict:
+    """Host-side history footprint, dense vs streaming, at fleet scale S.
+
+    Runs the same short campaign twice through `run_rounds` — once with
+    dense per-device collection ((R, S) `selected`/`H` host buffers) and
+    once with streaming DEFAULT_SPECS reducers — and reports the bytes
+    the host actually holds at the end, plus the per-round growth rate
+    of the dense path (the streaming footprint is R-independent). The
+    projected columns extrapolate to the mega-fleet regime the ROADMAP
+    targets (S=1M, R=500), where the dense per-device history alone is
+    ~2.5 GB per metric pair and streaming stays O(S)."""
+    from repro.core import FLConfig, METHODS, TelemetryCfg
+    from repro.core.policy import PolicyCfg
+    from repro.launch.engine import EngineCfg, run_rounds
+    from repro.launch.fl_run import build_task
+    from repro.models.fl_models import make_fl_model
+    from repro.sim.devices import build_fleet
+
+    model = make_fl_model("cnn@mnist", small=True)
+    cfg = FLConfig(n_select=20, batch_size=2, probe_size=2, lr=0.05,
+                   uplink_bits=16e6, policy=PolicyCfg(H0=2, H_max=4))
+    fleet = build_fleet(S, seed=0, init_energy_mean=0.3)
+    cx, cy, _ = build_task("cnn@mnist", S, 0.8, per_client=2, n_test=16)
+
+    def one(streaming: bool):
+        ecfg = EngineCfg(chunk_size=chunk,
+                         collect_per_device=not streaming,
+                         telemetry=TelemetryCfg(
+                             mode="streaming" if streaming else "dense"))
+        res = run_rounds(model, fleet, cx, cy, cfg, METHODS["rewafl"],
+                         rounds=rounds, key=jax.random.PRNGKey(1),
+                         init_key=jax.random.PRNGKey(0), ecfg=ecfg)
+        hist = sum(int(np.asarray(v).nbytes)
+                   for v in res.history.values())
+        tel = sum(int(np.asarray(v).nbytes)
+                  for v in (res.telemetry or {}).values())
+        per_dev = sum(int(np.asarray(res.history[k]).nbytes)
+                      for k in ("selected", "H") if k in res.history)
+        return hist + tel, per_dev
+
+    dense_total, dense_per_dev = one(streaming=False)
+    stream_total, _ = one(streaming=True)
+    dense_rate = dense_per_dev / max(rounds, 1)        # bytes per round
+    return {"S": S, "rounds": rounds,
+            "dense_bytes": dense_total,
+            "streaming_bytes": stream_total,
+            "dense_per_device_bytes_per_round": dense_rate,
+            # dense per-device history grows linearly in R and S;
+            # streaming telemetry is O(S) however long the campaign
+            "projected_dense_gb_S1M_R500":
+                dense_rate / S * 1_000_000 * 500 / 1e9,
+            "projected_streaming_gb_S1M_R500":
+                stream_total / S * 1_000_000 / 1e9}
+
+
 def measure_campaign_grid(S: int = 100, *, n_seeds: int = GRID_SEEDS,
-                          rounds: int = 12, chunk: int = 4) -> Dict:
+                          rounds: int = 12, chunk: int = 4,
+                          per_method: bool = True) -> Dict:
     """4-method × n_seeds campaign grid, method-batched vs per-method.
 
     Runs the same (method × seed) grid twice through
@@ -108,7 +191,12 @@ def measure_campaign_grid(S: int = 100, *, n_seeds: int = GRID_SEEDS,
     wall-clock and total compile seconds (recovered per method from the
     chunk timing, as `benchmarks.common._steady_timing` does for the
     paper grids) plus the compile-amortization ratio the ISSUE-4
-    acceptance gates on (≥ 3×)."""
+    acceptance gates on (≥ 3×).
+
+    `per_method=False` measures only the batched path (grid_wall_s /
+    compile_s / us_per_round): the CI bench-gate uses it so it can gate
+    those keys with `check_regression --direction lower` without paying
+    for the 4-compile fallback baseline on every PR."""
     from repro.core import FLConfig, METHODS
     from repro.core.policy import PolicyCfg
     from repro.launch.engine import run_campaign_grid
@@ -139,20 +227,29 @@ def measure_campaign_grid(S: int = 100, *, n_seeds: int = GRID_SEEDS,
         return wall, compile_total, float(np.mean(us_cells))
 
     wall_b, compile_b, us_b = one(batched=True)
-    wall_p, compile_p, us_p = one(batched=False)
-    return {"S": S, "methods": list(GRID_METHODS), "n_seeds": n_seeds,
-            "rounds": rounds, "chunk": chunk,
-            "grid_wall_s": wall_b, "compile_s": compile_b,
-            "us_per_round": us_b,
-            "per_method_wall_s": wall_p, "per_method_compile_s": compile_p,
+    out = {"S": S, "methods": list(GRID_METHODS), "n_seeds": n_seeds,
+           "rounds": rounds, "chunk": chunk,
+           "grid_wall_s": wall_b, "compile_s": compile_b,
+           "us_per_round": us_b,
+           "compile_s_per_cell": compile_b / (len(GRID_METHODS) * n_seeds)}
+    if per_method:
+        wall_p, compile_p, us_p = one(batched=False)
+        out.update({
+            "per_method_wall_s": wall_p,
+            "per_method_compile_s": compile_p,
             "per_method_us_per_round": us_p,
-            "compile_speedup": compile_p / max(compile_b, 1e-9),
-            "compile_s_per_cell": compile_b / (len(GRID_METHODS) * n_seeds)}
+            "compile_speedup": compile_p / max(compile_b, 1e-9)})
+    return out
+
+
+STREAMING_SCALE = 100_000
+HOST_BYTES_SCALE = 10_000
 
 
 def run(scales=SCALES, dynamic_scenario: Optional[str] = DYNAMIC_SCENARIO,
         out_path: str = OUT_PATH, timed_chunks: int = 1,
-        grid: bool = True):
+        grid: bool = True, grid_per_method: bool = True,
+        streaming: bool = True):
     rows = []
     results: Dict[str, Dict] = {}
     # 3 timed chunks at the largest scale: its static row doubles as the
@@ -179,22 +276,45 @@ def run(scales=SCALES, dynamic_scenario: Optional[str] = DYNAMIC_SCENARIO,
                      f"rounds_s={r['rounds_s']:.2f};"
                      f"dyn_overhead={overhead:+.3f}"))
     if grid:
-        g = measure_campaign_grid()
+        g = measure_campaign_grid(per_method=grid_per_method)
         results["campaign_grid_4x5"] = g
-        rows.append((
-            "engine/campaign_grid_4x5", g["us_per_round"],
-            f"grid_wall_s={g['grid_wall_s']:.1f};"
-            f"compile_s={g['compile_s']:.1f};"
-            f"per_method_compile_s={g['per_method_compile_s']:.1f};"
-            f"compile_speedup={g['compile_speedup']:.1f}x"))
-        cells = len(g["methods"]) * g["n_seeds"]
-        print(f"# compile amortization ({len(g['methods'])} methods x "
-              f"{g['n_seeds']} seeds = {cells} cells): "
-              f"batched {g['compile_s']:.1f}s total "
-              f"({g['compile_s_per_cell']:.2f}s/cell) vs per-method "
-              f"{g['per_method_compile_s']:.1f}s "
-              f"({g['per_method_compile_s'] / cells:.2f}s/cell) -> "
-              f"{g['compile_speedup']:.1f}x")
+        derived = (f"grid_wall_s={g['grid_wall_s']:.1f};"
+                   f"compile_s={g['compile_s']:.1f}")
+        if grid_per_method:
+            derived += (f";per_method_compile_s="
+                        f"{g['per_method_compile_s']:.1f};"
+                        f"compile_speedup={g['compile_speedup']:.1f}x")
+        rows.append(("engine/campaign_grid_4x5", g["us_per_round"],
+                     derived))
+        if grid_per_method:
+            cells = len(g["methods"]) * g["n_seeds"]
+            print(f"# compile amortization ({len(g['methods'])} methods x "
+                  f"{g['n_seeds']} seeds = {cells} cells): "
+                  f"batched {g['compile_s']:.1f}s total "
+                  f"({g['compile_s_per_cell']:.2f}s/cell) vs per-method "
+                  f"{g['per_method_compile_s']:.1f}s "
+                  f"({g['per_method_compile_s'] / cells:.2f}s/cell) -> "
+                  f"{g['compile_speedup']:.1f}x")
+    if streaming:
+        # per-device telemetry at a fleet scale where dense (R, S)
+        # collection would OOM/thrash the host: the S=100k row runs the
+        # DEFAULT_SPECS reducers in the scan carry (O(S) state)
+        r = measure_engine(STREAMING_SCALE, chunk=1, timed_chunks=1,
+                           streaming=True)
+        results[f"scan_round_S{STREAMING_SCALE}_streaming"] = r
+        rows.append((f"engine/scan_round_S{STREAMING_SCALE}_streaming",
+                     r["us_per_round"],
+                     f"rounds_s={r['rounds_s']:.3f};"
+                     f"device_rounds_s={r['device_rounds_s']:.0f};"
+                     f"telemetry=streaming"))
+        hb = measure_host_bytes(S=HOST_BYTES_SCALE)
+        results[f"telemetry_host_bytes_S{HOST_BYTES_SCALE}"] = hb
+        print(f"# host history bytes at S={HOST_BYTES_SCALE}, "
+              f"R={hb['rounds']}: dense {hb['dense_bytes']:,} vs "
+              f"streaming {hb['streaming_bytes']:,} "
+              f"(projected S=1M R=500: dense "
+              f"{hb['projected_dense_gb_S1M_R500']:.1f} GB vs streaming "
+              f"{hb['projected_streaming_gb_S1M_R500']:.2f} GB)")
     payload = {"bench": "engine", "backend": jax.default_backend(),
                "jax_version": jax.__version__,
                "results": results}
@@ -214,6 +334,14 @@ def main() -> None:
     ap.add_argument("--no-grid", action="store_true",
                     help="skip the method-batched campaign-grid row "
                          "(the CI bench-gate measures S=100 only)")
+    ap.add_argument("--grid-no-per-method", action="store_true",
+                    help="grid row measures only the method-batched path "
+                         "(grid_wall_s/compile_s) — what the CI gate "
+                         "compares with --direction lower; skips the "
+                         "expensive per-method fallback baseline")
+    ap.add_argument("--no-streaming", action="store_true",
+                    help="skip the S=100k streaming-telemetry row and "
+                         "the dense-vs-streaming host-bytes comparison")
     ap.add_argument("--out", default=OUT_PATH,
                     help="output JSON path (default BENCH_engine.json)")
     ap.add_argument("--timed-chunks", type=int, default=3,
@@ -226,7 +354,9 @@ def main() -> None:
     run(scales=scales,
         dynamic_scenario=None if args.no_dynamic else DYNAMIC_SCENARIO,
         out_path=args.out, timed_chunks=args.timed_chunks,
-        grid=not args.no_grid)
+        grid=not args.no_grid,
+        grid_per_method=not args.grid_no_per_method,
+        streaming=not args.no_streaming)
 
 
 if __name__ == "__main__":

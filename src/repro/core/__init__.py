@@ -4,13 +4,18 @@
   policy.py    — Eqn (3) wireless-aware H, Eqn (4) stopping criterion,
                  AdaH / fixed baselines
   selection.py — top-K ranking, ε-greedy & temporal-uncertainty baselines
-  state.py     — fleet state pytree
+  state.py     — fleet state pytree + streaming-telemetry carry
   round.py     — Algorithm 1 as a single jitted round step
   methods.py   — named method registry (Random/Oort/AutoFL/REAFL/
                  REAFL+LUPA/REWAFL)
+  metrics.py   — declarative streaming-telemetry reducers (MetricSpec /
+                 TelemetryCfg): O(S) on-device aggregates instead of
+                 O(R·S) dense per-device histories
 """
-from repro.core.state import (FleetState, init_fleet_state,  # noqa: F401
-                              replicate_state)
+from repro.core.state import (FleetState, TelemetryCarry,  # noqa: F401
+                              init_fleet_state, replicate_state)
+from repro.core.metrics import (DEFAULT_SPECS, MetricSpec,  # noqa: F401
+                                TelemetryCfg)
 from repro.core.methods import (METHODS, MethodParams,  # noqa: F401
                                 MethodSpec, batchable, method_params,
                                 method_params_batch)

@@ -1,0 +1,245 @@
+"""Streaming telemetry: declarative on-device metric reducers.
+
+REWAFL's evaluation tracks per-device longitudinal signals — residual
+battery energy, staleness, adaptive H — across every round. The dense
+way to keep them is an (R, S) host buffer per metric, which is what
+blocks mega-fleet campaigns: at S=1M devices and R=500 rounds a single
+float32 trace is ~2 GB of host memory. Most consumers never need the
+full trace — the paper tables reduce it to per-device aggregates
+(selection counts, mean/peak energy, final H) — so this module folds
+those reductions *on device, inside the scan carry*: O(S) reducer state
+instead of O(R·S) history, drained once per campaign.
+
+A `MetricSpec` names one (metric, reducer) pair; a `TelemetryCfg`
+bundles the specs plus the dense/streaming mode switch threaded through
+`launch.engine`. Reducers:
+
+  last   — the metric's final value
+  sum    — running float32 sum over rounds
+  mean   — Welford running mean (float32)
+  std    — Welford running population std (ddof=0, matches np.std)
+  max    — running max (native dtype; bool promotes to int32)
+  count  — rounds where the value was nonzero (selection counts)
+  ring   — strided snapshot buffer: keeps the value of every
+           `every`-th round in a (cap, ...) ring — downsampled curves
+           at a fixed memory budget. `ring(every=1, cap=R)` reproduces
+           the dense trace exactly (the parity tests lean on this).
+
+Every reducer state is a pytree of arrays shaped like the metric (plus
+a `cap` axis for rings), so the whole carry jits/scans/vmaps/shards
+exactly like `FleetState`. `mean` and `std` of the same metric share
+one Welford state. Reducer updates are associative-fold steps over the
+round axis; all accumulation is float32 (matching the dense history the
+reductions replace).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import TelemetryCarry
+
+# Raw per-device (S,) leaves the round body emits every round. In dense
+# mode only DENSE_PER_DEVICE stream to the host as (R, S) history (the
+# legacy `EngineCfg.collect_per_device` schema, golden-stable); the rest
+# exist solely for reducers to fold and are always dropped from ys.
+PER_DEVICE_METRICS = ("selected", "H", "residual_energy", "staleness")
+DENSE_PER_DEVICE = ("selected", "H")
+
+REDUCERS = ("last", "sum", "mean", "std", "max", "count", "ring")
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricSpec:
+    """One (metric, reducer) pair. `metric` is a key of the round body's
+    raw metrics dict (per-device (S,) leaves in PER_DEVICE_METRICS or
+    any scalar metric); `every`/`cap` apply to `ring` only."""
+    metric: str
+    reducer: str
+    every: int = 1    # ring: snapshot every N rounds
+    cap: int = 16     # ring: snapshot buffer capacity
+
+    def __post_init__(self):
+        if self.reducer not in REDUCERS:
+            raise ValueError(f"unknown reducer {self.reducer!r} — "
+                             f"choose from {REDUCERS}")
+        if self.reducer == "ring" and (self.every < 1 or self.cap < 1):
+            raise ValueError(f"ring needs every >= 1 and cap >= 1, got "
+                             f"every={self.every} cap={self.cap}")
+
+    @property
+    def out_key(self) -> str:
+        """History key of the finalized output."""
+        return f"tel/{self.metric}/{self.reducer}"
+
+    @property
+    def state_key(self) -> str:
+        """Carry key of the reducer state. mean/std share one Welford
+        accumulator; rings with different strides stay distinct."""
+        if self.reducer in ("mean", "std"):
+            return f"{self.metric}/welford"
+        if self.reducer == "ring":
+            return f"{self.metric}/ring{self.every}x{self.cap}"
+        return f"{self.metric}/{self.reducer}"
+
+
+# Per-device aggregates the paper tables/figures and run_fl's summary
+# consume: selection counts, residual-energy profile, staleness, H.
+DEFAULT_SPECS: Tuple[MetricSpec, ...] = (
+    MetricSpec("selected", "count"),
+    MetricSpec("residual_energy", "mean"),
+    MetricSpec("residual_energy", "std"),
+    MetricSpec("residual_energy", "max"),
+    MetricSpec("staleness", "mean"),
+    MetricSpec("staleness", "max"),
+    MetricSpec("H", "mean"),
+    MetricSpec("H", "last"),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryCfg:
+    """Telemetry regime for an engine run.
+
+    mode="dense" (default): the legacy behavior — per-device history as
+    dense (R, S) host buffers gated by `EngineCfg.collect_per_device`,
+    bitwise-unchanged, no reducers traced.
+    mode="streaming": per-device leaves never leave the device as
+    per-round history; `specs` are folded in the scan carry and drained
+    once at the end as O(S) arrays under their `tel/<metric>/<reducer>`
+    keys. Dense per-round *scalars* stream either way."""
+    mode: str = "dense"
+    specs: Tuple[MetricSpec, ...] = DEFAULT_SPECS
+
+    def __post_init__(self):
+        if self.mode not in ("dense", "streaming"):
+            raise ValueError(f"telemetry mode must be 'dense' or "
+                             f"'streaming', got {self.mode!r}")
+        keys = [s.out_key for s in self.specs]
+        if len(set(keys)) != len(keys):
+            raise ValueError(f"duplicate telemetry specs: {keys}")
+
+    @property
+    def streaming(self) -> bool:
+        return self.mode == "streaming"
+
+
+class Welford(NamedTuple):
+    """Running mean/variance accumulator (per-element n so the state
+    stays shape-polymorphic under vmap/sharding)."""
+    n: jax.Array      # f32, same shape as the metric
+    mean: jax.Array   # f32
+    m2: jax.Array     # f32 — sum of squared deviations
+
+
+class Ring(NamedTuple):
+    buf: jax.Array    # (cap, ...) snapshots, native metric dtype
+    n: jax.Array      # i32 () — snapshots taken (wraps past cap)
+
+
+def _init(spec: MetricSpec, sd) -> Any:
+    """Fresh reducer state for a metric of shape/dtype `sd`."""
+    shape, dtype = tuple(sd.shape), sd.dtype
+    r = spec.reducer
+    if r == "last":
+        return jnp.zeros(shape, dtype)
+    if r == "sum":
+        return jnp.zeros(shape, jnp.float32)
+    if r in ("mean", "std"):
+        z = jnp.zeros(shape, jnp.float32)
+        return Welford(n=z, mean=z, m2=z)
+    if r == "max":
+        if jnp.issubdtype(dtype, jnp.inexact):
+            return jnp.full(shape, -jnp.inf, dtype)
+        if dtype == jnp.bool_:
+            return jnp.zeros(shape, jnp.int32)
+        return jnp.full(shape, jnp.iinfo(dtype).min, dtype)
+    if r == "count":
+        return jnp.zeros(shape, jnp.int32)
+    # ring
+    return Ring(buf=jnp.zeros((spec.cap,) + shape, dtype),
+                n=jnp.zeros((), jnp.int32))
+
+
+def _update(spec: MetricSpec, st, v: jax.Array, round_idx: jax.Array):
+    """Fold one round's value into the reducer state."""
+    r = spec.reducer
+    if r == "last":
+        return v
+    if r == "sum":
+        return st + v.astype(jnp.float32)
+    if r in ("mean", "std"):
+        x = v.astype(jnp.float32)
+        n = st.n + 1.0
+        d = x - st.mean
+        mean = st.mean + d / n
+        return Welford(n=n, mean=mean, m2=st.m2 + d * (x - mean))
+    if r == "max":
+        return jnp.maximum(st, v.astype(st.dtype))
+    if r == "count":
+        return st + (v != 0).astype(jnp.int32)
+    # ring: non-snapshot rounds write out of bounds and are dropped
+    take = (round_idx % spec.every) == 0
+    slot = jnp.where(take, (round_idx // spec.every) % spec.cap, spec.cap)
+    return Ring(buf=st.buf.at[slot].set(v, mode="drop"),
+                n=st.n + take.astype(jnp.int32))
+
+
+def _finalize(spec: MetricSpec, st) -> Dict[str, jax.Array]:
+    """Reducer state -> output array(s) under the spec's out_key."""
+    r = spec.reducer
+    if r == "mean":
+        return {spec.out_key: st.mean}
+    if r == "std":
+        return {spec.out_key:
+                jnp.sqrt(jnp.maximum(st.m2, 0.0)
+                         / jnp.maximum(st.n, 1.0))}
+    if r == "ring":
+        return {spec.out_key: st.buf, spec.out_key + "/n": st.n}
+    return {spec.out_key: st}
+
+
+def init_telemetry(cfg: TelemetryCfg,
+                   shapes: Dict[str, Any]) -> TelemetryCarry:
+    """Fresh reducer carry for the metrics described by `shapes` (a
+    metrics-dict of ShapeDtypeStructs, e.g. from `jax.eval_shape` of the
+    round body)."""
+    states: Dict[str, Any] = {}
+    for spec in cfg.specs:
+        if spec.metric not in shapes:
+            raise KeyError(f"telemetry spec {spec.out_key!r}: metric "
+                           f"{spec.metric!r} not in the round metrics "
+                           f"dict ({sorted(shapes)})")
+        if spec.state_key not in states:
+            states[spec.state_key] = _init(spec, shapes[spec.metric])
+    return TelemetryCarry(reducers=states)
+
+
+def update_telemetry(cfg: TelemetryCfg, carry: TelemetryCarry,
+                     metrics: Dict[str, jax.Array],
+                     round_idx: jax.Array) -> TelemetryCarry:
+    """Fold one round's raw metrics dict into every reducer state."""
+    states = dict(carry.reducers)
+    done = set()
+    for spec in cfg.specs:
+        sk = spec.state_key
+        if sk in done:
+            continue  # mean/std share one Welford update
+        done.add(sk)
+        states[sk] = _update(spec, states[sk], metrics[spec.metric],
+                             round_idx)
+    return TelemetryCarry(reducers=states)
+
+
+def finalize_telemetry(cfg: TelemetryCfg,
+                       carry: TelemetryCarry) -> Dict[str, jax.Array]:
+    """Drain the carry into `{out_key: array}` outputs. Elementwise in
+    the reducer states, so it works unchanged on (B, ...)-batched
+    carries from the vmapped campaign drivers."""
+    out: Dict[str, jax.Array] = {}
+    for spec in cfg.specs:
+        out.update(_finalize(spec, carry.reducers[spec.state_key]))
+    return out

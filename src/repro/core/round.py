@@ -338,6 +338,12 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
             g_loss=g_loss,
         )
         n_part = jnp.sum(participating)
+        # Raw metrics dict: per-round scalars plus the per-device (S,)
+        # leaves (core.metrics.PER_DEVICE_METRICS). The engine decides
+        # per telemetry mode what streams to the host as dense history
+        # and what folds into on-device reducers — the round body just
+        # reports everything it knows (unconsumed leaves are dropped at
+        # trace time, so dense-mode programs stay bitwise-identical).
         metrics = {
             "round_latency": jnp.max(jnp.where(participating,
                                                costs.t_total, 0.0)),
@@ -352,6 +358,9 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
             "n_charging": jnp.sum(env.charging),
             "n_online": jnp.sum(env.online),
             "selected": selected,
+            "H": new_H,
+            "residual_energy": new_E,
+            "staleness": new_u,
         }
         return new_params, new_state, env, metrics
 

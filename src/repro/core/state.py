@@ -1,12 +1,26 @@
 """Fleet state pytree carried across FL rounds (all (S,) arrays)."""
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Any, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.sim.devices import DeviceFleet
+
+
+class TelemetryCarry(NamedTuple):
+    """Streaming-telemetry reducer states, carried through the scan
+    alongside FleetState when `TelemetryCfg(mode="streaming")` is on.
+
+    `reducers` maps a `core.metrics.MetricSpec.state_key` to that
+    reducer's on-device state pytree (running sums, Welford moments,
+    ring snapshot buffers, ...) — O(S) per per-device metric instead of
+    the O(R·S) dense history it replaces. Built/folded/drained by
+    `core.metrics.init_telemetry / update_telemetry /
+    finalize_telemetry`; the engine treats it as an opaque carry leaf
+    group (vmapped over seeds/methods like every other carry)."""
+    reducers: Dict[str, Any]
 
 
 class FleetState(NamedTuple):

@@ -28,7 +28,13 @@ Layers (each usable on its own):
                     carry donated between chunks, streams each chunk's
                     history to preallocated host buffers *while the next
                     chunk runs*, and early-stops on target accuracy at
-                    chunk boundaries.
+                    chunk boundaries. `EngineCfg(telemetry=
+                    TelemetryCfg(mode="streaming"))` swaps dense (R, S)
+                    per-device history for on-device metric reducers
+                    folded in the scan carry (core.metrics): O(S)
+                    telemetry state however long the campaign, drained
+                    once into EngineResult.telemetry — what makes
+                    per-device telemetry feasible at mega-fleet S.
   shard_over_fleet— place every array whose leading axis is S on a 1-D
                     "fleet" mesh (jax.sharding.NamedSharding); selection
                     top-k and the K-slot gathers stay global ops and are
@@ -60,6 +66,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.methods import (MethodSpec, batchable, method_params_batch)
+from repro.core.metrics import (DENSE_PER_DEVICE, PER_DEVICE_METRICS,
+                                TelemetryCfg, finalize_telemetry,
+                                init_telemetry, update_telemetry)
 from repro.core.round import (FLConfig, make_round_body, make_round_body_mp)
 from repro.core.state import FleetState, init_fleet_state, replicate_state
 from repro.launch.mesh import make_fleet_mesh
@@ -73,6 +82,13 @@ class EngineCfg:
     chunk_size: int = 8          # rounds per compiled scan chunk
     collect_per_device: bool = True   # keep (R, S) traces (selected, H)
     fleet_shards: Optional[int] = None  # shard S over this many devices
+    # telemetry regime (core.metrics.TelemetryCfg): "dense" keeps the
+    # legacy (R, S) per-device host history; "streaming" folds the
+    # declared MetricSpec reducers in the scan carry instead — O(S)
+    # reducer state per metric, drained once into
+    # EngineResult.telemetry, unblocking mega-fleet campaigns whose
+    # dense history would OOM the host
+    telemetry: TelemetryCfg = TelemetryCfg()
     # donate params/state between chunks so XLA reuses the carry buffers
     # in place. Safe by default: run_rounds hands the first chunk private
     # copies of params/state, so the caller's arrays survive and the
@@ -114,71 +130,125 @@ def _copy_tree(tree):
 
 # ------------------------------------------------------------ chunked scan
 
-def _chunk_body(round_body, length: int, collect_per_device: bool):
+def _strip_per_device(m: Dict, collect_per_device: bool, streaming: bool):
+    """Drop the raw per-device leaves that must not stream to the host
+    as dense (R, S) history: all of them when streaming (the reducers
+    already folded them), the non-legacy ones always, and the legacy
+    pair (selected, H) too when `collect_per_device` is off. Runs at
+    trace time — unconsumed leaves never reach the compiled program, so
+    the dense-mode ys schema (and golden history) is unchanged."""
+    m = dict(m)
+    for k in PER_DEVICE_METRICS:
+        if streaming or not collect_per_device or k not in DENSE_PER_DEVICE:
+            m.pop(k)
+    return m
+
+
+def _chunk_body(round_body, length: int, collect_per_device: bool,
+                telemetry: Optional[TelemetryCfg] = None):
     """R-round scan body: carry (params, state, env, key); fleet/cx/cy
     are loop-invariant arguments threaded to the closure-free round body;
     ys = metric pytree.
 
     PRNG folding matches the sequential driver exactly: one
     `jax.random.split` of the carried key per round.
-    """
+
+    With a streaming `telemetry` cfg the chunk takes (and returns) a
+    `TelemetryCarry` as a trailing argument: every round's raw metrics
+    dict is folded into the reducer states inside the scan, and the
+    per-device leaves are dropped from ys — history stays O(R) scalars
+    while per-device aggregates accumulate on device in O(S)."""
+    streaming = telemetry is not None and telemetry.streaming
+
+    if not streaming:
+        def chunk(params, state: FleetState, env: EnvState,
+                  fleet: DeviceFleet, cx, cy, key, start_round):
+            rounds = jnp.arange(length, dtype=jnp.int32) + start_round
+
+            def step(carry, r):
+                p, s, e, k = carry
+                k, kr = jax.random.split(k)
+                p, s, e, m = round_body(p, s, e, fleet, cx, cy, kr, r)
+                m = _strip_per_device(m, collect_per_device, False)
+                return (p, s, e, k), m
+
+            (params, state, env, key), hist = jax.lax.scan(
+                step, (params, state, env, key), rounds)
+            return params, state, env, key, hist
+
+        return chunk
 
     def chunk(params, state: FleetState, env: EnvState,
-              fleet: DeviceFleet, cx, cy, key, start_round):
+              fleet: DeviceFleet, cx, cy, key, start_round, tel):
         rounds = jnp.arange(length, dtype=jnp.int32) + start_round
 
         def step(carry, r):
-            p, s, e, k = carry
+            p, s, e, k, t = carry
             k, kr = jax.random.split(k)
             p, s, e, m = round_body(p, s, e, fleet, cx, cy, kr, r)
-            m = dict(m, H=s.H)
-            if not collect_per_device:
-                m.pop("selected")
-                m.pop("H")
-            return (p, s, e, k), m
+            t = update_telemetry(telemetry, t, m, r)
+            m = _strip_per_device(m, collect_per_device, True)
+            return (p, s, e, k, t), m
 
-        (params, state, env, key), hist = jax.lax.scan(
-            step, (params, state, env, key), rounds)
-        return params, state, env, key, hist
+        (params, state, env, key, tel), hist = jax.lax.scan(
+            step, (params, state, env, key, tel), rounds)
+        return params, state, env, key, tel, hist
 
     return chunk
 
 
-def _chunk_body_mp(round_body_mp, length: int, collect_per_device: bool):
+def _chunk_body_mp(round_body_mp, length: int, collect_per_device: bool,
+                   telemetry: Optional[TelemetryCfg] = None):
     """`_chunk_body` for the traced-method round: the `MethodParams`
     pytree leads the signature as a loop-invariant argument, so the
     campaign grid can vmap it over the method axis."""
-
-    def chunk(mp, params, state, env, fleet, cx, cy, key, start_round):
+    def chunk(mp, *args):
         inner = _chunk_body(
             lambda p, s, e, f, x, y, k, r:
                 round_body_mp(mp, p, s, e, f, x, y, k, r),
-            length, collect_per_device)
-        return inner(params, state, env, fleet, cx, cy, key, start_round)
+            length, collect_per_device, telemetry)
+        return inner(*args)
 
     return chunk
 
 
 def make_chunk_fn(model: FLModel, cfg: FLConfig, method: MethodSpec, *,
                   chunk_size: int = 8, collect_per_device: bool = True,
-                  donate: bool = False, scenario: Optional[Scenario] = None):
+                  donate: bool = False, scenario: Optional[Scenario] = None,
+                  telemetry: Optional[TelemetryCfg] = None):
     """jitted chunk(params, state, env, fleet, cx, cy, key, start_round)
     -> (params', state', env', key', history) running `chunk_size` rounds
     on device. Closure-free like the round body: one compiled chunk
     serves any same-shaped fleet/dataset. `history` leaves have leading
     axis chunk_size. With `donate=True` the params/state inputs are
-    consumed (aliased into the outputs) — callers must not reuse them."""
+    consumed (aliased into the outputs) — callers must not reuse them.
+    A streaming `telemetry` cfg appends a `TelemetryCarry` argument and
+    output: chunk(..., start_round, tel) -> (..., key', tel', history)
+    (see `core.metrics` for building/draining the carry)."""
     body = make_round_body(model, cfg, method, scenario)
-    chunk = _chunk_body(body, chunk_size, collect_per_device)
+    chunk = _chunk_body(body, chunk_size, collect_per_device, telemetry)
     donate_argnums = (0, 1) if donate else ()
     return jax.jit(chunk, donate_argnums=donate_argnums)
 
 
-def _empty_history(chunk_fn, args) -> Dict[str, np.ndarray]:
+def _telemetry_carry(tcfg: TelemetryCfg, body, args, batch: Optional[int] = None):
+    """Fresh reducer carry for a round body: abstract-trace one (cell's)
+    round for its metric shapes (no compile), init every spec'd reducer,
+    and broadcast the states over a leading `batch` axis when the caller
+    vmaps the carry (seeds / grid cells). The single construction point —
+    if reducer states ever need fleet-mesh sharding, it happens here."""
+    shapes = jax.eval_shape(body, *args)[3]
+    tel = init_telemetry(tcfg, shapes)
+    return tel if batch is None else replicate_state(tel, batch)
+
+
+def _empty_history(chunk_fn, args, hist_index: int = 4) -> Dict[str, np.ndarray]:
     """Correctly-keyed zero-round history via abstract tracing (no
     compile): used when `rounds=0` so callers always get every metric
-    key with a length-0 leading axis."""
-    shapes = jax.eval_shape(chunk_fn, *args)[4]
+    key with a length-0 leading axis. `hist_index` is the position of
+    the history pytree in the chunk's outputs (5 when a telemetry carry
+    is threaded, 4 otherwise)."""
+    shapes = jax.eval_shape(chunk_fn, *args)[hist_index]
     return {k: np.zeros((0,) + tuple(v.shape[1:]), v.dtype)
             for k, v in shapes.items()}
 
@@ -250,6 +320,9 @@ class EngineResult:
     reached_round: Optional[int]     # first chunk-boundary round ≥ target
     acc_curve: np.ndarray            # one accuracy per completed chunk
     env: Optional[EnvState] = None   # final environment state
+    # streaming telemetry only: finalized reducer outputs keyed by
+    # `tel/<metric>/<reducer>` (per-device aggregates, O(S) each)
+    telemetry: Optional[Dict[str, np.ndarray]] = None
     # per-chunk wall clock (first entry includes JIT compile) + rounds per
     # chunk: lets callers report steady-state throughput separately from
     # compile time (benchmarks.common.cached_run). With the async history
@@ -313,6 +386,15 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
         cy = shard_over_fleet(cy, mesh, S)
         params = replicate(params, mesh)
 
+    tcfg = ecfg.telemetry
+    streaming = tcfg.streaming
+    tel = None
+    if streaming:
+        tel = _telemetry_carry(
+            tcfg, make_round_body(model, cfg, method, scenario),
+            (params, state, env, fleet, cx, cy, key,
+             jnp.asarray(0, jnp.int32)))
+
     chunk_fns: Dict[int, object] = {}
 
     def chunk_fn(length: int):
@@ -320,7 +402,8 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
             chunk_fns[length] = make_chunk_fn(
                 model, cfg, method, chunk_size=length,
                 collect_per_device=ecfg.collect_per_device,
-                donate=ecfg.donate, scenario=scenario)
+                donate=ecfg.donate, scenario=scenario,
+                telemetry=tcfg if streaming else None)
         return chunk_fns[length]
 
     hh = _HostHistory(rounds, round_axis=0)
@@ -334,9 +417,14 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
         length = min(ecfg.chunk_size, rounds - done)
         fresh = length not in chunk_fns
         t0 = time.time()
-        params, state, env, key, hist = chunk_fn(length)(
-            params, state, env, fleet, cx, cy, key,
-            jnp.asarray(done, jnp.int32))
+        if streaming:
+            params, state, env, key, tel, hist = chunk_fn(length)(
+                params, state, env, fleet, cx, cy, key,
+                jnp.asarray(done, jnp.int32), tel)
+        else:
+            params, state, env, key, hist = chunk_fn(length)(
+                params, state, env, fleet, cx, cy, key,
+                jnp.asarray(done, jnp.int32))
         if fresh:                    # dispatch wall ≈ trace + compile
             compile_s += time.time() - t0
         hh.drain()                   # fetch chunk i−1 while chunk i runs
@@ -355,16 +443,23 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
             break
     t0 = time.time()
     history = hh.finalize(done)
+    telemetry_out = None
+    if streaming:                    # one O(S) drain for the whole run
+        telemetry_out = {k: np.asarray(v) for k, v in jax.device_get(
+            finalize_telemetry(tcfg, tel)).items()}
     if chunk_wall:                   # last fetch blocks on the last chunk
         chunk_wall[-1] += time.time() - t0
     if history is None:  # rounds=0: empty but correctly-keyed history
-        history = _empty_history(
-            chunk_fn(1), (params, state, env, fleet, cx, cy, key,
-                          jnp.asarray(0, jnp.int32)))
+        args = (params, state, env, fleet, cx, cy, key,
+                jnp.asarray(0, jnp.int32))
+        if streaming:
+            args = args + (tel,)
+        history = _empty_history(chunk_fn(1), args,
+                                 hist_index=5 if streaming else 4)
     return EngineResult(params=params, state=state, history=history,
                         rounds_run=done, reached_round=reached,
                         acc_curve=np.asarray(acc_curve, np.float64),
-                        env=env,
+                        env=env, telemetry=telemetry_out,
                         chunk_wall_s=np.asarray(chunk_wall, np.float64),
                         chunk_rounds=np.asarray(chunk_len, np.int64),
                         compile_s=compile_s)
@@ -412,7 +507,8 @@ def run_campaign_batch(model: FLModel, fleet: DeviceFleet, cx, cy,
                        scenario: Optional[Scenario] = None,
                        per_seed_fleets: bool = False,
                        eval_fn: Optional[Callable] = None,
-                       target_acc: Optional[float] = None
+                       target_acc: Optional[float] = None,
+                       telemetry: Optional[TelemetryCfg] = None
                        ) -> Dict[str, np.ndarray]:
     """vmap independent campaigns over the seed axis. Per-seed init params
     and PRNG streams always.
@@ -436,6 +532,12 @@ def run_campaign_batch(model: FLModel, fleet: DeviceFleet, cx, cy,
     Per-chunk histories stream into preallocated host buffers while the
     next chunk runs (`_HostHistory`) — no end-of-campaign concatenate.
 
+    A streaming `telemetry` cfg folds the declared per-device reducers
+    inside every seed's scan carry (the carry gains a leading seed axis
+    like params/state) and merges the finalized `tel/...` outputs into
+    the returned history as (B, ...) arrays — dense per-device history
+    is then typically disabled via `collect_per_device=False`.
+
     Returns history with leading axes (n_seeds, rounds), plus
     `final_residual_energy`/`final_H` (B, S), `chunk_wall_s`/`chunk_rounds`
     (n_chunks,) timing, and `acc_curve` (n_chunks, B) when `eval_fn` is
@@ -444,13 +546,28 @@ def run_campaign_batch(model: FLModel, fleet: DeviceFleet, cx, cy,
         raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
     body = make_round_body(model, cfg, method, scenario)
     B = len(seeds)
+    streaming = telemetry is not None and telemetry.streaming
+    tcfg = telemetry if streaming else None
     fleet_ax = 0 if per_seed_fleets else None
-    chunk = _chunk_body(body, chunk_size, collect_per_device)
+    chunk = _chunk_body(body, chunk_size, collect_per_device, tcfg)
     in_axes = (0, 0, 0, fleet_ax, fleet_ax, fleet_ax, 0, None)
+    if streaming:
+        in_axes = in_axes + (0,)
     batched = jax.jit(jax.vmap(chunk, in_axes=in_axes))
 
     params, state, env, keys = _campaign_init(model, fleet, cfg, seeds,
                                               scenario, per_seed_fleets)
+    tel = None
+    if streaming:
+        # one (unbatched) cell's args, broadcast over the seed axis
+        cell = lambda t: jax.tree.map(lambda x: x[0], t)
+        tel = _telemetry_carry(
+            tcfg, body,
+            (cell(params), cell(state), cell(env),
+             cell(fleet) if per_seed_fleets else fleet,
+             cx[0] if per_seed_fleets else cx,
+             cy[0] if per_seed_fleets else cy,
+             keys[0], jnp.asarray(0, jnp.int32)), batch=B)
 
     hh = _HostHistory(rounds, round_axis=1)
     acc_curve: List[np.ndarray] = []
@@ -464,13 +581,18 @@ def run_campaign_batch(model: FLModel, fleet: DeviceFleet, cx, cy,
         fresh = done == 0
         if length != chunk_size:  # remainder chunk: separate trace
             batched = jax.jit(jax.vmap(
-                _chunk_body(body, length, collect_per_device),
+                _chunk_body(body, length, collect_per_device, tcfg),
                 in_axes=in_axes))
             fresh = True
         t0 = time.time()
-        params, state, env, keys, hist = batched(
-            params, state, env, fleet, cx, cy, keys,
-            jnp.asarray(done, jnp.int32))
+        if streaming:
+            params, state, env, keys, tel, hist = batched(
+                params, state, env, fleet, cx, cy, keys,
+                jnp.asarray(done, jnp.int32), tel)
+        else:
+            params, state, env, keys, hist = batched(
+                params, state, env, fleet, cx, cy, keys,
+                jnp.asarray(done, jnp.int32))
         if fresh:                    # dispatch wall ≈ trace + compile
             compile_s += time.time() - t0
         hh.drain()                   # fetch chunk i−1 while chunk i runs
@@ -489,10 +611,17 @@ def run_campaign_batch(model: FLModel, fleet: DeviceFleet, cx, cy,
     if chunk_wall:
         chunk_wall[-1] += time.time() - t0
     if history is None:  # rounds=0: empty but correctly-keyed history
-        shapes = jax.eval_shape(batched, params, state, env, fleet, cx, cy,
-                                keys, jnp.asarray(0, jnp.int32))[4]
+        args = (params, state, env, fleet, cx, cy, keys,
+                jnp.asarray(0, jnp.int32))
+        if streaming:
+            args = args + (tel,)
+        shapes = jax.eval_shape(batched,
+                                *args)[5 if streaming else 4]
         history = {k: np.zeros((B, 0) + tuple(v.shape[2:]), v.dtype)
                    for k, v in shapes.items()}
+    if streaming:                    # finalized (B, ...) reducer outputs
+        history.update({k: np.asarray(v) for k, v in jax.device_get(
+            finalize_telemetry(tcfg, tel)).items()})
     history["final_residual_energy"] = np.asarray(state.residual_energy)
     history["final_H"] = np.asarray(state.H)
     history["chunk_wall_s"] = np.asarray(chunk_wall, np.float64)
@@ -513,7 +642,8 @@ def _run_grid_batched(model: FLModel, fleet: DeviceFleet, cx, cy,
                       scenario: Optional[Scenario],
                       per_seed_fleets: bool,
                       eval_fn: Optional[Callable],
-                      target_acc: Optional[float]
+                      target_acc: Optional[float],
+                      telemetry: Optional[TelemetryCfg] = None
                       ) -> Dict[str, Dict[str, np.ndarray]]:
     """One-compile (method × seed) grid: the M×B grid cells flatten into
     ONE vmapped axis of length M·B — cell i·B+j runs method i on seed j —
@@ -543,24 +673,29 @@ def _run_grid_batched(model: FLModel, fleet: DeviceFleet, cx, cy,
         cfg = dataclasses.replace(cfg, policy=dataclasses.replace(
             cfg.policy, H_max=cfg.policy.H0))
     body = make_round_body_mp(model, cfg, scenario)
+    streaming = telemetry is not None and telemetry.streaming
+    tcfg = telemetry if streaming else None
     # cell layout: method-major — mp leaves repeat per seed, seed_idx
     # tiles per method
     mp_cells = jax.tree.map(lambda x: jnp.repeat(x, B, axis=0), mp)
     seed_idx = jnp.tile(jnp.arange(B, dtype=jnp.int32), M)
 
     def cell_chunk(length: int):
-        chunk = _chunk_body_mp(body, length, collect_per_device)
+        chunk = _chunk_body_mp(body, length, collect_per_device, tcfg)
 
-        def run(mp_c, sidx, params, state, env, fleet, cx, cy, key, start):
+        def run(mp_c, sidx, params, state, env, fleet, cx, cy, key, start,
+                *tel):
             if per_seed_fleets:   # on-device per-cell gather of seed data
                 fleet = jax.tree.map(lambda x: x[sidx], fleet)
                 cx, cy = cx[sidx], cy[sidx]
             return chunk(mp_c, params, state, env, fleet, cx, cy, key,
-                         start)
+                         start, *tel)
 
         return run
 
     cell_axes = (0, 0, 0, 0, 0, None, None, None, 0, None)
+    if streaming:
+        cell_axes = cell_axes + (0,)
 
     def grid_fn(length: int):
         return jax.jit(jax.vmap(cell_chunk(length), in_axes=cell_axes))
@@ -574,6 +709,17 @@ def _run_grid_batched(model: FLModel, fleet: DeviceFleet, cx, cy,
             (M * B,) + x.shape[1:]), t)
     params, state, env, keys = (tile(params), tile(state), tile(env),
                                 tile(keys))
+    tel = None
+    if streaming:
+        # one cell's args, broadcast over the M·B flattened cell axis
+        cell = lambda t: jax.tree.map(lambda x: x[0], t)
+        tel = _telemetry_carry(
+            tcfg, body,
+            (cell(mp_cells), cell(params), cell(state), cell(env),
+             cell(fleet) if per_seed_fleets else fleet,
+             cx[0] if per_seed_fleets else cx,
+             cy[0] if per_seed_fleets else cy,
+             keys[0], jnp.asarray(0, jnp.int32)), batch=M * B)
 
     batched = grid_fn(chunk_size)
     hh = _HostHistory(rounds, round_axis=1)
@@ -590,9 +736,14 @@ def _run_grid_batched(model: FLModel, fleet: DeviceFleet, cx, cy,
             batched = grid_fn(length)
             fresh = True
         t0 = time.time()
-        params, state, env, keys, hist = batched(
-            mp_cells, seed_idx, params, state, env, fleet, cx, cy, keys,
-            jnp.asarray(done, jnp.int32))
+        if streaming:
+            params, state, env, keys, tel, hist = batched(
+                mp_cells, seed_idx, params, state, env, fleet, cx, cy,
+                keys, jnp.asarray(done, jnp.int32), tel)
+        else:
+            params, state, env, keys, hist = batched(
+                mp_cells, seed_idx, params, state, env, fleet, cx, cy,
+                keys, jnp.asarray(done, jnp.int32))
         if fresh:                    # dispatch wall ≈ trace + compile
             compile_s += time.time() - t0
         hh.drain()                   # fetch chunk i−1 while chunk i runs
@@ -611,12 +762,18 @@ def _run_grid_batched(model: FLModel, fleet: DeviceFleet, cx, cy,
         chunk_wall.append(time.time() - t0)
     t0 = time.time()
     bufs = hh.finalize(done)
+    tel_out: Dict[str, np.ndarray] = {}
+    if streaming:                    # (M·B, ...) reducer outputs
+        tel_out = {k: np.asarray(v) for k, v in jax.device_get(
+            finalize_telemetry(tcfg, tel)).items()}
     if chunk_wall:
         chunk_wall[-1] += time.time() - t0
     if bufs is None:  # rounds=0
-        shapes = jax.eval_shape(grid_fn(1), mp_cells, seed_idx, params,
-                                state, env, fleet, cx, cy, keys,
-                                jnp.asarray(0, jnp.int32))[4]
+        args = (mp_cells, seed_idx, params, state, env, fleet, cx, cy,
+                keys, jnp.asarray(0, jnp.int32))
+        if streaming:
+            args = args + (tel,)
+        shapes = jax.eval_shape(grid_fn(1), *args)[5 if streaming else 4]
         bufs = {k: np.zeros((M * B, 0) + tuple(v.shape[2:]), v.dtype)
                 for k, v in shapes.items()}
     final_E = np.asarray(state.residual_energy)
@@ -628,6 +785,7 @@ def _run_grid_batched(model: FLModel, fleet: DeviceFleet, cx, cy,
     for i, name in enumerate(names):
         rows = slice(i * B, (i + 1) * B)
         h = {k: v[rows] for k, v in bufs.items()}
+        h.update({k: v[rows] for k, v in tel_out.items()})
         h["final_residual_energy"] = final_E[rows]
         h["final_H"] = final_H[rows]
         h["chunk_wall_s"] = wall
@@ -650,7 +808,8 @@ def run_campaign_grid(model: FLModel, fleet: DeviceFleet, cx, cy,
                       per_seed_fleets: bool = False,
                       eval_fn: Optional[Callable] = None,
                       target_acc: Optional[float] = None,
-                      method_batched: bool = True
+                      method_batched: bool = True,
+                      telemetry: Optional[TelemetryCfg] = None
                       ) -> Dict[str, Dict[str, np.ndarray]]:
     """(method × seed) benchmark grid.
 
@@ -670,12 +829,13 @@ def run_campaign_grid(model: FLModel, fleet: DeviceFleet, cx, cy,
             model, fleet, cx, cy, cfg, methods, seeds=seeds, rounds=rounds,
             chunk_size=chunk_size, collect_per_device=collect_per_device,
             scenario=scenario, per_seed_fleets=per_seed_fleets,
-            eval_fn=eval_fn, target_acc=target_acc)
+            eval_fn=eval_fn, target_acc=target_acc, telemetry=telemetry)
     return {name: run_campaign_batch(model, fleet, cx, cy, cfg, spec,
                                      seeds=seeds, rounds=rounds,
                                      chunk_size=chunk_size,
                                      collect_per_device=collect_per_device,
                                      scenario=scenario,
                                      per_seed_fleets=per_seed_fleets,
-                                     eval_fn=eval_fn, target_acc=target_acc)
+                                     eval_fn=eval_fn, target_acc=target_acc,
+                                     telemetry=telemetry)
             for name, spec in methods.items()}

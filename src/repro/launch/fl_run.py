@@ -49,6 +49,9 @@ class RunResult:
     chunk_wall_s: Optional[np.ndarray] = None
     chunk_rounds: Optional[np.ndarray] = None
     compile_s: Optional[float] = None
+    # streaming telemetry only: finalized per-device reducer outputs
+    # (`tel/<metric>/<reducer>` -> (S,) aggregates; see core.metrics)
+    telemetry: Optional[Dict[str, np.ndarray]] = None
 
 
 def build_task(task: str, n_clients: int, lam: float, *, per_client: int = 128,
@@ -122,7 +125,8 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
            engine: str = "scan", chunk_size: int = 8,
            fleet_shards: Optional[int] = None,
            scenario: str = "static-paper",
-           probe_every: int = 1) -> RunResult:
+           probe_every: int = 1,
+           telemetry: str = "dense") -> RunResult:
     """Run one FL campaign.
 
     engine="scan" (default) runs rounds in compiled `lax.scan` chunks via
@@ -142,6 +146,14 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
     `probe_every=N` re-probes the global model every N rounds instead of
     every round, carrying `FleetState.g_loss` between probes (1 = exact
     paper semantics; see `FLConfig.probe_every`).
+
+    `telemetry="dense"` (default) keeps the per-device history as dense
+    (R, S) host arrays (`sel_count`/`H_trace` derived from them, exact
+    paper semantics). `telemetry="streaming"` (scan engine only) folds
+    `core.metrics.DEFAULT_SPECS` reducers on device instead: history
+    drops the O(R·S) `H_trace`, `sel_count` comes from the `selected`
+    count reducer, and the per-device aggregates land in
+    `RunResult.telemetry` — O(S) host memory however long the campaign.
     """
     model = make_fl_model(task, small=small)
     scen = get_scenario(scenario)
@@ -162,8 +174,13 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
     else:
         eval_fn = make_eval_fn(model, test["x"], test["y"])
 
+    if telemetry not in ("dense", "streaming"):
+        raise ValueError(f"unknown telemetry {telemetry!r} "
+                         "(use 'dense' or 'streaming')")
     if engine == "scan":
+        from repro.core.metrics import TelemetryCfg
         from repro.launch.engine import EngineCfg, run_rounds
+        streaming = telemetry == "streaming"
         # honor the caller's eval cadence: chunks never span more than
         # eval_every rounds, so early-stop granularity is preserved
         chunk_size = max(1, min(chunk_size, eval_every))
@@ -171,7 +188,9 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
             model, fleet, cx, cy, cfg, spec, rounds=rounds,
             key=jax.random.PRNGKey(seed + 1),
             params=model.init(jax.random.PRNGKey(seed + 2)),
-            ecfg=EngineCfg(chunk_size=chunk_size, fleet_shards=fleet_shards),
+            ecfg=EngineCfg(chunk_size=chunk_size, fleet_shards=fleet_shards,
+                           collect_per_device=not streaming,
+                           telemetry=TelemetryCfg(mode=telemetry)),
             eval_fn=eval_fn, target_acc=target_acc,
             scenario=scen, env_key=jax.random.PRNGKey(seed + 3))
         h = res.history
@@ -182,12 +201,22 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
                 print(f"r={r_end:4d} acc={acc:.4f} "
                       f"loss={h['global_loss'][r_end]:.4f} "
                       f"drop={int(h['n_dropped'][r_end])}")
+        if streaming:  # per-device traces live in the O(S) reducers
+            per_dev = {
+                "sel_count": np.asarray(
+                    res.telemetry["tel/selected/count"], np.int64),
+            }
+        else:
+            per_dev = {
+                "sel_count": np.asarray(h["selected"]).sum(0).astype(
+                    np.int64),
+                "H_trace": np.asarray(h["H"]),
+            }
         return RunResult(
             task=task, method=method, rounds_run=res.rounds_run,
             reached_round=res.reached_round, target_acc=target_acc,
-            history={k: np.asarray(h[k], np.float64) for k in HIST_KEYS} | {
-                "sel_count": np.asarray(h["selected"]).sum(0).astype(np.int64),
-                "H_trace": np.asarray(h["H"]),
+            history={k: np.asarray(h[k], np.float64) for k in HIST_KEYS}
+            | per_dev | {
                 "residual_energy": np.asarray(state.residual_energy),
                 "init_energy": np.asarray(fleet.init_energy),
                 "type_id": np.asarray(fleet.type_id),
@@ -200,9 +229,12 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
                            if res.rounds_run else 0.0),
             acc_curve=res.acc_curve, final_params=params,
             chunk_wall_s=res.chunk_wall_s, chunk_rounds=res.chunk_rounds,
-            compile_s=res.compile_s)
+            compile_s=res.compile_s, telemetry=res.telemetry)
     if engine != "loop":
         raise ValueError(f"unknown engine {engine!r} (use 'scan' or 'loop')")
+    if telemetry != "dense":
+        raise ValueError("telemetry='streaming' needs engine='scan' — the "
+                         "legacy loop driver has no on-device reducers")
 
     round_fn = make_round_fn(model, fleet, cx, cy, cfg, spec, scen)
     key = jax.random.PRNGKey(seed + 1)
@@ -284,6 +316,11 @@ def main() -> None:
     ap.add_argument("--probe-every", type=int, default=1,
                     help="re-probe the global model every N rounds "
                          "(1 = every round, the paper's exact semantics)")
+    ap.add_argument("--telemetry", default="dense",
+                    choices=("dense", "streaming"),
+                    help="per-device history: 'dense' keeps (R, S) host "
+                         "buffers; 'streaming' folds O(S) on-device "
+                         "reducers instead (mega-fleet safe)")
     args = ap.parse_args()
     t0 = time.time()
     res = run_fl(args.task, args.method, rounds=args.rounds,
@@ -292,10 +329,10 @@ def main() -> None:
                  beta=args.beta, seed=args.seed, verbose=True,
                  engine=args.engine, chunk_size=args.chunk_size,
                  fleet_shards=args.fleet_shards, scenario=args.scenario,
-                 probe_every=args.probe_every)
+                 probe_every=args.probe_every, telemetry=args.telemetry)
     print(json.dumps({
         "task": res.task, "method": res.method,
-        "scenario": args.scenario,
+        "scenario": args.scenario, "telemetry": args.telemetry,
         "rounds": res.rounds_run, "reached_round": res.reached_round,
         "dropout_ratio": res.dropout_ratio,
         "overall_latency_h": res.overall_latency_s / 3600,

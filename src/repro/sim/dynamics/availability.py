@@ -8,14 +8,21 @@ state is transient: the Markov chain brings them back, with diurnal bias
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 
 from repro.sim.dynamics.diurnal import diurnal_markov_step
 
 
 def online_step(key: jax.Array, online: jax.Array, tod_h: jax.Array,
-                sc) -> jax.Array:
-    """Diurnal online/offline Markov transition: (S,) bool -> (S,) bool."""
+                sc, weekend: Optional[jax.Array] = None) -> jax.Array:
+    """Diurnal online/offline Markov transition: (S,) bool -> (S,) bool.
+    `weekend` scales the probs by the scenario's weekend online
+    multipliers (None ≡ weekday everywhere)."""
     return diurnal_markov_step(key, online, tod_h,
                                sc.p_online_day, sc.p_online_night,
-                               sc.p_offline_day, sc.p_offline_night)
+                               sc.p_offline_day, sc.p_offline_night,
+                               weekend=weekend,
+                               weekend_on_mult=sc.weekend_online_on_mult,
+                               weekend_off_mult=sc.weekend_online_off_mult)

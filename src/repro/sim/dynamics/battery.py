@@ -2,14 +2,17 @@
 
 Arouj et al. (2022) show charge/usage patterns dominate which clients
 are selectable: batteries must be able to *recover*. The plug state is a
-diurnal two-state Markov process (plug-in probability peaks at night);
-while plugged, a device gains `charge_c_per_hour` of its capacity per
-hour; all devices pay a background non-FL drain. Depleted devices become
+diurnal two-state Markov process (plug-in probability peaks at night;
+weekend multipliers reshape it for no-commute days); while plugged, a
+device gains `charge_c_per_hour` of its capacity per hour; all devices
+pay a background non-FL drain. Depleted devices become
 `unavailable_until_charged` — the recovery rule clears `dropped` once a
 charging device holds enough energy for `recover_rounds` minimal rounds
 above its reserve (hysteresis so it does not flap at the threshold).
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,11 +22,16 @@ from repro.sim.dynamics.diurnal import diurnal_markov_step
 
 
 def plug_step(key: jax.Array, charging: jax.Array, tod_h: jax.Array,
-              sc) -> jax.Array:
-    """Diurnal plug-in/unplug Markov transition: (S,) bool -> (S,) bool."""
+              sc, weekend: Optional[jax.Array] = None) -> jax.Array:
+    """Diurnal plug-in/unplug Markov transition: (S,) bool -> (S,) bool.
+    `weekend` scales the probs by the scenario's weekend plug
+    multipliers (None ≡ weekday everywhere)."""
     return diurnal_markov_step(key, charging, tod_h,
                                sc.plug_on_day, sc.plug_on_night,
-                               sc.plug_off_day, sc.plug_off_night)
+                               sc.plug_off_day, sc.plug_off_night,
+                               weekend=weekend,
+                               weekend_on_mult=sc.weekend_plug_on_mult,
+                               weekend_off_mult=sc.weekend_plug_off_mult)
 
 
 def charge_and_drain(energy: jax.Array, charging: jax.Array,

@@ -1,10 +1,17 @@
-"""Shared diurnal clock for the fleet-dynamics processes.
+"""Shared diurnal + weekly clock for the fleet-dynamics processes.
 
 Sim time advances `Scenario.minutes_per_round` per FL round; each device
 carries a phase offset (commute schedule / timezone), so the fleet's
 plug-in and availability waves are staggered rather than synchronized.
+On top of the 24 h cycle the clock exposes a day-of-week signal (the
+campaign starts at 00:00 Monday, day 0): weekends reshape charging and
+availability (no commute — more home charging, different idle windows),
+and scenarios opt in via weekend multipliers on the Markov transition
+probabilities.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -15,6 +22,20 @@ def time_of_day(round_idx: jax.Array, minutes_per_round: float,
     """(S,) hours in [0, 24): global round clock + per-device phase."""
     h = jnp.asarray(round_idx, jnp.float32) * (minutes_per_round / 60.0)
     return jnp.mod(h + phase_h, 24.0)
+
+
+def day_of_week(round_idx: jax.Array, minutes_per_round: float,
+                phase_h: jax.Array) -> jax.Array:
+    """(S,) day index in [0, 7): 0 = Monday (campaign start), 5–6 the
+    weekend. The per-device phase shifts the day boundary exactly like
+    it shifts the time of day (a timezone, not a separate schedule)."""
+    h = jnp.asarray(round_idx, jnp.float32) * (minutes_per_round / 60.0)
+    return jnp.mod(jnp.floor((h + phase_h) / 24.0), 7.0)
+
+
+def is_weekend(dow: jax.Array) -> jax.Array:
+    """(S,) bool weekend indicator for a `day_of_week` signal."""
+    return dow >= 5.0
 
 
 def night_weight(tod_h: jax.Array) -> jax.Array:
@@ -30,12 +51,26 @@ def diurnal(day_val: float, night_val: float, tod_h: jax.Array) -> jax.Array:
 
 def diurnal_markov_step(key: jax.Array, state: jax.Array, tod_h: jax.Array,
                         p_on_day: float, p_on_night: float,
-                        p_off_day: float, p_off_night: float) -> jax.Array:
+                        p_off_day: float, p_off_night: float, *,
+                        weekend: Optional[jax.Array] = None,
+                        weekend_on_mult: float = 1.0,
+                        weekend_off_mult: float = 1.0) -> jax.Array:
     """One transition of a diurnal two-state Markov chain, shared by the
     plug (battery) and online (availability) processes:
     (S,) bool -> (S,) bool with off->on prob p_on and on->off prob p_off,
-    each interpolated between its day/night value."""
+    each interpolated between its day/night value.
+
+    `weekend` (a (S,) bool from `is_weekend`) scales the probabilities by
+    the weekend multipliers on weekend devices, clipped back to [0, 1].
+    `weekend=None` (or both multipliers 1) is the pure diurnal chain —
+    same trace, same PRNG stream (one uniform draw either way)."""
     p_on = diurnal(p_on_day, p_on_night, tod_h)
     p_off = diurnal(p_off_day, p_off_night, tod_h)
+    if weekend is not None and (weekend_on_mult != 1.0
+                                or weekend_off_mult != 1.0):
+        p_on = jnp.clip(jnp.where(weekend, p_on * weekend_on_mult, p_on),
+                        0.0, 1.0)
+        p_off = jnp.clip(jnp.where(weekend, p_off * weekend_off_mult, p_off),
+                         0.0, 1.0)
     u = jax.random.uniform(key, state.shape)
     return jnp.where(state, u >= p_off, u < p_on)

@@ -50,9 +50,26 @@ class Scenario:
     p_offline_night: float = 0.02
     frac_online0: float = 0.9
 
+    # --- weekday/weekend structure (sim clock starts 00:00 Monday):
+    # multipliers applied to the Markov transition probs on weekend
+    # days (clipped to [0, 1]). All 1.0 = pure diurnal chain, same
+    # trace and PRNG stream as before the weekly clock existed.
+    weekend_plug_on_mult: float = 1.0    # scales plug-in prob
+    weekend_plug_off_mult: float = 1.0   # scales unplug prob
+    weekend_online_on_mult: float = 1.0  # scales offline->online prob
+    weekend_online_off_mult: float = 1.0 # scales online->offline prob
+
     @property
     def dynamic(self) -> bool:
         return not self.static
+
+    @property
+    def has_weekend(self) -> bool:
+        """True when any weekend multiplier deviates from 1 — the
+        dynamics step then traces the day-of-week branch."""
+        return any(m != 1.0 for m in (
+            self.weekend_plug_on_mult, self.weekend_plug_off_mult,
+            self.weekend_online_on_mult, self.weekend_online_off_mult))
 
 
 STATIC_PAPER = Scenario(name="static-paper", static=True)
@@ -70,7 +87,11 @@ register(STATIC_PAPER)
 # Defaults above = commuter-diurnal: moderate channel migration, evening
 # plug-ins, mild daytime churn — a phone commuting between the paper's
 # high-rate (home/office Wi-Fi) and low-rate (transit 5G edge) cells.
-register(Scenario(name="commuter-diurnal"))
+# Weekends drop the commute: phones sit on home chargers more (plug-in
+# up, unplug down) and their owners are reachable more of the day.
+register(Scenario(name="commuter-diurnal",
+                  weekend_plug_on_mult=1.6, weekend_plug_off_mult=0.5,
+                  weekend_online_on_mult=1.3, weekend_online_off_mult=0.6))
 
 # Dense-city interference: the channel flips fast and is biased bad
 # (AutoFL's high-variance co-running/interference regime), charging is
@@ -94,7 +115,8 @@ register(Scenario(
     plug_off_day=0.50, plug_off_night=0.02,
     charge_c_per_hour=0.8, idle_drain_w=0.15, frac_charging0=0.2,
     p_offline_day=0.03, p_offline_night=0.01,
-    p_online_day=0.30, p_online_night=0.50, frac_online0=0.95))
+    p_online_day=0.30, p_online_night=0.50, frac_online0=0.95,
+    weekend_plug_on_mult=1.3, weekend_plug_off_mult=0.7))
 
 # Aggressive availability churn with little diurnal structure: devices
 # hop on/off every few rounds — stresses selector robustness to a fleet

@@ -1,0 +1,95 @@
+"""`benchmarks.check_regression` gate semantics: ratio thresholds in
+both directions, and — the ISSUE 5 satellite — warn-and-skip for keys
+present in only one of baseline/fresh (or naming non-dict entries like
+the scalar `dyn_overhead`), so a PR that adds new bench keys keeps the
+gate green until the committed baseline is refreshed."""
+import json
+
+import pytest
+
+from benchmarks.check_regression import check
+
+
+def _write(tmp_path, name, results):
+    p = tmp_path / name
+    p.write_text(json.dumps({"bench": "engine", "results": results}))
+    return str(p)
+
+
+@pytest.fixture()
+def paths(tmp_path):
+    base = _write(tmp_path, "base.json", {
+        "scan_round_S100": {"device_rounds_s": 400.0, "us_per_round": 9.0},
+        "only_in_base": {"device_rounds_s": 10.0},
+        "dyn_overhead": 0.01,                       # scalar, not a dict
+    })
+    fresh = _write(tmp_path, "fresh.json", {
+        "scan_round_S100": {"device_rounds_s": 380.0, "us_per_round": 9.5},
+        "only_in_fresh": {"device_rounds_s": 123.0},
+        "dyn_overhead": 0.02,
+    })
+    return base, fresh
+
+
+def test_small_drift_passes(paths):
+    base, fresh = paths
+    assert check(base, fresh, ["scan_round_S100"], "device_rounds_s",
+                 0.30) == 0
+
+
+def test_large_drop_fails(paths, tmp_path):
+    base, fresh = paths
+    bad = _write(tmp_path, "bad.json",
+                 {"scan_round_S100": {"device_rounds_s": 100.0}})
+    assert check(base, bad, ["scan_round_S100"], "device_rounds_s",
+                 0.30) == 1
+
+
+def test_direction_lower_fails_on_rise(paths, tmp_path):
+    base, fresh = paths
+    slow = _write(tmp_path, "slow.json",
+                  {"scan_round_S100": {"us_per_round": 20.0}})
+    assert check(base, slow, ["scan_round_S100"], "us_per_round",
+                 0.30, direction="lower") == 1
+    # and a drop (improvement) passes under --direction lower
+    quick = _write(tmp_path, "quick.json",
+                   {"scan_round_S100": {"us_per_round": 5.0}})
+    assert check(base, quick, ["scan_round_S100"], "us_per_round",
+                 0.30, direction="lower") == 0
+
+
+def test_key_missing_from_fresh_skips_not_keyerror(paths, capsys):
+    base, fresh = paths
+    assert check(base, fresh, ["only_in_base"], "device_rounds_s",
+                 0.30) == 0
+    assert "SKIP only_in_base" in capsys.readouterr().out
+
+
+def test_key_missing_from_baseline_skips_not_keyerror(paths, capsys):
+    """A PR adding a new bench key must not fail the gate before the
+    committed baseline carries it."""
+    base, fresh = paths
+    assert check(base, fresh, ["only_in_fresh"], "device_rounds_s",
+                 0.30) == 0
+    assert "SKIP only_in_fresh" in capsys.readouterr().out
+
+
+def test_non_dict_entry_skips_not_typeerror(paths, capsys):
+    base, fresh = paths
+    assert check(base, fresh, ["dyn_overhead"], "device_rounds_s",
+                 0.30) == 0
+    assert "SKIP dyn_overhead" in capsys.readouterr().out
+
+
+def test_default_keys_cover_union_and_still_gate(paths, capsys, tmp_path):
+    """keys=None: one-sided keys are reported as skipped, shared keys
+    still gate (and can fail)."""
+    base, fresh = paths
+    assert check(base, fresh, None, "device_rounds_s", 0.30) == 0
+    out = capsys.readouterr().out
+    assert "SKIP only_in_base" in out and "SKIP only_in_fresh" in out
+    assert "OK scan_round_S100" in out
+    bad = _write(tmp_path, "bad2.json", {
+        "scan_round_S100": {"device_rounds_s": 1.0},
+        "only_in_fresh": {"device_rounds_s": 123.0}})
+    assert check(base, bad, None, "device_rounds_s", 0.30) == 1

@@ -18,9 +18,11 @@ from repro.models.fl_models import make_fl_model
 from repro.sim.devices import build_fleet
 from repro.sim.dynamics import (SCENARIOS, Scenario, get_scenario,
                                 init_env_state, step_env)
-from repro.sim.dynamics.battery import charge_and_drain
+from repro.sim.dynamics.battery import charge_and_drain, plug_step
+from repro.sim.dynamics.diurnal import (day_of_week, diurnal_markov_step,
+                                        is_weekend, night_weight,
+                                        time_of_day)
 from repro.sim.dynamics.channel import channel_step, effective_rate_mean
-from repro.sim.dynamics.diurnal import night_weight, time_of_day
 
 N, K = 10, 4
 
@@ -238,6 +240,99 @@ def test_diurnal_clock():
     np.testing.assert_allclose(np.asarray(tod), [0.5], atol=1e-5)
     w = np.asarray(night_weight(jnp.asarray([0.0, 12.0])))
     np.testing.assert_allclose(w, [1.0, 0.0], atol=1e-6)
+
+
+# ------------------------------------------- weekday/weekend structure
+
+def _round_at_day(day, minutes_per_round=2.0):
+    """First round index whose sim clock (phase 0) is inside `day`."""
+    return int(day * 24 * 60 / minutes_per_round)
+
+
+def test_day_of_week_clock():
+    """Campaign starts 00:00 Monday (day 0); days advance every 24 sim
+    hours, wrap at 7, and the per-device phase shifts the boundary."""
+    mpr = 2.0
+    for day in (0, 1, 4, 5, 6):
+        dow = day_of_week(jnp.asarray(_round_at_day(day), jnp.int32),
+                          mpr, jnp.asarray([0.0]))
+        np.testing.assert_allclose(np.asarray(dow), [float(day)])
+    # day 7 wraps back to Monday
+    dow = day_of_week(jnp.asarray(_round_at_day(7), jnp.int32), mpr,
+                      jnp.asarray([0.0]))
+    np.testing.assert_allclose(np.asarray(dow), [0.0])
+    # a +24 h phase pushes a device one day ahead of the global clock
+    dow = day_of_week(jnp.asarray(0, jnp.int32), mpr,
+                      jnp.asarray([0.0, 24.0]))
+    np.testing.assert_allclose(np.asarray(dow), [0.0, 1.0])
+    np.testing.assert_array_equal(
+        np.asarray(is_weekend(jnp.asarray([0.0, 4.0, 5.0, 6.0]))),
+        [False, False, True, True])
+
+
+def test_weekend_multiplier_reshapes_plug_probability():
+    """weekend_plug_on_mult=0 must freeze weekend plug-ins entirely
+    while weekday behavior is untouched (same key, same chain)."""
+    S = 2000
+    sc = dataclasses.replace(
+        get_scenario("commuter-diurnal"), name="wk-test",
+        plug_on_day=0.5, plug_on_night=0.5,
+        weekend_plug_on_mult=0.0, weekend_plug_off_mult=1.0)
+    key = jax.random.PRNGKey(0)
+    unplugged = jnp.zeros((S,), bool)
+    tod = jnp.full((S,), 12.0)
+    weekday = plug_step(key, unplugged, tod, sc,
+                        weekend=jnp.zeros((S,), bool))
+    weekend = plug_step(key, unplugged, tod, sc,
+                        weekend=jnp.ones((S,), bool))
+    assert int(np.asarray(weekday).sum()) > 0.3 * S   # p_on = 0.5
+    assert int(np.asarray(weekend).sum()) == 0        # p_on *= 0
+    # weekend=None ≡ all-weekday: bitwise-identical transition
+    np.testing.assert_array_equal(np.asarray(plug_step(key, unplugged,
+                                                       tod, sc)),
+                                  np.asarray(weekday))
+
+
+def test_weekend_multiplier_clips_to_valid_probability():
+    """A large on-multiplier saturates at p=1: every unplugged weekend
+    device plugs in."""
+    S = 500
+    out = diurnal_markov_step(
+        jax.random.PRNGKey(1), jnp.zeros((S,), bool),
+        jnp.full((S,), 0.0), 0.4, 0.4, 0.1, 0.1,
+        weekend=jnp.ones((S,), bool), weekend_on_mult=100.0)
+    assert bool(np.asarray(out).all())
+
+
+def test_commuter_diurnal_weekend_in_step_env():
+    """commuter-diurnal exercises the weekly clock end-to-end: stepping
+    the env inside a weekend raises the charging fraction vs the same
+    transition on a weekday (plug-on up, unplug down)."""
+    from repro.core import init_fleet_state
+    sc = get_scenario("commuter-diurnal")
+    assert sc.has_weekend
+    assert not get_scenario("static-paper").has_weekend
+    fleet = build_fleet(2000, seed=0)
+    env = init_env_state(fleet, sc, key=jax.random.PRNGKey(0))
+    env = env._replace(phase_h=jnp.zeros_like(env.phase_h))  # one clock
+    state = init_fleet_state(fleet)
+    charging = {}
+    for label, day in (("weekday", 1), ("weekend", 5)):
+        n = 0
+        key = jax.random.PRNGKey(42)
+        e, s = env, state
+        # start at midday (night probs saturate both regimes toward 1);
+        # burn in 60 rounds (~10 chain mixing times), then average 1 h
+        r0 = _round_at_day(day, sc.minutes_per_round) + _round_at_day(
+            0.5, sc.minutes_per_round)
+        for i in range(90):
+            key, k = jax.random.split(key)
+            e, s = step_env(sc, fleet, e, s, jnp.asarray(r0 + i, jnp.int32),
+                            k, 16e6)
+            if i >= 60:
+                n += int(np.asarray(e.charging).sum())
+        charging[label] = n
+    assert charging["weekend"] > 1.5 * charging["weekday"]
 
 
 # --------------------------------------------- end-to-end dynamic runs

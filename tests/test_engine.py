@@ -1,6 +1,7 @@
 """Scan-engine tests: chunked-scan ≡ sequential round loop (PRNG folding
 and numerics), campaign vmap batching, method-axis batching (one-compile
-grids), async history off-load + carry donation, early stop, fleet
+grids), async history off-load + carry donation, streaming telemetry
+(on-device reducers ≡ dense-history reductions), early stop, fleet
 sharding, and a mega-fleet compile/run smoke."""
 import dataclasses
 
@@ -9,8 +10,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (FLConfig, METHODS, init_env_state, init_fleet_state,
-                        make_round_body, make_round_fn, replicate_state)
+from repro.core import (FLConfig, METHODS, MetricSpec, TelemetryCfg,
+                        init_env_state, init_fleet_state, make_round_body,
+                        make_round_fn, replicate_state)
+from repro.core.metrics import DEFAULT_SPECS
 from repro.core.policy import PolicyCfg
 from repro.launch import engine as eng
 from repro.launch.fl_run import build_task, build_task_batch
@@ -368,6 +371,146 @@ def test_probe_every_one_is_exact(setup):
                                   np.asarray(b.history["global_loss"]))
     np.testing.assert_array_equal(np.asarray(a.state.g_loss),
                                   np.asarray(b.state.g_loss))
+
+
+# ------------------------------------------------- streaming telemetry
+
+def _ring_specs(rounds):
+    """DEFAULT_SPECS plus full-trace rings (ring(every=1, cap=R) ≡ the
+    dense (R, S) trace), so reducers can be checked against the exact
+    per-round values they folded."""
+    return DEFAULT_SPECS + (
+        MetricSpec("H", "ring", every=1, cap=rounds),
+        MetricSpec("residual_energy", "ring", every=1, cap=rounds),
+        MetricSpec("round_energy", "sum"),
+    )
+
+
+def test_streaming_matches_dense_history_reductions(setup):
+    """ISSUE 5 tentpole acceptance: streaming reducers on static-paper
+    must match the dense-history reductions — selection counts and H
+    traces exactly, float aggregates to fp tolerance — while the dense
+    scalar history stays bitwise-identical between modes and the (R, S)
+    leaves vanish from the streaming history."""
+    model, fleet, cx, cy, cfg = setup
+    R = 5
+    kw = dict(rounds=R, key=jax.random.PRNGKey(7),
+              init_key=jax.random.PRNGKey(0))
+    dense = eng.run_rounds(model, fleet, cx, cy, cfg, METHODS["rewafl"],
+                           ecfg=eng.EngineCfg(chunk_size=3), **kw)
+    tcfg = TelemetryCfg(mode="streaming", specs=_ring_specs(R))
+    stream = eng.run_rounds(model, fleet, cx, cy, cfg, METHODS["rewafl"],
+                            ecfg=eng.EngineCfg(chunk_size=3,
+                                               collect_per_device=False,
+                                               telemetry=tcfg), **kw)
+    # dense-mode scalar history is bitwise-unchanged by the refactor
+    for k in ("global_loss", "round_energy", "round_latency",
+              "n_participating", "mean_H_selected"):
+        np.testing.assert_array_equal(np.asarray(dense.history[k]),
+                                      np.asarray(stream.history[k]),
+                                      err_msg=k)
+    assert "selected" not in stream.history
+    assert "H" not in stream.history
+    t = stream.telemetry
+    H = np.asarray(dense.history["H"])          # (R, S)
+    sel = np.asarray(dense.history["selected"])
+    np.testing.assert_array_equal(t["tel/H/ring"], H)
+    np.testing.assert_array_equal(t["tel/selected/count"], sel.sum(0))
+    np.testing.assert_array_equal(t["tel/H/last"], H[-1])
+    np.testing.assert_allclose(t["tel/H/mean"], H.mean(0), rtol=1e-6)
+    # residual energy: the streamed ring IS the dense trace; mean/std/
+    # max reducers must match its float64 reductions (tolerances scale
+    # with the ~1e4 J magnitudes: f32 ulp there is ~2e-3)
+    rE = np.asarray(t["tel/residual_energy/ring"], np.float64)
+    scale = np.abs(rE).max()
+    np.testing.assert_allclose(t["tel/residual_energy/mean"], rE.mean(0),
+                               atol=1e-6 * scale)
+    np.testing.assert_allclose(t["tel/residual_energy/std"], rE.std(0),
+                               atol=1e-6 * scale)
+    np.testing.assert_allclose(t["tel/residual_energy/max"], rE.max(0),
+                               atol=1e-6 * scale)
+    np.testing.assert_allclose(t["tel/round_energy/sum"],
+                               np.asarray(dense.history["round_energy"],
+                                          np.float64).sum(),
+                               rtol=1e-5)
+    # final state agrees between modes (same compiled math)
+    np.testing.assert_allclose(np.asarray(stream.state.residual_energy),
+                               np.asarray(dense.state.residual_energy),
+                               atol=1e-3)
+
+
+def test_streaming_campaign_batch_per_seed(setup):
+    """Streaming reducers under the seed vmap: (B, S) outputs in the
+    history, each seed's aggregates matching its solo streaming run."""
+    model, fleet, cx, cy, cfg = setup
+    seeds = (0, 3)
+    R = 4
+    tcfg = TelemetryCfg(mode="streaming")
+    batch = eng.run_campaign_batch(model, fleet, cx, cy, cfg,
+                                   METHODS["rewafl"], seeds=seeds,
+                                   rounds=R, chunk_size=2,
+                                   telemetry=tcfg)
+    assert batch["tel/selected/count"].shape == (len(seeds), N)
+    assert batch["tel/residual_energy/mean"].shape == (len(seeds), N)
+    for i, s in enumerate(seeds):
+        solo = eng.run_rounds(
+            model, fleet, cx, cy, cfg, METHODS["rewafl"], rounds=R,
+            key=jax.random.PRNGKey(s + 1),
+            params=model.init(jax.random.PRNGKey(s + 2)),
+            ecfg=eng.EngineCfg(chunk_size=2, collect_per_device=False,
+                               telemetry=tcfg))
+        np.testing.assert_array_equal(batch["tel/selected/count"][i],
+                                      solo.telemetry["tel/selected/count"])
+        np.testing.assert_allclose(
+            batch["tel/residual_energy/mean"][i],
+            solo.telemetry["tel/residual_energy/mean"], atol=1e-2)
+        np.testing.assert_array_equal(batch["tel/H/last"][i],
+                                      solo.telemetry["tel/H/last"])
+
+
+def test_streaming_method_batched_grid_matches_fallback(setup):
+    """Streaming telemetry through the one-compile (method × seed) grid:
+    per-method tel outputs slice correctly off the flattened cell axis
+    and match the per-method fallback path."""
+    model, fleet, cx, cy, cfg = setup
+    seeds = (0, 3)
+    tcfg = TelemetryCfg(mode="streaming")
+    kw = dict(seeds=seeds, rounds=3, chunk_size=2, telemetry=tcfg)
+    methods = {m: METHODS[m] for m in ("random", "oort", "rewafl")}
+    grid = eng.run_campaign_grid(model, fleet, cx, cy, cfg, methods,
+                                 method_batched=True, **kw)
+    for m in methods:
+        solo = eng.run_campaign_batch(model, fleet, cx, cy, cfg,
+                                      METHODS[m], **kw)
+        np.testing.assert_array_equal(
+            grid[m]["tel/selected/count"], solo["tel/selected/count"],
+            err_msg=f"{m}: selection counts diverged")
+        np.testing.assert_allclose(
+            grid[m]["tel/residual_energy/mean"],
+            solo["tel/residual_energy/mean"], atol=1e-2, err_msg=m)
+        np.testing.assert_array_equal(grid[m]["tel/H/last"],
+                                      solo["tel/H/last"], err_msg=m)
+
+
+def test_run_fl_streaming_telemetry():
+    """run_fl(telemetry='streaming'): per-round scalars equal the dense
+    run, sel_count comes from the count reducer, H_trace is gone, and
+    RunResult.telemetry carries the per-device aggregates."""
+    from repro.launch.fl_run import run_fl
+    kw = dict(rounds=4, n_clients=N, n_select=K, per_client=8,
+              target_acc=2.0, eval_every=2)
+    dense = run_fl("cnn@mnist", "rewafl", **kw)
+    stream = run_fl("cnn@mnist", "rewafl", telemetry="streaming", **kw)
+    np.testing.assert_array_equal(dense.history["global_loss"],
+                                  stream.history["global_loss"])
+    np.testing.assert_array_equal(dense.history["sel_count"],
+                                  stream.history["sel_count"])
+    assert "H_trace" in dense.history and "H_trace" not in stream.history
+    assert stream.telemetry is not None
+    assert stream.telemetry["tel/staleness/max"].shape == (N,)
+    with pytest.raises(ValueError, match="needs engine='scan'"):
+        run_fl("cnn@mnist", "rewafl", engine="loop",
+               telemetry="streaming", **kw)
 
 
 def test_campaign_batch_eval_curve_and_reached_round(setup):

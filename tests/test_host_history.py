@@ -1,0 +1,121 @@
+"""`launch.engine._HostHistory` unit tests: the async history off-load's
+host buffers must preserve chunk order across many push/drain cycles,
+handle partial trailing chunks and early-stop truncation, survive
+rounds=0 finalize, and keep every metric's dtype/shape bit-for-bit
+(ISSUE 5 satellite)."""
+import numpy as np
+import pytest
+
+from repro.launch.engine import _HostHistory
+
+
+def _chunk(off, length, S=4):
+    """Deterministic per-chunk history: value encodes (round, device) so
+    any ordering/offset mistake shows up as a value mismatch."""
+    r = np.arange(off, off + length)
+    return {
+        "scalar": r.astype(np.float64),
+        "per_dev": (r[:, None] * 100 + np.arange(S)).astype(np.float32),
+        "mask": (r[:, None] % 2 == np.arange(S) % 2),
+        "ints": (r[:, None] + np.arange(S)).astype(np.int32),
+    }
+
+
+def _expect(total, S=4):
+    return _chunk(0, total, S)
+
+
+def test_drain_ordering_across_three_plus_chunks():
+    """Deferred-fetch pipeline over 4 chunks (push i, drain at i+1) must
+    land every chunk in its own slice, in round order."""
+    hh = _HostHistory(8, round_axis=0)
+    for off in range(0, 8, 2):
+        hh.drain()                      # fetch the previous chunk
+        hh.push(_chunk(off, 2), off, 2)
+    out = hh.finalize(8)
+    exp = _expect(8)
+    assert set(out) == set(exp)
+    for k in exp:
+        np.testing.assert_array_equal(out[k], exp[k], err_msg=k)
+
+
+def test_partial_final_chunk():
+    """A shorter trailing chunk (remainder) fills exactly its slice."""
+    hh = _HostHistory(7, round_axis=0)
+    hh.push(_chunk(0, 3), 0, 3)
+    hh.drain()
+    hh.push(_chunk(3, 3), 3, 3)
+    hh.push(_chunk(6, 1), 6, 1)         # remainder: drained only by
+    out = hh.finalize(7)                # finalize's implicit drain
+    exp = _expect(7)
+    for k in exp:
+        np.testing.assert_array_equal(out[k], exp[k], err_msg=k)
+
+
+def test_early_stop_truncates_to_rounds_done():
+    hh = _HostHistory(10, round_axis=0)
+    hh.push(_chunk(0, 4), 0, 4)
+    hh.push(_chunk(4, 2), 4, 2)         # stopped after 6 of 10 rounds
+    out = hh.finalize(6)
+    exp = _expect(6)
+    for k in exp:
+        assert out[k].shape[0] == 6, k
+        np.testing.assert_array_equal(out[k], exp[k], err_msg=k)
+
+
+def test_rounds_zero_finalize_returns_none():
+    """No chunk ever pushed (rounds=0): finalize must return None (the
+    drivers then build the empty history via eval_shape), and repeated
+    drains must be harmless."""
+    hh = _HostHistory(0, round_axis=0)
+    hh.drain()
+    hh.drain()
+    assert hh.finalize(0) is None
+
+
+def test_buffer_dtype_and_shape_fidelity():
+    """Preallocated buffers adopt the first chunk's dtypes/shapes
+    exactly — float64/float32/bool/int32 all survive the round trip,
+    with the round axis scaled to the campaign length."""
+    hh = _HostHistory(5, round_axis=0)
+    hh.push(_chunk(0, 5, S=3), 0, 5)
+    out = hh.finalize(5)
+    assert out["scalar"].dtype == np.float64
+    assert out["per_dev"].dtype == np.float32
+    assert out["mask"].dtype == np.bool_
+    assert out["ints"].dtype == np.int32
+    assert out["scalar"].shape == (5,)
+    assert out["per_dev"].shape == (5, 3)
+    assert out["mask"].shape == (5, 3)
+
+
+def test_round_axis_one_for_batched_campaigns():
+    """The campaign drivers stack a leading seed axis: round_axis=1
+    slices the second axis and leaves the batch axis intact."""
+    B, S = 3, 2
+    hh = _HostHistory(4, round_axis=1)
+
+    def batch_chunk(off, length):
+        base = _chunk(off, length, S)
+        return {k: np.stack([v + b for b in range(B)])
+                for k, v in base.items() if v.dtype != np.bool_}
+
+    hh.push(batch_chunk(0, 2), 0, 2)
+    hh.drain()
+    hh.push(batch_chunk(2, 2), 2, 2)
+    out = hh.finalize(4)
+    exp = batch_chunk(0, 4)
+    for k in exp:
+        assert out[k].shape[:2] == (B, 4), k
+        np.testing.assert_array_equal(out[k], exp[k], err_msg=k)
+
+
+def test_finalize_without_intermediate_drains():
+    """finalize() alone must drain everything still pending."""
+    hh = _HostHistory(6, round_axis=0)
+    for off in range(0, 6, 2):
+        hh.push(_chunk(off, 2), off, 2)   # no drain() calls at all
+    out = hh.finalize(6)
+    exp = _expect(6)
+    for k in exp:
+        np.testing.assert_array_equal(out[k], exp[k], err_msg=k)

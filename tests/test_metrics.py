@@ -1,0 +1,141 @@
+"""Streaming-telemetry reducer tests (`core.metrics`): each reducer
+folded over a synthetic round sequence must reproduce the corresponding
+dense-trace reduction; ring snapshot semantics, spec validation, and
+shared Welford state are covered at the unit level (engine-level parity
+lives in tests/test_engine.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import metrics as M
+
+
+def _fold(specs, values, dtype=None):
+    """Fold a (R, S) numpy trace through init/update/finalize."""
+    cfg = M.TelemetryCfg(mode="streaming", specs=tuple(specs))
+    vals = jnp.asarray(values if dtype is None
+                       else np.asarray(values, dtype))
+    shapes = {"x": jax.ShapeDtypeStruct(vals.shape[1:], vals.dtype)}
+    carry = M.init_telemetry(cfg, shapes)
+    for r in range(vals.shape[0]):
+        carry = M.update_telemetry(cfg, carry, {"x": vals[r]},
+                                   jnp.asarray(r, jnp.int32))
+    return {k: np.asarray(v)
+            for k, v in M.finalize_telemetry(cfg, carry).items()}
+
+
+def test_scalar_reducers_match_dense_reductions():
+    rng = np.random.default_rng(0)
+    trace = rng.normal(size=(13, 7)).astype(np.float32) * 5.0
+    out = _fold([M.MetricSpec("x", r) for r in
+                 ("last", "sum", "mean", "std", "max")], trace)
+    np.testing.assert_array_equal(out["tel/x/last"], trace[-1])
+    np.testing.assert_allclose(out["tel/x/sum"], trace.sum(0), rtol=1e-5)
+    np.testing.assert_allclose(out["tel/x/mean"], trace.mean(0), rtol=1e-5)
+    np.testing.assert_allclose(out["tel/x/std"],
+                               trace.astype(np.float64).std(0),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(out["tel/x/max"], trace.max(0))
+
+
+def test_count_reducer_counts_nonzero_rounds():
+    trace = np.array([[1, 0, 1], [0, 0, 1], [1, 0, 1]], bool)
+    out = _fold([M.MetricSpec("x", "count")], trace)
+    np.testing.assert_array_equal(out["tel/x/count"], [2, 0, 3])
+    assert out["tel/x/count"].dtype == np.int32
+
+
+def test_max_reducer_int_and_bool_dtypes():
+    itrace = np.array([[3, -5], [7, -9], [1, -1]], np.int32)
+    out = _fold([M.MetricSpec("x", "max")], itrace)
+    np.testing.assert_array_equal(out["tel/x/max"], [7, -1])
+    assert out["tel/x/max"].dtype == np.int32
+    btrace = np.array([[True, False], [False, False]])
+    out = _fold([M.MetricSpec("x", "max")], btrace)
+    np.testing.assert_array_equal(out["tel/x/max"], [1, 0])
+
+
+def test_ring_every_one_reproduces_dense_trace():
+    """ring(every=1, cap=R) IS the dense (R, S) trace — the bridge the
+    engine parity tests use."""
+    rng = np.random.default_rng(1)
+    trace = rng.integers(0, 50, size=(6, 4)).astype(np.int32)
+    out = _fold([M.MetricSpec("x", "ring", every=1, cap=6)], trace)
+    np.testing.assert_array_equal(out["tel/x/ring"], trace)
+    assert int(out["tel/x/ring/n"]) == 6
+
+
+def test_ring_strided_snapshots_and_wrap():
+    trace = np.arange(10, dtype=np.float32)[:, None]  # (10, 1): value = r
+    out = _fold([M.MetricSpec("x", "ring", every=3, cap=2)], trace)
+    # snapshots at r = 0, 3, 6, 9 -> slots 0, 1, 0, 1 (wrapped)
+    np.testing.assert_array_equal(out["tel/x/ring"][:, 0], [6.0, 9.0])
+    assert int(out["tel/x/ring/n"]) == 4
+
+
+def test_ring_no_wrap_keeps_early_snapshots():
+    trace = np.arange(8, dtype=np.float32)[:, None]
+    out = _fold([M.MetricSpec("x", "ring", every=4, cap=3)], trace)
+    np.testing.assert_array_equal(out["tel/x/ring"][:, 0], [0.0, 4.0, 0.0])
+    assert int(out["tel/x/ring/n"]) == 2
+
+
+def test_mean_and_std_share_one_welford_state():
+    cfg = M.TelemetryCfg(mode="streaming",
+                         specs=(M.MetricSpec("x", "mean"),
+                                M.MetricSpec("x", "std")))
+    carry = M.init_telemetry(
+        cfg, {"x": jax.ShapeDtypeStruct((3,), jnp.float32)})
+    assert list(carry.reducers) == ["x/welford"]
+    out = _fold(cfg.specs, np.ones((4, 3), np.float32) * 2.0)
+    np.testing.assert_allclose(out["tel/x/mean"], 2.0)
+    np.testing.assert_allclose(out["tel/x/std"], 0.0, atol=1e-7)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="unknown reducer"):
+        M.MetricSpec("x", "median")
+    with pytest.raises(ValueError, match="ring needs"):
+        M.MetricSpec("x", "ring", every=0)
+    with pytest.raises(ValueError, match="telemetry mode"):
+        M.TelemetryCfg(mode="sparse")
+    with pytest.raises(ValueError, match="duplicate"):
+        M.TelemetryCfg(specs=(M.MetricSpec("x", "max"),
+                              M.MetricSpec("x", "max")))
+    with pytest.raises(KeyError, match="not in the round metrics"):
+        M.init_telemetry(
+            M.TelemetryCfg(mode="streaming",
+                           specs=(M.MetricSpec("nope", "max"),)),
+            {"x": jax.ShapeDtypeStruct((2,), jnp.float32)})
+
+
+def test_update_inside_scan_matches_python_loop():
+    """The reducers are built to live in a lax.scan carry: folding
+    inside scan must equal the eager python fold."""
+    cfg = M.TelemetryCfg(mode="streaming",
+                         specs=(M.MetricSpec("x", "mean"),
+                                M.MetricSpec("x", "max"),
+                                M.MetricSpec("x", "ring", every=2, cap=3)))
+    rng = np.random.default_rng(2)
+    trace = jnp.asarray(rng.normal(size=(9, 5)).astype(np.float32))
+    shapes = {"x": jax.ShapeDtypeStruct((5,), jnp.float32)}
+
+    def step(carry, r):
+        return M.update_telemetry(cfg, carry, {"x": trace[r]}, r), None
+
+    carry0 = M.init_telemetry(cfg, shapes)
+    scanned, _ = jax.lax.scan(step, carry0,
+                              jnp.arange(9, dtype=jnp.int32))
+    eager = _fold(cfg.specs, np.asarray(trace))
+    for k, v in M.finalize_telemetry(cfg, scanned).items():
+        np.testing.assert_allclose(np.asarray(v), eager[k], rtol=1e-6,
+                                   err_msg=k)
+
+
+def test_default_specs_cover_per_device_metrics():
+    """DEFAULT_SPECS must only reference metrics the round body emits
+    (the per-device raw leaves), so engine init never KeyErrors."""
+    for spec in M.DEFAULT_SPECS:
+        assert spec.metric in M.PER_DEVICE_METRICS
+    assert set(M.DENSE_PER_DEVICE) <= set(M.PER_DEVICE_METRICS)
