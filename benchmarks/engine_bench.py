@@ -19,6 +19,11 @@ fleet scale where dense (R, S) collection would OOM/thrash the host,
 and `telemetry_host_bytes_S10000` records the measured dense-vs-
 streaming host history footprint with mega-fleet projections.
 
+The `async_round_S{min,max}` rows run the FedBuff buffered-aggregation
+round body (`core.async_agg`, buffer_m=10) at the smallest and largest
+scales; `async_overhead` is the fractional us_per_round cost of the
+pending-buffer carry + masked land steps vs the paired sync row.
+
   make bench-engine            # or: python -m benchmarks.engine_bench
 
 CLI (for the CI regression gate, which measures the cheap S=100 scale
@@ -27,7 +32,8 @@ plus the batched-only grid row):
   python -m benchmarks.engine_bench --scales 100 --no-dynamic \
       --no-streaming --grid-no-per-method --out /tmp/bench_fresh.json
   python -m benchmarks.check_regression BENCH_engine.json \
-      /tmp/bench_fresh.json --keys scan_round_S100 --max-drop 0.30
+      /tmp/bench_fresh.json --keys scan_round_S100,async_round_S100 \
+      --max-drop 0.30
   python -m benchmarks.check_regression BENCH_engine.json \
       /tmp/bench_fresh.json --keys campaign_grid_4x5 \
       --metric grid_wall_s --direction lower --max-drop 0.75
@@ -55,7 +61,8 @@ OUT_PATH = os.path.join(ROOT, "BENCH_engine.json")
 
 def measure_engine(S: int, scenario: str = "static-paper", *,
                    chunk: int = 0, timed_chunks: int = 1,
-                   streaming: bool = False) -> Dict:
+                   streaming: bool = False,
+                   async_m: Optional[int] = None) -> Dict:
     """Warm compiled chunks at fleet scale S under `scenario`: fixed
     per-device work (tiny CNN, probe 2, batch 2) so the numbers isolate
     round dispatch + fleet-axis + dynamics overhead, not model FLOPs.
@@ -68,10 +75,18 @@ def measure_engine(S: int, scenario: str = "static-paper", *,
     `streaming=True` runs the chunk with the DEFAULT_SPECS telemetry
     reducers folded in the carry instead of dense (R, S) history — the
     regime that makes S ≥ 100k per-device telemetry feasible at all
-    (dense collection is O(R·S) host bytes)."""
-    from repro.core import FLConfig, METHODS, TelemetryCfg, init_fleet_state
+    (dense collection is O(R·S) host bytes).
+
+    `async_m=M` runs the FedBuff buffered-aggregation round body
+    (`core.async_agg`, AsyncCfg(buffer_m=M)) instead of the sync
+    barrier — the `async_round_S*` rows, measuring the cost of the
+    pending-buffer carry + masked land/aggregate steps against the
+    same-scale sync row."""
+    from repro.core import (AsyncCfg, FLConfig, METHODS, TelemetryCfg,
+                            init_fleet_state)
     from repro.core.policy import PolicyCfg
     from repro.core.round import make_round_body
+    from repro.core.state import init_async_state
     from repro.launch.engine import _telemetry_carry, make_chunk_fn
     from repro.launch.fl_run import build_task
     from repro.models.fl_models import make_fl_model
@@ -86,14 +101,18 @@ def measure_engine(S: int, scenario: str = "static-paper", *,
     fleet = build_fleet(S, seed=0, init_energy_mean=0.3)
     cx, cy, _ = build_task("cnn@mnist", S, 0.8, per_client=2, n_test=16)
     tcfg = TelemetryCfg(mode="streaming") if streaming else None
+    acfg = AsyncCfg(buffer_m=async_m) if async_m else None
     ck = make_chunk_fn(model, cfg, METHODS["rewafl"],
                        chunk_size=chunk, scenario=scen,
-                       collect_per_device=not streaming, telemetry=tcfg)
+                       collect_per_device=not streaming, telemetry=tcfg,
+                       async_cfg=acfg)
     params = model.init(jax.random.PRNGKey(0))
     state = init_fleet_state(fleet, H0=cfg.policy.H0)
     env = init_env_state(fleet, scen,
                          key=jax.random.PRNGKey(3) if scen.dynamic else None)
     key = jax.random.PRNGKey(1)
+    lead = (params, state) + ((init_async_state(
+        params, S, acfg.slots(cfg.n_select)),) if acfg else ())
     extra = ()
     if streaming:
         body = make_round_body(model, cfg, METHODS["rewafl"], scen)
@@ -101,21 +120,25 @@ def measure_engine(S: int, scenario: str = "static-paper", *,
                                   (params, state, env, fleet, cx, cy, key,
                                    jnp.asarray(0, jnp.int32))),)
     t0 = time.time()
-    out = ck(params, state, env, fleet, cx, cy, key,
+    out = ck(*lead, env, fleet, cx, cy, key,
              jnp.asarray(0, jnp.int32), *extra)  # compile
     jax.block_until_ready(out[0])
     compile_s = time.time() - t0
+    # output order: params, state, [astate,] env, key, [tel,] hist
+    n_lead = 3 if acfg else 2
     chunk_walls = []
     for i in range(timed_chunks):
         t0 = time.time()
-        extra = (out[4],) if streaming else ()
-        out = ck(out[0], out[1], out[2], fleet, cx, cy, out[3],
-                 jnp.asarray((i + 1) * chunk, jnp.int32), *extra)
+        extra = (out[n_lead + 2],) if streaming else ()
+        out = ck(*out[:n_lead], out[n_lead], fleet, cx, cy,
+                 out[n_lead + 1], jnp.asarray((i + 1) * chunk, jnp.int32),
+                 *extra)
         jax.block_until_ready(out[0])
         chunk_walls.append(time.time() - t0)
     dt = min(chunk_walls)
     return {"S": S, "scenario": scenario, "chunk": chunk,
             "telemetry": "streaming" if streaming else "dense",
+            "aggregation": f"async_m{async_m}" if async_m else "sync",
             "us_per_round": dt / chunk * 1e6,
             "rounds_s": chunk / dt,
             "device_rounds_s": chunk / dt * S,
@@ -246,10 +269,13 @@ STREAMING_SCALE = 100_000
 HOST_BYTES_SCALE = 10_000
 
 
+ASYNC_BUFFER_M = 10  # half of n_select=20 — the default run_fl regime
+
+
 def run(scales=SCALES, dynamic_scenario: Optional[str] = DYNAMIC_SCENARIO,
         out_path: str = OUT_PATH, timed_chunks: int = 1,
         grid: bool = True, grid_per_method: bool = True,
-        streaming: bool = True):
+        streaming: bool = True, async_rows: bool = True):
     rows = []
     results: Dict[str, Dict] = {}
     # 3 timed chunks at the largest scale: its static row doubles as the
@@ -264,6 +290,23 @@ def run(scales=SCALES, dynamic_scenario: Optional[str] = DYNAMIC_SCENARIO,
                      f"rounds_s={r['rounds_s']:.2f};"
                      f"device_rounds_s={r['device_rounds_s']:.0f};"
                      f"chunk={r['chunk']}"))
+    if async_rows:
+        # FedBuff buffered aggregation at the smallest and largest
+        # scales: async_overhead is the fractional us_per_round cost of
+        # the pending-buffer carry + masked land steps vs the same-scale
+        # sync row (paired back-to-back like the dynamics ratio)
+        for S in {min(scales), max(scales)}:
+            r = measure_engine(S, timed_chunks=3, async_m=ASYNC_BUFFER_M)
+            results[f"async_round_S{S}"] = r
+            overhead = (r["us_per_round"]
+                        / results[f"scan_round_S{S}"]["us_per_round"]
+                        - 1.0)
+            r["async_overhead"] = overhead
+            rows.append((f"engine/async_round_S{S}", r["us_per_round"],
+                         f"rounds_s={r['rounds_s']:.2f};"
+                         f"device_rounds_s={r['device_rounds_s']:.0f};"
+                         f"buffer_m={ASYNC_BUFFER_M};"
+                         f"async_overhead={overhead:+.3f}"))
     if dynamic_scenario is not None:
         S = max(scales)
         static = results[f"scan_round_S{S}"]
@@ -342,6 +385,9 @@ def main() -> None:
     ap.add_argument("--no-streaming", action="store_true",
                     help="skip the S=100k streaming-telemetry row and "
                          "the dense-vs-streaming host-bytes comparison")
+    ap.add_argument("--no-async", action="store_true",
+                    help="skip the FedBuff async-aggregation rows "
+                         "(async_round_S*)")
     ap.add_argument("--out", default=OUT_PATH,
                     help="output JSON path (default BENCH_engine.json)")
     ap.add_argument("--timed-chunks", type=int, default=3,
@@ -356,7 +402,8 @@ def main() -> None:
         out_path=args.out, timed_chunks=args.timed_chunks,
         grid=not args.no_grid,
         grid_per_method=not args.grid_no_per_method,
-        streaming=not args.no_streaming)
+        streaming=not args.no_streaming,
+        async_rows=not args.no_async)
 
 
 if __name__ == "__main__":

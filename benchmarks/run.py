@@ -24,7 +24,7 @@ def main() -> None:
                             fig6_staleness, fig7_sensitivity, kernels_bench,
                             roofline_report, table1_dropout,
                             table2_ps_comparison, table3_local_policy,
-                            table4_heterogeneity)
+                            table4_heterogeneity, table5_async_wallclock)
     from benchmarks.common import ALL_TASKS, QUICK_TASKS
 
     tasks = ALL_TASKS if args.full else QUICK_TASKS
@@ -35,6 +35,7 @@ def main() -> None:
         "table4": (lambda: table4_heterogeneity.run(
             methods=("rewafl", "oort", "autofl", "random") if args.full
             else ("rewafl", "oort"))),
+        "table5": table5_async_wallclock.run,
         "fig4": fig4_selection_energy.run,
         "fig5": fig5_H_dynamics.run,
         "fig6": fig6_staleness.run,

@@ -11,16 +11,25 @@
   metrics.py   — declarative streaming-telemetry reducers (MetricSpec /
                  TelemetryCfg): O(S) on-device aggregates instead of
                  O(R·S) dense per-device histories
+  async_agg.py — FedBuff-style buffered aggregation: virtual clock,
+                 fixed-capacity pending-update buffer, staleness-
+                 weighted landing (the async engine mode)
 """
-from repro.core.state import (FleetState, TelemetryCarry,  # noqa: F401
+from repro.core.state import (AsyncState, FleetState,  # noqa: F401
+                              TelemetryCarry, init_async_state,
                               init_fleet_state, replicate_state)
-from repro.core.metrics import (DEFAULT_SPECS, MetricSpec,  # noqa: F401
-                                TelemetryCfg)
+from repro.core.metrics import (ASYNC_SPECS, DEFAULT_SPECS,  # noqa: F401
+                                MetricSpec, TelemetryCfg)
 from repro.core.methods import (METHODS, MethodParams,  # noqa: F401
-                                MethodSpec, batchable, method_params,
-                                method_params_batch)
+                                MethodSpec, async_variant, batchable,
+                                method_params, method_params_batch)
+from repro.core.async_agg import (AsyncCfg, land_once,  # noqa: F401
+                                  push_cohort)
 from repro.core.round import (FLConfig, bind_round_body,  # noqa: F401
-                              make_round_body, make_round_body_mp,
-                              make_round_fn, make_eval_fn, select_slots)
+                              make_async_round_body,
+                              make_async_round_body_mp, make_round_body,
+                              make_round_body_mp, make_round_fn,
+                              make_eval_fn, sample_round_rates,
+                              select_slots)
 from repro.sim.dynamics import (EnvState, SCENARIOS, Scenario,  # noqa: F401
                                 get_scenario, init_env_state)

@@ -1,0 +1,214 @@
+"""FedBuff-style async buffered aggregation — pure buffer/clock ops.
+
+The sync engine barriers every round on all K participants; staleness
+only ever enters through the PS utility. This module supplies the
+building blocks for an *async* engine mode (`launch.engine` +
+`core.round`): selected devices snapshot the global params at dispatch
+time, their updates land on a virtual wall clock after a per-device
+delay derived from the existing wireless/compute cost model
+(`sim.energy.round_costs`), and the server aggregates once a buffer of
+M updates has arrived — each update staleness-weighted by
+γ = (1 + staleness)^(−staleness_power) (Nguyen et al., FedBuff).
+
+Everything here is fixed-shape and mask-based so the whole async round
+stays inside one `jit(lax.scan)`: the pending-update buffer is a static
+(P, ...) slot array in the scan carry (`core.state.AsyncState`), pushes
+scatter into free slots, and each land step aggregates the ≤P arrivals
+up to the M-th smallest arrival time. No Python-side event queue — the
+compile-once campaign grid and streaming telemetry carry over unchanged.
+
+Buffer invariants (enforced by tests/test_async_property.py):
+
+  * a slot lands at most once per push (landing frees it);
+  * landed-update staleness = server_version − snapshot_version ≥ 0;
+  * live occupancy at step end never reaches M (every step runs
+    `lands_per_step` land attempts, enough to drain a K-slot dispatch);
+  * device-rounds are conserved: n_dispatched = n_landed + live slots.
+
+Sync equivalence: with M = K, full cohorts, and server_lr = 1, every
+step's aggregation consumes exactly the cohort it just dispatched with
+zero staleness — `land_once` detects this at runtime and takes a
+`lax.cond` fast path that executes the *literal* sync FedAvg graph on
+the same inputs, so the async engine reproduces the sync static-paper
+history bitwise (tests/test_async_engine.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import AsyncState
+from repro.kernels.fedavg import ops as fedavg_ops
+
+DELAY_MODES = ("wall", "unit")
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncCfg:
+    """Static configuration of the async aggregation mode.
+
+    buffer_m          — aggregate once M live updates have arrived.
+    delay             — "wall": per-update delay is the device's
+                        estimated round time t_total (compute + uplink
+                        at the sampled rate); "unit": every update takes
+                        one clock unit (uniform delays — the
+                        sync-equivalence test regime).
+    delay_jitter      — lognormal sigma multiplied onto the delay
+                        (0 = deterministic delays; keys are derived by
+                        `fold_in`, so 0 leaves the sync PRNG stream
+                        untouched).
+    staleness_power   — a in γ = (1 + staleness)^(−a); 0 disables
+                        down-weighting.
+    server_lr         — scale on the aggregated delta. The bitwise sync
+                        fast path only arms at 1.0.
+    capacity          — pending-slot count P (None → buffer_m + K, the
+                        proven occupancy bound).
+    n_lands           — land attempts per engine step (None →
+                        ceil(K / buffer_m), enough to drain a full
+                        dispatch). Grids that mix buffer sizes override
+                        both so one static shape covers every cell.
+    """
+    buffer_m: int = 10
+    delay: str = "wall"
+    delay_jitter: float = 0.0
+    staleness_power: float = 0.5
+    server_lr: float = 1.0
+    capacity: Optional[int] = None
+    n_lands: Optional[int] = None
+
+    def __post_init__(self):
+        if self.buffer_m < 1:
+            raise ValueError(f"buffer_m must be >= 1, got {self.buffer_m}")
+        if self.delay not in DELAY_MODES:
+            raise ValueError(f"delay must be one of {DELAY_MODES}, "
+                             f"got {self.delay!r}")
+        if self.delay_jitter < 0:
+            raise ValueError("delay_jitter must be >= 0")
+        if self.staleness_power < 0:
+            raise ValueError("staleness_power must be >= 0")
+
+    def slots(self, k: int) -> int:
+        """Static pending-buffer capacity P for a K-slot dispatch."""
+        p = self.capacity if self.capacity is not None else self.buffer_m + k
+        if p < max(self.buffer_m, k):
+            raise ValueError(f"capacity {p} < max(buffer_m, K) "
+                             f"= {max(self.buffer_m, k)}")
+        return p
+
+    def lands(self, k: int) -> int:
+        """Static land attempts per step: enough that a K-slot dispatch
+        always drains back below M before the next dispatch."""
+        if self.n_lands is not None:
+            return max(1, self.n_lands)
+        return max(1, -(-k // self.buffer_m))  # ceil(K / M)
+
+
+def push_cohort(st: AsyncState, deltas, device_idx: jax.Array,
+                live: jax.Array, weights: jax.Array,
+                delays: jax.Array) -> Tuple[AsyncState, jax.Array]:
+    """Dispatch a K-slot cohort into free pending slots.
+
+    deltas: params-pytree with (K, ...) leaves (θ_k − θ at dispatch);
+    device_idx/live/weights/delays: (K,). Dead cohort slots (`live`
+    False — select_slots padding) are not pushed; live slots scatter
+    into the first free buffer slots with arrival = t_now + delay and
+    snapshot version = current server_version. Returns (state',
+    n_pushed). Pushes beyond capacity drop (mode="drop") — the
+    capacity bound makes that unreachable from the engine, and the
+    conservation property test counts only written slots.
+    """
+    P = st.slot_live.shape[0]
+    k = device_idx.shape[0]
+    free = jnp.nonzero(~st.slot_live, size=k, fill_value=P)[0]
+    target = jnp.where(live & (free < P), free, P)
+    written = target < P
+    arrival = st.t_now + delays.astype(jnp.float32)
+    new = st._replace(
+        slot_live=st.slot_live.at[target].set(True, mode="drop"),
+        slot_device=st.slot_device.at[target].set(
+            device_idx.astype(jnp.int32), mode="drop"),
+        slot_arrival=st.slot_arrival.at[target].set(arrival, mode="drop"),
+        slot_version=st.slot_version.at[target].set(st.server_version,
+                                                    mode="drop"),
+        slot_weight=st.slot_weight.at[target].set(
+            weights.astype(jnp.float32), mode="drop"),
+        slot_delta=jax.tree.map(
+            lambda buf, d: buf.at[target].set(d.astype(buf.dtype),
+                                              mode="drop"),
+            st.slot_delta, deltas),
+        n_dispatched=st.n_dispatched + jnp.sum(written.astype(jnp.int32)),
+    )
+    return new, jnp.sum(written.astype(jnp.int32))
+
+
+def land_once(params, st: AsyncState, m_eff, *, staleness_power: float,
+              server_lr: float = 1.0, sync_aggregate=None,
+              sync_pred=None) -> Tuple[Any, AsyncState, Dict[str, Any]]:
+    """One buffered-aggregation attempt on the virtual clock.
+
+    If at least `m_eff` live updates are pending, the clock advances to
+    the m_eff-th smallest arrival time t_agg and every live update with
+    arrival ≤ t_agg lands: the server applies
+    θ' = θ + server_lr · Σ c̃_j Δ_j with c̃ ∝ weight·γ(staleness),
+    bumps server_version, and frees the landed slots. Otherwise the
+    state passes through unchanged (masked no-op — the static engine
+    step runs a fixed number of these).
+
+    `sync_aggregate`/`sync_pred`: the bitwise sync fast path. When the
+    caller is mid-round and this aggregation would consume *exactly*
+    the cohort it just dispatched with zero staleness (`sync_pred`
+    supplies "buffer was empty before dispatch" ∧ "landed count equals
+    cohort size"), a `lax.cond` returns `sync_aggregate` — the literal
+    sync `_fedavg` result on bit-identical inputs — instead of the
+    delta-form aggregate, making M=K async runs reproduce the sync
+    history bitwise. Only armed when server_lr == 1.0.
+    """
+    S = st.update_staleness.shape[0]
+    arr = jnp.where(st.slot_live, st.slot_arrival, jnp.inf)
+    n_pend = jnp.sum(st.slot_live.astype(jnp.int32))
+    m_eff = jnp.asarray(m_eff, jnp.int32)
+    can = n_pend >= m_eff
+    t_agg = jnp.sort(arr)[jnp.maximum(m_eff - 1, 0)]
+    landed = st.slot_live & (arr <= t_agg) & can
+    n_landed = jnp.sum(landed.astype(jnp.int32))
+    stale = st.server_version - st.slot_version  # (P,) i32, >= 0 for live
+    if staleness_power > 0.0:
+        gamma = (1.0 + stale.astype(jnp.float32)) ** (-staleness_power)
+    else:
+        gamma = jnp.ones_like(stale, jnp.float32)
+    coef = jnp.where(landed, st.slot_weight * gamma, 0.0)
+    csum = jnp.sum(coef)
+    has = csum > 0
+    wn = coef / jnp.maximum(csum, 1e-9)
+
+    def general():
+        def combine(g, d):
+            agg = fedavg_ops.weighted_aggregate(d, wn)  # (P,...)·(P,)->(...)
+            return jnp.where(has, (g + server_lr * agg).astype(g.dtype), g)
+        return jax.tree.map(combine, params, st.slot_delta)
+
+    if sync_aggregate is not None and server_lr == 1.0:
+        pred = can if sync_pred is None else can & sync_pred(n_landed)
+        new_params = jax.lax.cond(pred, lambda: sync_aggregate, general)
+    else:
+        new_params = general()
+
+    stale_idx = jnp.where(landed, st.slot_device, S)
+    new_st = st._replace(
+        slot_live=st.slot_live & ~landed,
+        t_now=jnp.where(can, jnp.maximum(st.t_now, t_agg), st.t_now),
+        server_version=st.server_version + can.astype(jnp.int32),
+        n_landed=st.n_landed + n_landed,
+        update_staleness=st.update_staleness.at[stale_idx].set(
+            jnp.where(landed, stale, 0), mode="drop"),
+    )
+    info = {
+        "did_aggregate": can.astype(jnp.int32),
+        "n_landed": n_landed,
+        "landed": landed,
+        "stale_sum": jnp.sum(jnp.where(landed, stale, 0)),
+    }
+    return new_params, new_st, info

@@ -25,7 +25,7 @@ Two views of a method:
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Sequence
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +37,29 @@ class MethodSpec:
     selector: str   # random | oort | autofl | rea
     policy: str     # fixed | adah | rewa
     exploration: float = 0.0   # ε-greedy fraction (oort/autofl)
+    # aggregation regime: "sync" (FedAvg barrier) or "async" (FedBuff-
+    # style buffered aggregation, core.async_agg) — async specs must set
+    # buffer_m (the M-updates aggregation trigger). Both lower to the
+    # same traced round body, so a campaign grid mixing sync and async
+    # variants still compiles once (engine.run_campaign_grid).
+    aggregation: str = "sync"
+    buffer_m: Optional[int] = None
+
+    def __post_init__(self):
+        if self.aggregation not in ("sync", "async"):
+            raise ValueError(f"aggregation must be 'sync' or 'async', "
+                             f"got {self.aggregation!r}")
+        if self.aggregation == "async" and (self.buffer_m is None
+                                            or self.buffer_m < 1):
+            raise ValueError("async MethodSpec needs buffer_m >= 1, "
+                             f"got {self.buffer_m}")
+
+
+def async_variant(spec: MethodSpec, buffer_m: int,
+                  suffix: str = "_async") -> MethodSpec:
+    """The async (FedBuff) counterpart of a sync method spec."""
+    return dataclasses.replace(spec, name=spec.name + suffix,
+                               aggregation="async", buffer_m=buffer_m)
 
 
 METHODS = {
@@ -72,6 +95,12 @@ class MethodParams(NamedTuple):
     beta: jax.Array          # f32 — energy-utility exponent
     autofl_eta: jax.Array    # f32 — AutoFL reward scale
     autofl_ema: jax.Array    # f32 — AutoFL bandit EMA factor
+    buffer_m: jax.Array      # i32 — async aggregation trigger M; 0 is
+                             # the sync sentinel (aggregate the full
+                             # K-cohort each round). Ignored by the sync
+                             # round body, consumed by the async one —
+                             # what lets one compiled grid span
+                             # sync × async aggregation regimes.
 
 
 def method_params(spec: MethodSpec, *, alpha: float = 1.0,
@@ -93,6 +122,9 @@ def method_params(spec: MethodSpec, *, alpha: float = 1.0,
         beta=jnp.asarray(beta, jnp.float32),
         autofl_eta=jnp.asarray(autofl_eta, jnp.float32),
         autofl_ema=jnp.asarray(autofl_ema, jnp.float32),
+        buffer_m=jnp.asarray(
+            spec.buffer_m if spec.aggregation == "async" else 0,
+            jnp.int32),
     )
 
 

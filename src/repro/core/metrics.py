@@ -46,7 +46,8 @@ from repro.core.state import TelemetryCarry
 # mode only DENSE_PER_DEVICE stream to the host as (R, S) history (the
 # legacy `EngineCfg.collect_per_device` schema, golden-stable); the rest
 # exist solely for reducers to fold and are always dropped from ys.
-PER_DEVICE_METRICS = ("selected", "H", "residual_energy", "staleness")
+PER_DEVICE_METRICS = ("selected", "H", "residual_energy", "staleness",
+                      "update_staleness")
 DENSE_PER_DEVICE = ("selected", "H")
 
 REDUCERS = ("last", "sum", "mean", "std", "max", "count", "ring")
@@ -97,6 +98,16 @@ DEFAULT_SPECS: Tuple[MetricSpec, ...] = (
     MetricSpec("staleness", "max"),
     MetricSpec("H", "mean"),
     MetricSpec("H", "last"),
+)
+
+# Extra reducers for the async (FedBuff) engine mode: the virtual wall
+# clock and the per-device staleness of landed updates — metrics only
+# the async round body emits (`core.round.make_async_round_body`), so
+# only async runs may spec them (init_telemetry raises otherwise).
+ASYNC_SPECS: Tuple[MetricSpec, ...] = DEFAULT_SPECS + (
+    MetricSpec("wall_clock", "last"),
+    MetricSpec("update_staleness", "mean"),
+    MetricSpec("update_staleness", "max"),
 )
 
 

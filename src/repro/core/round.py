@@ -30,11 +30,13 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import async_agg
 from repro.core import policy as pol
 from repro.core import selection as sel
 from repro.core import utility as util
+from repro.core.async_agg import AsyncCfg
 from repro.core.methods import MethodParams, MethodSpec
-from repro.core.state import FleetState
+from repro.core.state import AsyncState, FleetState
 from repro.kernels.fedavg import ops as fedavg_ops
 from repro.models.fl_models import FLModel
 from repro.sim.devices import DeviceFleet
@@ -117,6 +119,22 @@ def _fedavg(global_params, client_params, weights):
     return jax.tree.map(combine, global_params, client_params)
 
 
+def sample_round_rates(key, fleet: DeviceFleet,
+                       env: Optional[EnvState] = None) -> jax.Array:
+    """One round's (S,) uplink rate draw — the single sampling point for
+    every engine arm. Static scenarios (env=None) draw around the
+    fleet's build-time mean; dynamic scenarios around the current
+    channel state's effective mean. `sample_rates(key, fleet)` is
+    exactly `sample_rates_from_mean(key, fleet.rate_mean, ...)`, so the
+    static arm is bitwise-unchanged by the hoist
+    (tests/test_async_engine.py::test_sample_round_rates_hoist)."""
+    if env is not None:
+        return sample_rates_from_mean(
+            key, effective_rate_mean(env.channel_good, fleet),
+            fleet.rate_sigma)
+    return sample_rates(key, fleet)
+
+
 def select_slots(selected: jax.Array, k: int):
     """(sel_idx, slot_live) for the K training slots of a selection mask.
 
@@ -135,11 +153,19 @@ def select_slots(selected: jax.Array, k: int):
 
 def _build_round_body(model: FLModel, cfg: FLConfig,
                       method: Optional[MethodSpec],
-                      scenario: Optional[Scenario]):
+                      scenario: Optional[Scenario],
+                      acfg: Optional[AsyncCfg] = None):
     """Shared body factory. `method` is a static MethodSpec (Python
     branch dispatch, one compile per method) or None — in which case the
     returned function takes a traced `MethodParams` as leading argument
-    and dispatches selector/policy via `lax.switch`."""
+    and dispatches selector/policy via `lax.switch`.
+
+    `acfg` switches the aggregation regime at trace time: None keeps the
+    sync FedAvg barrier (bitwise-unchanged); an `AsyncCfg` splits the
+    round into dispatch (push θ_k − θ into the pending buffer with a
+    virtual-clock arrival time) and land (buffered staleness-weighted
+    aggregation once M updates arrive) — the returned body then carries
+    an `AsyncState` between `state` and `env`."""
     K = cfg.n_select
     model_bits = float(cfg.uplink_bits or model.param_bits)
     dyn = scenario is not None and scenario.dynamic
@@ -149,20 +175,19 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
         # (the traced path cannot: its loop bound must cover every method)
         cfg = dataclasses.replace(
             cfg, policy=dataclasses.replace(pcfg, H_max=pcfg.H0))
+    n_lands = acfg.lands(K) if acfg is not None else 0
 
     def round_fn(mp: Optional[MethodParams], params, state: FleetState,
-                 env: EnvState, fleet: DeviceFleet, cx, cy, key, round_idx):
+                 astate: Optional[AsyncState], env: EnvState,
+                 fleet: DeviceFleet, cx, cy, key, round_idx):
         S = fleet.n
         if dyn:
             k_env, k_rate, k_sel, k_train = jax.random.split(key, 4)
             env, state = step_env(scenario, fleet, env, state, round_idx,
                                   k_env, model_bits)
-            rates = sample_rates_from_mean(
-                k_rate, effective_rate_mean(env.channel_good, fleet),
-                fleet.rate_sigma)
         else:
             k_rate, k_sel, k_train = jax.random.split(key, 3)
-            rates = sample_rates(k_rate, fleet)
+        rates = sample_round_rates(k_rate, fleet, env if dyn else None)
 
         # method hyperparameters: trace-time constants (MethodSpec) or
         # traced MethodParams leaves (the batched grid)
@@ -271,7 +296,56 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
         )(xk, yk, Hk, keys)
         weights = (fleet.data_size[sel_idx].astype(jnp.float32)
                    * part_k.astype(jnp.float32))
-        new_params = _fedavg(params, client_params, weights)
+        if acfg is None:
+            new_params = _fedavg(params, client_params, weights)
+        else:
+            # ---- async dispatch / land (core.async_agg) -----------------
+            # Dispatch: the cohort snapshots θ now; its deltas enter the
+            # pending buffer and arrive on the virtual clock after the
+            # device's estimated round time (or a unit delay). Failed
+            # devices still occupy a slot (weight 0) — the PS cannot
+            # tell a crashed device from a slow one until it reports.
+            if acfg.delay == "unit":
+                delays = jnp.ones((K,), jnp.float32)
+            else:  # "wall": compute + uplink time at the sampled rate
+                delays = costs.t_total[sel_idx].astype(jnp.float32)
+            if acfg.delay_jitter > 0.0:
+                k_delay = jax.random.fold_in(key, 0xA57C)
+                delays = delays * jnp.exp(
+                    acfg.delay_jitter
+                    * jax.random.normal(k_delay, (K,)))
+            if mp is None:
+                m_eff = acfg.buffer_m
+            else:  # 0 is the sync sentinel: aggregate full cohorts
+                m_eff = jnp.where(mp.buffer_m > 0, mp.buffer_m, K)
+            pend_before = jnp.sum(astate.slot_live.astype(jnp.int32))
+            astate, n_pushed = async_agg.push_cohort(
+                astate, jax.tree.map(lambda c, p: c - p, client_params,
+                                     params),
+                sel_idx, slot_live, weights, delays)
+            # Land: fixed number of masked aggregation attempts, enough
+            # to drain the dispatch back below M. The first attempt arms
+            # the bitwise sync fast path: an aggregation consuming
+            # exactly this cohort with zero staleness returns the
+            # literal sync _fedavg graph on bit-identical inputs.
+            new_params = params
+            n_agg = jnp.zeros((), jnp.int32)
+            n_landed_r = jnp.zeros((), jnp.int32)
+            stale_sum = jnp.zeros((), jnp.int32)
+            for j in range(n_lands):
+                sync_agg = sync_pred = None
+                if j == 0 and acfg.server_lr == 1.0:
+                    sync_agg = _fedavg(params, client_params, weights)
+                    sync_pred = (lambda n_landed:
+                                 (pend_before == 0) & (n_landed == n_pushed))
+                new_params, astate, info = async_agg.land_once(
+                    new_params, astate, m_eff,
+                    staleness_power=acfg.staleness_power,
+                    server_lr=acfg.server_lr,
+                    sync_aggregate=sync_agg, sync_pred=sync_pred)
+                n_agg = n_agg + info["did_aggregate"]
+                n_landed_r = n_landed_r + info["n_landed"]
+                stale_sum = stale_sum + info["stale_sum"]
 
         # --- post-training local losses (stat-utility refresh) -----------
         def local_probe(p, x, y):
@@ -362,9 +436,31 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
             "residual_energy": new_E,
             "staleness": new_u,
         }
-        return new_params, new_state, env, metrics
+        if acfg is not None:
+            metrics.update({
+                # virtual wall clock + buffer health, streamed per round
+                "wall_clock": astate.t_now,
+                "server_version": astate.server_version,
+                "n_pending": jnp.sum(astate.slot_live.astype(jnp.int32)),
+                "n_aggregations": n_agg,
+                "n_landed": n_landed_r,
+                "mean_update_staleness": (
+                    stale_sum.astype(jnp.float32)
+                    / jnp.maximum(n_landed_r, 1).astype(jnp.float32)),
+                # per-device (S,): staleness of the last landed update
+                "update_staleness": astate.update_staleness,
+            })
+        return new_params, new_state, astate, env, metrics
 
-    return round_fn
+    if acfg is not None:
+        return round_fn
+
+    def sync_fn(mp, params, state, env, fleet, cx, cy, key, round_idx):
+        p, s, _, e, m = round_fn(mp, params, state, None, env, fleet,
+                                 cx, cy, key, round_idx)
+        return p, s, e, m
+
+    return sync_fn
 
 
 def make_round_body(model: FLModel, cfg: FLConfig, method: MethodSpec,
@@ -399,6 +495,43 @@ def make_round_body(model: FLModel, cfg: FLConfig, method: MethodSpec,
         return body(None, params, state, env, fleet, cx, cy, key, round_idx)
 
     return round_fn
+
+
+def make_async_round_body(model: FLModel, cfg: FLConfig, method: MethodSpec,
+                          scenario: Optional[Scenario] = None,
+                          async_cfg: AsyncCfg = AsyncCfg()):
+    """Async (FedBuff-style) flavour of `make_round_body`:
+    round(params, state, astate, env, fleet, cx, cy, key, round_idx)
+    -> (params', state', astate', env', metrics), where `astate` is the
+    pending-update buffer + virtual clock (`core.state.AsyncState`,
+    build with `init_async_state(params, S, async_cfg.slots(K))`).
+    Selection, training, and fleet-state updates are the *same traced
+    graph* as the sync body; only the aggregation differs — dispatched
+    deltas land after their wireless/compute delay and aggregate
+    staleness-weighted once `async_cfg.buffer_m` have arrived."""
+    body = _build_round_body(model, cfg, method, scenario, async_cfg)
+
+    def round_fn(params, state: FleetState, astate: AsyncState,
+                 env: EnvState, fleet: DeviceFleet, cx, cy, key, round_idx):
+        return body(None, params, state, astate, env, fleet, cx, cy, key,
+                    round_idx)
+
+    return round_fn
+
+
+def make_async_round_body_mp(model: FLModel, cfg: FLConfig,
+                             scenario: Optional[Scenario] = None,
+                             async_cfg: AsyncCfg = AsyncCfg()):
+    """Traced-method async round:
+    round(mp, params, state, astate, env, fleet, cx, cy, key, round_idx).
+    `mp.buffer_m` sets each cell's aggregation trigger (0 = sync
+    sentinel: aggregate full K-cohorts — with zero jitter such a cell
+    reproduces the sync grid cell bitwise via the land fast path), so
+    one compiled campaign grid covers sync × async methods. The static
+    buffer capacity / land count come from `async_cfg`, which must cover
+    the smallest buffer_m in the grid (`engine.run_campaign_grid`
+    derives this automatically)."""
+    return _build_round_body(model, cfg, None, scenario, async_cfg)
 
 
 def make_round_body_mp(model: FLModel, cfg: FLConfig,

@@ -42,6 +42,48 @@ class FleetState(NamedTuple):
                                  # init value is never consumed)
 
 
+class AsyncState(NamedTuple):
+    """Virtual clock + fixed-capacity pending-update buffer carried
+    through the scan in the async (FedBuff-style) engine mode
+    (`core.async_agg`). Slot arrays have static leading axis P
+    (`AsyncCfg.slots(K)`); `slot_delta` is a params-pytree with (P, ...)
+    leaves holding θ_k − θ(dispatch). Dead slots are masked by
+    `slot_live`, so the whole thing jits/scans/vmaps like FleetState."""
+    t_now: jax.Array             # f32 () — virtual wall clock (s)
+    server_version: jax.Array    # i32 () — aggregations applied so far
+    slot_live: jax.Array         # bool (P,) — slot holds an in-flight update
+    slot_device: jax.Array       # i32 (P,) — dispatching device index
+    slot_arrival: jax.Array      # f32 (P,) — virtual arrival time
+    slot_version: jax.Array      # i32 (P,) — server_version at dispatch
+    slot_weight: jax.Array       # f32 (P,) — FedAvg weight (0 = failed)
+    slot_delta: Any              # params-pytree, (P, ...) leaves
+    n_dispatched: jax.Array      # i32 () — updates pushed (ever)
+    n_landed: jax.Array          # i32 () — updates aggregated (ever)
+    update_staleness: jax.Array  # i32 (S,) — staleness of each device's
+                                 # most recently landed update
+
+
+def init_async_state(params, n_devices: int, capacity: int) -> AsyncState:
+    """Empty buffer at virtual time zero. `capacity` is the static slot
+    count P (`core.async_agg.AsyncCfg.slots(K)`)."""
+    P = capacity
+    return AsyncState(
+        t_now=jnp.zeros((), jnp.float32),
+        server_version=jnp.zeros((), jnp.int32),
+        slot_live=jnp.zeros((P,), bool),
+        slot_device=jnp.zeros((P,), jnp.int32),
+        slot_arrival=jnp.zeros((P,), jnp.float32),
+        slot_version=jnp.zeros((P,), jnp.int32),
+        slot_weight=jnp.zeros((P,), jnp.float32),
+        slot_delta=jax.tree.map(
+            lambda x: jnp.zeros((P,) + jnp.shape(x),
+                                jnp.asarray(x).dtype), params),
+        n_dispatched=jnp.zeros((), jnp.int32),
+        n_landed=jnp.zeros((), jnp.int32),
+        update_staleness=jnp.zeros((n_devices,), jnp.int32),
+    )
+
+
 def replicate_state(state: FleetState, n: int) -> FleetState:
     """Stack a fresh (S,)-leaf state into (n, S) leaves for vmapped
     campaign batches (engine.run_campaign_batch): the init state is

@@ -65,12 +65,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.async_agg import AsyncCfg
 from repro.core.methods import (MethodSpec, batchable, method_params_batch)
 from repro.core.metrics import (DENSE_PER_DEVICE, PER_DEVICE_METRICS,
                                 TelemetryCfg, finalize_telemetry,
                                 init_telemetry, update_telemetry)
-from repro.core.round import (FLConfig, make_round_body, make_round_body_mp)
-from repro.core.state import FleetState, init_fleet_state, replicate_state
+from repro.core.round import (FLConfig, make_async_round_body,
+                              make_async_round_body_mp, make_round_body,
+                              make_round_body_mp)
+from repro.core.state import (AsyncState, FleetState, init_async_state,
+                              init_fleet_state, replicate_state)
 from repro.launch.mesh import make_fleet_mesh
 from repro.models.fl_models import FLModel
 from repro.sim.devices import DeviceFleet
@@ -96,6 +100,12 @@ class EngineCfg:
     # last_energy ARE fleet.init_energy) are never both donated and
     # passed as an un-donated fleet argument.
     donate: bool = True
+    # async (FedBuff-style) buffered aggregation: an `AsyncCfg` switches
+    # the round body to dispatch/land form (core.async_agg) and threads
+    # an `AsyncState` (virtual clock + pending-update buffer) through
+    # the scan carry and across chunk boundaries. None = sync FedAvg
+    # barrier, bitwise-unchanged.
+    async_cfg: Optional[AsyncCfg] = None
 
 
 # --------------------------------------------------------------- sharding
@@ -140,12 +150,13 @@ def _strip_per_device(m: Dict, collect_per_device: bool, streaming: bool):
     m = dict(m)
     for k in PER_DEVICE_METRICS:
         if streaming or not collect_per_device or k not in DENSE_PER_DEVICE:
-            m.pop(k)
+            m.pop(k, None)  # async-only keys are absent from sync bodies
     return m
 
 
 def _chunk_body(round_body, length: int, collect_per_device: bool,
-                telemetry: Optional[TelemetryCfg] = None):
+                telemetry: Optional[TelemetryCfg] = None,
+                async_mode: bool = False):
     """R-round scan body: carry (params, state, env, key); fleet/cx/cy
     are loop-invariant arguments threaded to the closure-free round body;
     ys = metric pytree.
@@ -157,8 +168,55 @@ def _chunk_body(round_body, length: int, collect_per_device: bool,
     `TelemetryCarry` as a trailing argument: every round's raw metrics
     dict is folded into the reducer states inside the scan, and the
     per-device leaves are dropped from ys — history stays O(R) scalars
-    while per-device aggregates accumulate on device in O(S)."""
+    while per-device aggregates accumulate on device in O(S).
+
+    `async_mode` expects an async round body
+    (`core.round.make_async_round_body`): the chunk signature gains an
+    `AsyncState` argument/output after `state`, carried through the scan
+    exactly like FleetState — the pending buffer and virtual clock
+    survive chunk boundaries bit-exactly (the resume test's subject).
+    The sync closures below are untouched byte-for-byte, keeping the
+    golden dense history bitwise-stable."""
     streaming = telemetry is not None and telemetry.streaming
+
+    if async_mode and not streaming:
+        def chunk(params, state: FleetState, astate: AsyncState,
+                  env: EnvState, fleet: DeviceFleet, cx, cy, key,
+                  start_round):
+            rounds = jnp.arange(length, dtype=jnp.int32) + start_round
+
+            def step(carry, r):
+                p, s, a, e, k = carry
+                k, kr = jax.random.split(k)
+                p, s, a, e, m = round_body(p, s, a, e, fleet, cx, cy, kr, r)
+                m = _strip_per_device(m, collect_per_device, False)
+                return (p, s, a, e, k), m
+
+            (params, state, astate, env, key), hist = jax.lax.scan(
+                step, (params, state, astate, env, key), rounds)
+            return params, state, astate, env, key, hist
+
+        return chunk
+
+    if async_mode:
+        def chunk(params, state: FleetState, astate: AsyncState,
+                  env: EnvState, fleet: DeviceFleet, cx, cy, key,
+                  start_round, tel):
+            rounds = jnp.arange(length, dtype=jnp.int32) + start_round
+
+            def step(carry, r):
+                p, s, a, e, k, t = carry
+                k, kr = jax.random.split(k)
+                p, s, a, e, m = round_body(p, s, a, e, fleet, cx, cy, kr, r)
+                t = update_telemetry(telemetry, t, m, r)
+                m = _strip_per_device(m, collect_per_device, True)
+                return (p, s, a, e, k, t), m
+
+            (params, state, astate, env, key, tel), hist = jax.lax.scan(
+                step, (params, state, astate, env, key, tel), rounds)
+            return params, state, astate, env, key, tel, hist
+
+        return chunk
 
     if not streaming:
         def chunk(params, state: FleetState, env: EnvState,
@@ -198,10 +256,21 @@ def _chunk_body(round_body, length: int, collect_per_device: bool,
 
 
 def _chunk_body_mp(round_body_mp, length: int, collect_per_device: bool,
-                   telemetry: Optional[TelemetryCfg] = None):
+                   telemetry: Optional[TelemetryCfg] = None,
+                   async_mode: bool = False):
     """`_chunk_body` for the traced-method round: the `MethodParams`
     pytree leads the signature as a loop-invariant argument, so the
     campaign grid can vmap it over the method axis."""
+    if async_mode:
+        def chunk(mp, *args):
+            inner = _chunk_body(
+                lambda p, s, a, e, f, x, y, k, r:
+                    round_body_mp(mp, p, s, a, e, f, x, y, k, r),
+                length, collect_per_device, telemetry, async_mode=True)
+            return inner(*args)
+
+        return chunk
+
     def chunk(mp, *args):
         inner = _chunk_body(
             lambda p, s, e, f, x, y, k, r:
@@ -215,7 +284,8 @@ def _chunk_body_mp(round_body_mp, length: int, collect_per_device: bool,
 def make_chunk_fn(model: FLModel, cfg: FLConfig, method: MethodSpec, *,
                   chunk_size: int = 8, collect_per_device: bool = True,
                   donate: bool = False, scenario: Optional[Scenario] = None,
-                  telemetry: Optional[TelemetryCfg] = None):
+                  telemetry: Optional[TelemetryCfg] = None,
+                  async_cfg: Optional[AsyncCfg] = None):
     """jitted chunk(params, state, env, fleet, cx, cy, key, start_round)
     -> (params', state', env', key', history) running `chunk_size` rounds
     on device. Closure-free like the round body: one compiled chunk
@@ -224,9 +294,18 @@ def make_chunk_fn(model: FLModel, cfg: FLConfig, method: MethodSpec, *,
     consumed (aliased into the outputs) — callers must not reuse them.
     A streaming `telemetry` cfg appends a `TelemetryCarry` argument and
     output: chunk(..., start_round, tel) -> (..., key', tel', history)
-    (see `core.metrics` for building/draining the carry)."""
-    body = make_round_body(model, cfg, method, scenario)
-    chunk = _chunk_body(body, chunk_size, collect_per_device, telemetry)
+    (see `core.metrics` for building/draining the carry).
+    An `async_cfg` switches to the buffered-aggregation round body and
+    inserts an `AsyncState` argument/output after `state`:
+    chunk(params, state, astate, env, ...) -> (..., astate', ...)."""
+    if async_cfg is not None:
+        body = make_async_round_body(model, cfg, method, scenario,
+                                     async_cfg)
+        chunk = _chunk_body(body, chunk_size, collect_per_device,
+                            telemetry, async_mode=True)
+    else:
+        body = make_round_body(model, cfg, method, scenario)
+        chunk = _chunk_body(body, chunk_size, collect_per_device, telemetry)
     donate_argnums = (0, 1) if donate else ()
     return jax.jit(chunk, donate_argnums=donate_argnums)
 
@@ -237,18 +316,17 @@ def _telemetry_carry(tcfg: TelemetryCfg, body, args, batch: Optional[int] = None
     and broadcast the states over a leading `batch` axis when the caller
     vmaps the carry (seeds / grid cells). The single construction point —
     if reducer states ever need fleet-mesh sharding, it happens here."""
-    shapes = jax.eval_shape(body, *args)[3]
+    shapes = jax.eval_shape(body, *args)[-1]  # metrics are the last output
     tel = init_telemetry(tcfg, shapes)
     return tel if batch is None else replicate_state(tel, batch)
 
 
-def _empty_history(chunk_fn, args, hist_index: int = 4) -> Dict[str, np.ndarray]:
+def _empty_history(chunk_fn, args) -> Dict[str, np.ndarray]:
     """Correctly-keyed zero-round history via abstract tracing (no
     compile): used when `rounds=0` so callers always get every metric
-    key with a length-0 leading axis. `hist_index` is the position of
-    the history pytree in the chunk's outputs (5 when a telemetry carry
-    is threaded, 4 otherwise)."""
-    shapes = jax.eval_shape(chunk_fn, *args)[hist_index]
+    key with a length-0 leading axis. The history pytree is the last of
+    the chunk's outputs in every variant (sync/async × dense/stream)."""
+    shapes = jax.eval_shape(chunk_fn, *args)[-1]
     return {k: np.zeros((0,) + tuple(v.shape[1:]), v.dtype)
             for k, v in shapes.items()}
 
@@ -339,6 +417,9 @@ class EngineResult:
     # this isolates compile time directly instead of inferring it from
     # the wall of a chunk that mixes compile and execution
     compile_s: float = 0.0
+    # async engine mode only: final virtual clock + pending-update
+    # buffer (core.state.AsyncState)
+    async_state: Optional[AsyncState] = None
 
 
 def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
@@ -370,6 +451,10 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
             env_key = jax.random.fold_in(key, 0x0d1f)
         env = init_env_state(fleet, scenario, key=env_key if dyn else None)
 
+    acfg = ecfg.async_cfg
+    astate = (init_async_state(params, S, acfg.slots(cfg.n_select))
+              if acfg is not None else None)
+
     if ecfg.donate:
         # the first chunk consumes (donates) its params/state inputs:
         # private copies keep the caller's arrays alive and un-alias the
@@ -390,10 +475,17 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
     streaming = tcfg.streaming
     tel = None
     if streaming:
-        tel = _telemetry_carry(
-            tcfg, make_round_body(model, cfg, method, scenario),
-            (params, state, env, fleet, cx, cy, key,
-             jnp.asarray(0, jnp.int32)))
+        if acfg is not None:
+            tel = _telemetry_carry(
+                tcfg, make_async_round_body(model, cfg, method, scenario,
+                                            acfg),
+                (params, state, astate, env, fleet, cx, cy, key,
+                 jnp.asarray(0, jnp.int32)))
+        else:
+            tel = _telemetry_carry(
+                tcfg, make_round_body(model, cfg, method, scenario),
+                (params, state, env, fleet, cx, cy, key,
+                 jnp.asarray(0, jnp.int32)))
 
     chunk_fns: Dict[int, object] = {}
 
@@ -403,7 +495,8 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
                 model, cfg, method, chunk_size=length,
                 collect_per_device=ecfg.collect_per_device,
                 donate=ecfg.donate, scenario=scenario,
-                telemetry=tcfg if streaming else None)
+                telemetry=tcfg if streaming else None,
+                async_cfg=acfg)
         return chunk_fns[length]
 
     hh = _HostHistory(rounds, round_axis=0)
@@ -417,14 +510,20 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
         length = min(ecfg.chunk_size, rounds - done)
         fresh = length not in chunk_fns
         t0 = time.time()
+        lead = ((params, state, astate) if acfg is not None
+                else (params, state))
+        args = lead + (env, fleet, cx, cy, key, jnp.asarray(done,
+                                                            jnp.int32))
+        out = chunk_fn(length)(*args + ((tel,) if streaming else ()))
+        params, state = out[0], out[1]
+        i = 2
+        if acfg is not None:
+            astate = out[i]
+            i += 1
+        env, key = out[i], out[i + 1]
         if streaming:
-            params, state, env, key, tel, hist = chunk_fn(length)(
-                params, state, env, fleet, cx, cy, key,
-                jnp.asarray(done, jnp.int32), tel)
-        else:
-            params, state, env, key, hist = chunk_fn(length)(
-                params, state, env, fleet, cx, cy, key,
-                jnp.asarray(done, jnp.int32))
+            tel = out[-2]
+        hist = out[-1]
         if fresh:                    # dispatch wall ≈ trace + compile
             compile_s += time.time() - t0
         hh.drain()                   # fetch chunk i−1 while chunk i runs
@@ -450,19 +549,19 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
     if chunk_wall:                   # last fetch blocks on the last chunk
         chunk_wall[-1] += time.time() - t0
     if history is None:  # rounds=0: empty but correctly-keyed history
-        args = (params, state, env, fleet, cx, cy, key,
-                jnp.asarray(0, jnp.int32))
+        lead = ((params, state, astate) if acfg is not None
+                else (params, state))
+        args = lead + (env, fleet, cx, cy, key, jnp.asarray(0, jnp.int32))
         if streaming:
             args = args + (tel,)
-        history = _empty_history(chunk_fn(1), args,
-                                 hist_index=5 if streaming else 4)
+        history = _empty_history(chunk_fn(1), args)
     return EngineResult(params=params, state=state, history=history,
                         rounds_run=done, reached_round=reached,
                         acc_curve=np.asarray(acc_curve, np.float64),
                         env=env, telemetry=telemetry_out,
                         chunk_wall_s=np.asarray(chunk_wall, np.float64),
                         chunk_rounds=np.asarray(chunk_len, np.int64),
-                        compile_s=compile_s)
+                        compile_s=compile_s, async_state=astate)
 
 
 # ------------------------------------------------------- campaign batching
@@ -508,10 +607,17 @@ def run_campaign_batch(model: FLModel, fleet: DeviceFleet, cx, cy,
                        per_seed_fleets: bool = False,
                        eval_fn: Optional[Callable] = None,
                        target_acc: Optional[float] = None,
-                       telemetry: Optional[TelemetryCfg] = None
+                       telemetry: Optional[TelemetryCfg] = None,
+                       async_cfg: Optional[AsyncCfg] = None
                        ) -> Dict[str, np.ndarray]:
     """vmap independent campaigns over the seed axis. Per-seed init params
     and PRNG streams always.
+
+    Async aggregation: an `async_cfg` (or `method.aggregation ==
+    "async"`, which derives one from `method.buffer_m`) switches every
+    seed's campaign to the buffered dispatch/land round body; each seed
+    carries its own `AsyncState` and the history gains the per-round
+    async scalars plus `final_wall_clock` (B,).
 
     `per_seed_fleets=False` (legacy): one shared fleet/dataset — cross-seed
     variance covers init + round randomness only, and results differ from
@@ -544,30 +650,48 @@ def run_campaign_batch(model: FLModel, fleet: DeviceFleet, cx, cy,
     given."""
     if chunk_size < 1:
         raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
-    body = make_round_body(model, cfg, method, scenario)
+    if async_cfg is None and method.aggregation == "async":
+        async_cfg = AsyncCfg(buffer_m=method.buffer_m)
+    is_async = async_cfg is not None
+    if is_async:
+        body = make_async_round_body(model, cfg, method, scenario,
+                                     async_cfg)
+    else:
+        body = make_round_body(model, cfg, method, scenario)
     B = len(seeds)
     streaming = telemetry is not None and telemetry.streaming
     tcfg = telemetry if streaming else None
     fleet_ax = 0 if per_seed_fleets else None
-    chunk = _chunk_body(body, chunk_size, collect_per_device, tcfg)
-    in_axes = (0, 0, 0, fleet_ax, fleet_ax, fleet_ax, 0, None)
+    chunk = _chunk_body(body, chunk_size, collect_per_device, tcfg,
+                        async_mode=is_async)
+    in_axes = (0, 0) + ((0,) if is_async else ()) + (
+        0, fleet_ax, fleet_ax, fleet_ax, 0, None)
     if streaming:
         in_axes = in_axes + (0,)
     batched = jax.jit(jax.vmap(chunk, in_axes=in_axes))
 
     params, state, env, keys = _campaign_init(model, fleet, cfg, seeds,
                                               scenario, per_seed_fleets)
+    cell = lambda t: jax.tree.map(lambda x: x[0], t)
+    astate = None
+    if is_async:
+        S = state.residual_energy.shape[-1]
+        astate = replicate_state(
+            init_async_state(cell(params), S,
+                             async_cfg.slots(cfg.n_select)), B)
     tel = None
     if streaming:
         # one (unbatched) cell's args, broadcast over the seed axis
-        cell = lambda t: jax.tree.map(lambda x: x[0], t)
+        cell_args = (cell(params), cell(state))
+        if is_async:
+            cell_args = cell_args + (cell(astate),)
         tel = _telemetry_carry(
             tcfg, body,
-            (cell(params), cell(state), cell(env),
-             cell(fleet) if per_seed_fleets else fleet,
-             cx[0] if per_seed_fleets else cx,
-             cy[0] if per_seed_fleets else cy,
-             keys[0], jnp.asarray(0, jnp.int32)), batch=B)
+            cell_args + (cell(env),
+                         cell(fleet) if per_seed_fleets else fleet,
+                         cx[0] if per_seed_fleets else cx,
+                         cy[0] if per_seed_fleets else cy,
+                         keys[0], jnp.asarray(0, jnp.int32)), batch=B)
 
     hh = _HostHistory(rounds, round_axis=1)
     acc_curve: List[np.ndarray] = []
@@ -581,18 +705,25 @@ def run_campaign_batch(model: FLModel, fleet: DeviceFleet, cx, cy,
         fresh = done == 0
         if length != chunk_size:  # remainder chunk: separate trace
             batched = jax.jit(jax.vmap(
-                _chunk_body(body, length, collect_per_device, tcfg),
+                _chunk_body(body, length, collect_per_device, tcfg,
+                            async_mode=is_async),
                 in_axes=in_axes))
             fresh = True
         t0 = time.time()
+        lead = ((params, state, astate) if is_async
+                else (params, state))
+        args = lead + (env, fleet, cx, cy, keys,
+                       jnp.asarray(done, jnp.int32))
+        out = batched(*args + ((tel,) if streaming else ()))
+        params, state = out[0], out[1]
+        i = 2
+        if is_async:
+            astate = out[i]
+            i += 1
+        env, keys = out[i], out[i + 1]
         if streaming:
-            params, state, env, keys, tel, hist = batched(
-                params, state, env, fleet, cx, cy, keys,
-                jnp.asarray(done, jnp.int32), tel)
-        else:
-            params, state, env, keys, hist = batched(
-                params, state, env, fleet, cx, cy, keys,
-                jnp.asarray(done, jnp.int32))
+            tel = out[-2]
+        hist = out[-1]
         if fresh:                    # dispatch wall ≈ trace + compile
             compile_s += time.time() - t0
         hh.drain()                   # fetch chunk i−1 while chunk i runs
@@ -611,12 +742,13 @@ def run_campaign_batch(model: FLModel, fleet: DeviceFleet, cx, cy,
     if chunk_wall:
         chunk_wall[-1] += time.time() - t0
     if history is None:  # rounds=0: empty but correctly-keyed history
-        args = (params, state, env, fleet, cx, cy, keys,
-                jnp.asarray(0, jnp.int32))
+        lead = ((params, state, astate) if is_async
+                else (params, state))
+        args = lead + (env, fleet, cx, cy, keys,
+                       jnp.asarray(0, jnp.int32))
         if streaming:
             args = args + (tel,)
-        shapes = jax.eval_shape(batched,
-                                *args)[5 if streaming else 4]
+        shapes = jax.eval_shape(batched, *args)[-1]
         history = {k: np.zeros((B, 0) + tuple(v.shape[2:]), v.dtype)
                    for k, v in shapes.items()}
     if streaming:                    # finalized (B, ...) reducer outputs
@@ -624,6 +756,8 @@ def run_campaign_batch(model: FLModel, fleet: DeviceFleet, cx, cy,
             finalize_telemetry(tcfg, tel)).items()})
     history["final_residual_energy"] = np.asarray(state.residual_energy)
     history["final_H"] = np.asarray(state.H)
+    if is_async:
+        history["final_wall_clock"] = np.asarray(astate.t_now)
     history["chunk_wall_s"] = np.asarray(chunk_wall, np.float64)
     history["chunk_rounds"] = np.asarray(chunk_len, np.int64)
     history["compile_s"] = np.float64(compile_s)
@@ -643,7 +777,8 @@ def _run_grid_batched(model: FLModel, fleet: DeviceFleet, cx, cy,
                       per_seed_fleets: bool,
                       eval_fn: Optional[Callable],
                       target_acc: Optional[float],
-                      telemetry: Optional[TelemetryCfg] = None
+                      telemetry: Optional[TelemetryCfg] = None,
+                      async_cfg: Optional[AsyncCfg] = None
                       ) -> Dict[str, Dict[str, np.ndarray]]:
     """One-compile (method × seed) grid: the M×B grid cells flatten into
     ONE vmapped axis of length M·B — cell i·B+j runs method i on seed j —
@@ -672,7 +807,26 @@ def _run_grid_batched(model: FLModel, fleet: DeviceFleet, cx, cy,
         # iterations beyond H0, the price of the single shared program)
         cfg = dataclasses.replace(cfg, policy=dataclasses.replace(
             cfg.policy, H_max=cfg.policy.H0))
-    body = make_round_body_mp(model, cfg, scenario)
+    # a grid with any async cell compiles the async round body for every
+    # cell; sync cells ride along with buffer_m = 0 (the full-cohort
+    # sentinel) and reproduce their sync selections/params through the
+    # land fast path. The static buffer capacity / land count must cover
+    # every cell: capacity fits the largest trigger, land count drains
+    # the smallest.
+    K = cfg.n_select
+    m_effs = [methods[n].buffer_m if methods[n].aggregation == "async"
+              else K for n in names]
+    any_async = async_cfg is not None or any(
+        methods[n].aggregation == "async" for n in names)
+    if any_async:
+        base = async_cfg if async_cfg is not None else AsyncCfg(buffer_m=K)
+        acfg_shared = dataclasses.replace(
+            base, capacity=max(max(m_effs), base.buffer_m) + K,
+            n_lands=max(-(-K // m) for m in m_effs))
+        body = make_async_round_body_mp(model, cfg, scenario, acfg_shared)
+    else:
+        acfg_shared = None
+        body = make_round_body_mp(model, cfg, scenario)
     streaming = telemetry is not None and telemetry.streaming
     tcfg = telemetry if streaming else None
     # cell layout: method-major — mp leaves repeat per seed, seed_idx
@@ -681,7 +835,19 @@ def _run_grid_batched(model: FLModel, fleet: DeviceFleet, cx, cy,
     seed_idx = jnp.tile(jnp.arange(B, dtype=jnp.int32), M)
 
     def cell_chunk(length: int):
-        chunk = _chunk_body_mp(body, length, collect_per_device, tcfg)
+        chunk = _chunk_body_mp(body, length, collect_per_device, tcfg,
+                               async_mode=any_async)
+
+        if any_async:
+            def run(mp_c, sidx, params, state, astate, env, fleet, cx, cy,
+                    key, start, *tel):
+                if per_seed_fleets:
+                    fleet = jax.tree.map(lambda x: x[sidx], fleet)
+                    cx, cy = cx[sidx], cy[sidx]
+                return chunk(mp_c, params, state, astate, env, fleet, cx,
+                             cy, key, start, *tel)
+
+            return run
 
         def run(mp_c, sidx, params, state, env, fleet, cx, cy, key, start,
                 *tel):
@@ -693,7 +859,8 @@ def _run_grid_batched(model: FLModel, fleet: DeviceFleet, cx, cy,
 
         return run
 
-    cell_axes = (0, 0, 0, 0, 0, None, None, None, 0, None)
+    cell_axes = (0, 0, 0, 0) + ((0,) if any_async else ()) + (
+        0, None, None, None, 0, None)
     if streaming:
         cell_axes = cell_axes + (0,)
 
@@ -709,17 +876,27 @@ def _run_grid_batched(model: FLModel, fleet: DeviceFleet, cx, cy,
             (M * B,) + x.shape[1:]), t)
     params, state, env, keys = (tile(params), tile(state), tile(env),
                                 tile(keys))
+    cell = lambda t: jax.tree.map(lambda x: x[0], t)
+    astate = None
+    if any_async:
+        S = state.residual_energy.shape[-1]
+        astate = replicate_state(
+            init_async_state(cell(params), S, acfg_shared.slots(K)),
+            M * B)
     tel = None
     if streaming:
         # one cell's args, broadcast over the M·B flattened cell axis
-        cell = lambda t: jax.tree.map(lambda x: x[0], t)
+        cell_args = (cell(mp_cells), cell(params), cell(state))
+        if any_async:
+            cell_args = cell_args + (cell(astate),)
         tel = _telemetry_carry(
             tcfg, body,
-            (cell(mp_cells), cell(params), cell(state), cell(env),
-             cell(fleet) if per_seed_fleets else fleet,
-             cx[0] if per_seed_fleets else cx,
-             cy[0] if per_seed_fleets else cy,
-             keys[0], jnp.asarray(0, jnp.int32)), batch=M * B)
+            cell_args + (cell(env),
+                         cell(fleet) if per_seed_fleets else fleet,
+                         cx[0] if per_seed_fleets else cx,
+                         cy[0] if per_seed_fleets else cy,
+                         keys[0], jnp.asarray(0, jnp.int32)),
+            batch=M * B)
 
     batched = grid_fn(chunk_size)
     hh = _HostHistory(rounds, round_axis=1)
@@ -736,14 +913,20 @@ def _run_grid_batched(model: FLModel, fleet: DeviceFleet, cx, cy,
             batched = grid_fn(length)
             fresh = True
         t0 = time.time()
+        lead = (mp_cells, seed_idx, params, state) + (
+            (astate,) if any_async else ())
+        args = lead + (env, fleet, cx, cy, keys,
+                       jnp.asarray(done, jnp.int32))
+        out = batched(*args + ((tel,) if streaming else ()))
+        params, state = out[0], out[1]
+        i = 2
+        if any_async:
+            astate = out[i]
+            i += 1
+        env, keys = out[i], out[i + 1]
         if streaming:
-            params, state, env, keys, tel, hist = batched(
-                mp_cells, seed_idx, params, state, env, fleet, cx, cy,
-                keys, jnp.asarray(done, jnp.int32), tel)
-        else:
-            params, state, env, keys, hist = batched(
-                mp_cells, seed_idx, params, state, env, fleet, cx, cy,
-                keys, jnp.asarray(done, jnp.int32))
+            tel = out[-2]
+        hist = out[-1]
         if fresh:                    # dispatch wall ≈ trace + compile
             compile_s += time.time() - t0
         hh.drain()                   # fetch chunk i−1 while chunk i runs
@@ -769,15 +952,18 @@ def _run_grid_batched(model: FLModel, fleet: DeviceFleet, cx, cy,
     if chunk_wall:
         chunk_wall[-1] += time.time() - t0
     if bufs is None:  # rounds=0
-        args = (mp_cells, seed_idx, params, state, env, fleet, cx, cy,
-                keys, jnp.asarray(0, jnp.int32))
+        lead = (mp_cells, seed_idx, params, state) + (
+            (astate,) if any_async else ())
+        args = lead + (env, fleet, cx, cy, keys,
+                       jnp.asarray(0, jnp.int32))
         if streaming:
             args = args + (tel,)
-        shapes = jax.eval_shape(grid_fn(1), *args)[5 if streaming else 4]
+        shapes = jax.eval_shape(grid_fn(1), *args)[-1]
         bufs = {k: np.zeros((M * B, 0) + tuple(v.shape[2:]), v.dtype)
                 for k, v in shapes.items()}
     final_E = np.asarray(state.residual_energy)
     final_H = np.asarray(state.H)
+    final_wall = np.asarray(astate.t_now) if any_async else None
     wall = np.asarray(chunk_wall, np.float64) / M
     lens = np.asarray(chunk_len, np.int64)
     accs = np.stack(acc_curve) if acc_curve else np.zeros((0, M, B))
@@ -788,6 +974,8 @@ def _run_grid_batched(model: FLModel, fleet: DeviceFleet, cx, cy,
         h.update({k: v[rows] for k, v in tel_out.items()})
         h["final_residual_energy"] = final_E[rows]
         h["final_H"] = final_H[rows]
+        if final_wall is not None:
+            h["final_wall_clock"] = final_wall[rows]
         h["chunk_wall_s"] = wall
         h["chunk_rounds"] = lens
         h["compile_s"] = np.float64(compile_s / M)  # per-method share
@@ -809,9 +997,19 @@ def run_campaign_grid(model: FLModel, fleet: DeviceFleet, cx, cy,
                       eval_fn: Optional[Callable] = None,
                       target_acc: Optional[float] = None,
                       method_batched: bool = True,
-                      telemetry: Optional[TelemetryCfg] = None
+                      telemetry: Optional[TelemetryCfg] = None,
+                      async_cfg: Optional[AsyncCfg] = None
                       ) -> Dict[str, Dict[str, np.ndarray]]:
     """(method × seed) benchmark grid.
+
+    Aggregation regimes mix freely: specs with `aggregation="async"`
+    (see `core.methods.async_variant`) run FedBuff-style buffered
+    aggregation at their own `buffer_m` while sync specs keep the FedAvg
+    barrier — still ONE compiled program on the batched path (sync cells
+    ride the async body with the full-cohort sentinel and keep their
+    sync numerics through the land fast path). `async_cfg` supplies the
+    shared static knobs (delay model, jitter, staleness weighting) and
+    forces async even for an all-sync grid.
 
     `method_batched=True` (default): methods that lower to `MethodParams`
     (`core.methods.batchable`) run as ONE compiled program — the method
@@ -829,7 +1027,17 @@ def run_campaign_grid(model: FLModel, fleet: DeviceFleet, cx, cy,
             model, fleet, cx, cy, cfg, methods, seeds=seeds, rounds=rounds,
             chunk_size=chunk_size, collect_per_device=collect_per_device,
             scenario=scenario, per_seed_fleets=per_seed_fleets,
-            eval_fn=eval_fn, target_acc=target_acc, telemetry=telemetry)
+            eval_fn=eval_fn, target_acc=target_acc, telemetry=telemetry,
+            async_cfg=async_cfg)
+
+    def cell_acfg(spec: MethodSpec) -> Optional[AsyncCfg]:
+        if spec.aggregation == "async":
+            base = async_cfg if async_cfg is not None else AsyncCfg(
+                buffer_m=spec.buffer_m)
+            return dataclasses.replace(base, buffer_m=spec.buffer_m,
+                                       capacity=None, n_lands=None)
+        return async_cfg
+
     return {name: run_campaign_batch(model, fleet, cx, cy, cfg, spec,
                                      seeds=seeds, rounds=rounds,
                                      chunk_size=chunk_size,
@@ -837,5 +1045,6 @@ def run_campaign_grid(model: FLModel, fleet: DeviceFleet, cx, cy,
                                      scenario=scenario,
                                      per_seed_fleets=per_seed_fleets,
                                      eval_fn=eval_fn, target_acc=target_acc,
-                                     telemetry=telemetry)
+                                     telemetry=telemetry,
+                                     async_cfg=cell_acfg(spec))
             for name, spec in methods.items()}

@@ -52,6 +52,11 @@ class RunResult:
     # streaming telemetry only: finalized per-device reducer outputs
     # (`tel/<metric>/<reducer>` -> (S,) aggregates; see core.metrics)
     telemetry: Optional[Dict[str, np.ndarray]] = None
+    # async aggregation only: final virtual wall clock (s) — the
+    # simulated time at which the last buffered aggregation landed.
+    # Sync campaigns report Σ round_latency as overall_latency_s
+    # instead (barrier semantics).
+    wall_clock_s: Optional[float] = None
 
 
 def build_task(task: str, n_clients: int, lam: float, *, per_client: int = 128,
@@ -114,6 +119,10 @@ HIST_KEYS = ("round_latency", "round_energy", "n_dropped",
              "n_participating", "n_failed", "mean_H_selected", "global_loss",
              "n_available", "n_charging", "n_online")
 
+# extra per-round scalars the async round body emits (core.async_agg)
+ASYNC_HIST_KEYS = ("wall_clock", "server_version", "n_pending",
+                   "n_aggregations", "n_landed", "mean_update_staleness")
+
 
 def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
            rounds: int = 100, n_clients: int = 100, n_select: int = 20,
@@ -126,7 +135,12 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
            fleet_shards: Optional[int] = None,
            scenario: str = "static-paper",
            probe_every: int = 1,
-           telemetry: str = "dense") -> RunResult:
+           telemetry: str = "dense",
+           aggregation: str = "sync",
+           buffer_m: Optional[int] = None,
+           staleness_power: float = 0.5,
+           delay_jitter: float = 0.0,
+           async_delay: str = "wall") -> RunResult:
     """Run one FL campaign.
 
     engine="scan" (default) runs rounds in compiled `lax.scan` chunks via
@@ -154,6 +168,19 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
     drops the O(R·S) `H_trace`, `sel_count` comes from the `selected`
     count reducer, and the per-device aggregates land in
     `RunResult.telemetry` — O(S) host memory however long the campaign.
+
+    `aggregation="async"` (scan engine only) switches to FedBuff-style
+    buffered aggregation (`core.async_agg`): selected devices snapshot
+    the global params at dispatch, their updates land on a virtual
+    clock after their wireless/compute delay (`async_delay="wall"`) or
+    one clock unit (`"unit"`), and the server aggregates
+    staleness-weighted once `buffer_m` updates arrive (default
+    max(1, n_select // 2)). History gains the `ASYNC_HIST_KEYS`
+    per-round scalars and `RunResult.wall_clock_s` reports the final
+    virtual time — the wall-clock axis of the sync-vs-async
+    wall-clock-to-accuracy comparison
+    (benchmarks/table5_async_wallclock.py). With `buffer_m=n_select`
+    and no jitter the run reproduces the sync history bitwise.
     """
     model = make_fl_model(task, small=small)
     scen = get_scenario(scenario)
@@ -177,10 +204,29 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
     if telemetry not in ("dense", "streaming"):
         raise ValueError(f"unknown telemetry {telemetry!r} "
                          "(use 'dense' or 'streaming')")
+    if aggregation not in ("sync", "async"):
+        raise ValueError(f"unknown aggregation {aggregation!r} "
+                         "(use 'sync' or 'async')")
+    async_mode = aggregation == "async"
+    if async_mode and engine != "scan":
+        raise ValueError("aggregation='async' needs engine='scan' — the "
+                         "legacy loop driver has no buffer carry")
     if engine == "scan":
-        from repro.core.metrics import TelemetryCfg
+        from repro.core.async_agg import AsyncCfg
+        from repro.core.metrics import ASYNC_SPECS, TelemetryCfg
         from repro.launch.engine import EngineCfg, run_rounds
         streaming = telemetry == "streaming"
+        acfg = None
+        if async_mode:
+            acfg = AsyncCfg(
+                buffer_m=(buffer_m if buffer_m is not None
+                          else max(1, cfg.n_select // 2)),
+                delay=async_delay, delay_jitter=delay_jitter,
+                staleness_power=staleness_power)
+        tcfg = TelemetryCfg(mode=telemetry,
+                            specs=ASYNC_SPECS) if (streaming and async_mode
+                                                   ) else TelemetryCfg(
+                                                       mode=telemetry)
         # honor the caller's eval cadence: chunks never span more than
         # eval_every rounds, so early-stop granularity is preserved
         chunk_size = max(1, min(chunk_size, eval_every))
@@ -190,7 +236,7 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
             params=model.init(jax.random.PRNGKey(seed + 2)),
             ecfg=EngineCfg(chunk_size=chunk_size, fleet_shards=fleet_shards,
                            collect_per_device=not streaming,
-                           telemetry=TelemetryCfg(mode=telemetry)),
+                           telemetry=tcfg, async_cfg=acfg),
             eval_fn=eval_fn, target_acc=target_acc,
             scenario=scen, env_key=jax.random.PRNGKey(seed + 3))
         h = res.history
@@ -212,10 +258,11 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
                     np.int64),
                 "H_trace": np.asarray(h["H"]),
             }
+        hist_keys = HIST_KEYS + (ASYNC_HIST_KEYS if async_mode else ())
         return RunResult(
             task=task, method=method, rounds_run=res.rounds_run,
             reached_round=res.reached_round, target_acc=target_acc,
-            history={k: np.asarray(h[k], np.float64) for k in HIST_KEYS}
+            history={k: np.asarray(h[k], np.float64) for k in hist_keys}
             | per_dev | {
                 "residual_energy": np.asarray(state.residual_energy),
                 "init_energy": np.asarray(fleet.init_energy),
@@ -229,7 +276,9 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
                            if res.rounds_run else 0.0),
             acc_curve=res.acc_curve, final_params=params,
             chunk_wall_s=res.chunk_wall_s, chunk_rounds=res.chunk_rounds,
-            compile_s=res.compile_s, telemetry=res.telemetry)
+            compile_s=res.compile_s, telemetry=res.telemetry,
+            wall_clock_s=(float(h["wall_clock"][-1])
+                          if async_mode and res.rounds_run else None))
     if engine != "loop":
         raise ValueError(f"unknown engine {engine!r} (use 'scan' or 'loop')")
     if telemetry != "dense":
@@ -321,6 +370,24 @@ def main() -> None:
                     help="per-device history: 'dense' keeps (R, S) host "
                          "buffers; 'streaming' folds O(S) on-device "
                          "reducers instead (mega-fleet safe)")
+    ap.add_argument("--aggregation", default="sync",
+                    choices=("sync", "async"),
+                    help="'sync' is the FedAvg round barrier; 'async' is "
+                         "FedBuff-style buffered aggregation on a virtual "
+                         "wall clock (scan engine only)")
+    ap.add_argument("--buffer-m", type=int, default=None,
+                    help="async: aggregate once M updates are buffered "
+                         "(default n_select // 2)")
+    ap.add_argument("--staleness-power", type=float, default=0.5,
+                    help="async: staleness damping a in (1+stale)^-a")
+    ap.add_argument("--delay-jitter", type=float, default=0.0,
+                    help="async: lognormal sigma multiplying each "
+                         "update's delay (0 = deterministic delays)")
+    ap.add_argument("--async-delay", default="wall",
+                    choices=("wall", "unit"),
+                    help="async delay model: 'wall' uses each device's "
+                         "simulated compute+uplink seconds, 'unit' lands "
+                         "every update one clock tick after dispatch")
     args = ap.parse_args()
     t0 = time.time()
     res = run_fl(args.task, args.method, rounds=args.rounds,
@@ -329,14 +396,20 @@ def main() -> None:
                  beta=args.beta, seed=args.seed, verbose=True,
                  engine=args.engine, chunk_size=args.chunk_size,
                  fleet_shards=args.fleet_shards, scenario=args.scenario,
-                 probe_every=args.probe_every, telemetry=args.telemetry)
+                 probe_every=args.probe_every, telemetry=args.telemetry,
+                 aggregation=args.aggregation, buffer_m=args.buffer_m,
+                 staleness_power=args.staleness_power,
+                 delay_jitter=args.delay_jitter,
+                 async_delay=args.async_delay)
     print(json.dumps({
         "task": res.task, "method": res.method,
         "scenario": args.scenario, "telemetry": args.telemetry,
+        "aggregation": args.aggregation,
         "rounds": res.rounds_run, "reached_round": res.reached_round,
         "dropout_ratio": res.dropout_ratio,
         "overall_latency_h": res.overall_latency_s / 3600,
         "overall_energy_kj": res.overall_energy_j / 1e3,
+        "wall_clock_s": res.wall_clock_s,
         "final_acc": float(res.acc_curve[-1]),
         "wall_s": round(time.time() - t0, 1),
     }, indent=1))

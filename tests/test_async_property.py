@@ -1,0 +1,178 @@
+"""Hypothesis property tests for the async aggregation buffer
+(`core.async_agg.push_cohort` / `land_once`), driven on tiny synthetic
+param pytrees. The invariants mirror the module docstring:
+
+  * no update lands twice — per-step landed masks are disjoint and only
+    cover slots that were live at the attempt;
+  * landed-update staleness = server_version − snapshot_version ≥ 0,
+    and server_version is nondecreasing;
+  * live occupancy after a step's ceil(K/M) land attempts is < M — the
+    buffer always drains below the trigger before the next dispatch,
+    which is what makes capacity M+K sufficient;
+  * device-rounds are conserved: n_dispatched = n_landed + live slots;
+  * the virtual clock never runs backwards;
+  * a full M=K cohort with uniform delays lands in ONE aggregation with
+    zero staleness (the sync-equivalence regime);
+  * pushes beyond capacity drop and are not counted dispatched.
+
+Skipped cleanly when the optional `hypothesis` dep is absent."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.async_agg import land_once, push_cohort  # noqa: E402
+from repro.core.state import init_async_state  # noqa: E402
+
+S = 12  # fleet size for the per-device staleness scatter
+
+DELAY = st.floats(min_value=0.1, max_value=10.0, allow_nan=False,
+                  allow_infinity=False)
+WEIGHT = st.floats(min_value=0.0, max_value=5.0, allow_nan=False,
+                   allow_infinity=False)
+
+
+def _params():
+    return {"w": jnp.zeros((2,), jnp.float32)}
+
+
+def _cohort_deltas(k, seed):
+    return {"w": jnp.arange(k * 2, dtype=jnp.float32).reshape(k, 2)
+            + float(seed)}
+
+
+@settings(max_examples=30, deadline=None)
+@given(k=st.integers(1, 6), steps=st.integers(1, 4), data=st.data())
+def test_step_invariants_hold_over_random_schedules(k, steps, data):
+    """Simulate `steps` engine steps — push one cohort, then ceil(K/M)
+    land attempts — over random M, delays, weights, and cohort liveness,
+    checking every buffer invariant after each attempt."""
+    m = data.draw(st.integers(1, k), label="buffer_m")
+    cap = m + k
+    n_lands = -(-k // m)
+    params = _params()
+    ast = init_async_state(params, S, cap)
+    server_version_prev = 0
+    for step in range(steps):
+        perm = data.draw(st.permutations(tuple(range(S))),
+                         label=f"devices{step}")
+        idx = jnp.asarray(perm[:k], jnp.int32)
+        live = jnp.asarray(
+            data.draw(st.lists(st.booleans(), min_size=k, max_size=k),
+                      label=f"live{step}"))
+        delays = jnp.asarray(
+            data.draw(st.lists(DELAY, min_size=k, max_size=k),
+                      label=f"delays{step}"), jnp.float32)
+        weights = jnp.asarray(
+            data.draw(st.lists(WEIGHT, min_size=k, max_size=k),
+                      label=f"weights{step}"), jnp.float32)
+        occ_before = int(jnp.sum(ast.slot_live))
+        ast, n_pushed = push_cohort(ast, _cohort_deltas(k, step), idx,
+                                    live, weights, delays)
+        # capacity never overflows (occupancy bound: < M + K)
+        assert int(n_pushed) == int(live.sum())
+        assert int(jnp.sum(ast.slot_live)) == occ_before + int(n_pushed)
+
+        landed_union = np.zeros(cap, bool)
+        for _ in range(n_lands):
+            live_before = np.asarray(ast.slot_live)
+            t_before = float(ast.t_now)
+            stale_now = np.asarray(ast.server_version - ast.slot_version)
+            params, ast, info = land_once(params, ast, m,
+                                          staleness_power=0.5)
+            landed = np.asarray(info["landed"])
+            # only live slots land, none lands twice in a step
+            assert not (landed & ~live_before).any()
+            assert not (landed & landed_union).any()
+            landed_union |= landed
+            # landed staleness is nonnegative
+            assert (stale_now[landed] >= 0).all()
+            # the virtual clock never runs backwards
+            assert float(ast.t_now) >= t_before
+            # aggregation ⇔ at least M were pending
+            if int(info["did_aggregate"]):
+                assert int(info["n_landed"]) >= m
+        # server version nondecreasing, bumped once per aggregation
+        assert int(ast.server_version) >= server_version_prev
+        server_version_prev = int(ast.server_version)
+        # the step drains below the trigger before the next dispatch
+        occ = int(jnp.sum(ast.slot_live))
+        assert occ < m
+        # device-rounds conserved
+        assert int(ast.n_dispatched) == int(ast.n_landed) + occ
+        # per-device staleness scatter stayed in bounds
+        assert ast.update_staleness.shape == (S,)
+        assert (np.asarray(ast.update_staleness) >= 0).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(k=st.integers(1, 6), delay=DELAY, data=st.data())
+def test_mk_full_cohort_lands_in_one_zero_stale_aggregation(k, delay, data):
+    """The sync-equivalence regime: M=K, all cohort slots live, uniform
+    delays — exactly one aggregation consumes exactly the cohort just
+    pushed, at zero staleness, and empties the buffer."""
+    weights = jnp.asarray(
+        data.draw(st.lists(st.floats(0.1, 5.0, allow_nan=False),
+                           min_size=k, max_size=k)), jnp.float32)
+    params = _params()
+    ast = init_async_state(params, S, 2 * k)
+    ast, n_pushed = push_cohort(
+        ast, _cohort_deltas(k, 0), jnp.arange(k, dtype=jnp.int32),
+        jnp.ones(k, bool), weights, jnp.full((k,), delay, jnp.float32))
+    assert int(n_pushed) == k
+    params, ast, info = land_once(params, ast, k, staleness_power=0.5)
+    assert int(info["did_aggregate"]) == 1
+    assert int(info["n_landed"]) == k
+    assert int(info["stale_sum"]) == 0
+    assert int(jnp.sum(ast.slot_live)) == 0
+    assert float(ast.t_now) == pytest.approx(delay)
+    assert int(ast.server_version) == 1
+    # the aggregate is the weight-normalized mean of the cohort deltas
+    wn = np.asarray(weights) / np.asarray(weights).sum()
+    want = (np.asarray(_cohort_deltas(k, 0)["w"]) * wn[:, None]).sum(0)
+    np.testing.assert_allclose(np.asarray(params["w"]), want, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(2, 6))
+def test_push_beyond_capacity_drops_uncounted(k):
+    """Overfilling a deliberately undersized buffer: the overflow slots
+    drop (mode='drop') and are not counted as dispatched, so
+    conservation still holds on the written population."""
+    cap = k + 1
+    params = _params()
+    ast = init_async_state(params, S, cap)
+    full = jnp.ones(k, bool)
+    ast, n1 = push_cohort(ast, _cohort_deltas(k, 0),
+                          jnp.arange(k, dtype=jnp.int32), full,
+                          jnp.ones(k, jnp.float32),
+                          jnp.ones(k, jnp.float32))
+    ast, n2 = push_cohort(ast, _cohort_deltas(k, 1),
+                          jnp.arange(k, dtype=jnp.int32) + k, full,
+                          jnp.ones(k, jnp.float32),
+                          jnp.ones(k, jnp.float32))
+    assert int(n1) == k
+    assert int(n2) == cap - k  # only the one free slot was written
+    assert int(jnp.sum(ast.slot_live)) == cap
+    assert int(ast.n_dispatched) == cap
+
+
+def test_no_aggregation_below_trigger_is_identity():
+    """Below the M trigger, land_once is a masked no-op: params, clock,
+    version, and buffer all pass through unchanged."""
+    params = _params()
+    ast = init_async_state(params, S, 8)
+    ast, _ = push_cohort(ast, _cohort_deltas(2, 0),
+                         jnp.arange(2, dtype=jnp.int32),
+                         jnp.ones(2, bool), jnp.ones(2, jnp.float32),
+                         jnp.ones(2, jnp.float32))
+    p2, ast2, info = land_once(params, ast, 3, staleness_power=0.5)
+    assert int(info["did_aggregate"]) == 0
+    assert int(info["n_landed"]) == 0
+    np.testing.assert_array_equal(np.asarray(p2["w"]),
+                                  np.asarray(params["w"]))
+    for a, b in zip(jax.tree.leaves(ast), jax.tree.leaves(ast2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
