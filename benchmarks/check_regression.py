@@ -1,30 +1,54 @@
 """Ratio-based engine-throughput regression gate.
 
 Compares a freshly measured BENCH_engine.json against the committed
-baseline and fails (exit 1) when `device_rounds_s` drops by more than
-`--max-drop` (default 30% — loose enough for shared CI runners, tight
-enough to catch a scan-engine structural regression). Improvements and
-small drifts pass; keys missing from either file are reported and
-skipped, so baselines captured with more scales than CI measures still
-gate the common subset.
+baseline and fails (exit 1) when a gated metric regresses by more than
+its allowed fraction (default 30% — loose enough for shared CI runners,
+tight enough to catch a scan-engine structural regression).
+Improvements and small drifts pass; keys missing from either file are
+reported and skipped, so baselines captured with more scales than CI
+measures still gate the common subset.
 
-  python -m benchmarks.engine_bench --scales 100 --no-dynamic --no-grid \
-      --out /tmp/bench_fresh.json
+Every violation across every gated group is reported before the exit
+code is decided — one invocation gates the whole matrix, so CI logs
+show the full damage instead of stopping at the first failing group:
+
+  python -m benchmarks.check_regression BENCH_engine.json \
+      /tmp/bench_fresh.json \
+      --spec scan_round_S100,async_round_S100:device_rounds_s:higher:0.30 \
+      --spec campaign_grid_4x5:grid_wall_s:lower:0.30 \
+      --spec campaign_grid_4x5,engine_phases_S100:compile_s:lower:0.75
+
+Each `--spec` is KEYS:METRIC:DIRECTION:MAX_DROP — comma-separated
+result keys, the metric name, 'higher' (throughput-like: a drop is bad)
+or 'lower' (wall/compile-like: a rise is bad), and the tolerated
+fractional regression. The legacy single-group flags still work:
+
   python -m benchmarks.check_regression BENCH_engine.json \
       /tmp/bench_fresh.json --keys scan_round_S100 --max-drop 0.30
-
-Time-like metrics (lower is better) gate with `--direction lower`, e.g.
-the method-batched campaign-grid row recorded by the full bench run:
-
-  python -m benchmarks.check_regression BENCH_engine.json \
-      /tmp/bench_fresh.json --keys campaign_grid_4x5 \
-      --metric grid_wall_s --direction lower --max-drop 0.30
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+from typing import List, Optional, Sequence, Tuple
+
+# (keys or None for all-carrying, metric, direction, max_drop)
+Spec = Tuple[Optional[Sequence[str]], str, str, float]
+
+
+def parse_spec(text: str) -> Spec:
+    """Parse a KEYS:METRIC:DIRECTION:MAX_DROP gate group."""
+    parts = text.split(":")
+    if len(parts) != 4:
+        raise ValueError(
+            f"bad --spec {text!r}: want KEYS:METRIC:DIRECTION:MAX_DROP")
+    keys_s, metric, direction, drop_s = parts
+    if direction not in ("higher", "lower"):
+        raise ValueError(f"bad --spec direction {direction!r}: "
+                         "want 'higher' or 'lower'")
+    keys = [k for k in keys_s.split(",") if k] or None
+    return keys, metric, direction, float(drop_s)
 
 
 def _carries(results, key, metric) -> bool:
@@ -32,12 +56,9 @@ def _carries(results, key, metric) -> bool:
     return isinstance(entry, dict) and metric in entry
 
 
-def check(baseline_path: str, fresh_path: str, keys, metric: str,
-          max_drop: float, direction: str = "higher") -> int:
-    with open(baseline_path) as f:
-        base = json.load(f)["results"]
-    with open(fresh_path) as f:
-        fresh = json.load(f)["results"]
+def _check_group(base, fresh, keys, metric: str, max_drop: float,
+                 direction: str, baseline_path: str,
+                 fresh_path: str) -> int:
     # default key set: the union of both files, so a PR that adds a new
     # bench key sees it reported (and skipped) instead of silently
     # ignored; keys present in only one file — or naming a non-dict
@@ -67,18 +88,47 @@ def check(baseline_path: str, fresh_path: str, keys, metric: str,
             failures += 1
         print(f"{status} {k}.{metric}: baseline={b:.1f} fresh={f_:.1f} "
               f"ratio={ratio:.3f} ({bound})")
+    return failures
+
+
+def check_specs(baseline_path: str, fresh_path: str,
+                specs: Sequence[Spec]) -> int:
+    """Gate every spec group; report ALL violations, then exit non-zero
+    if any group failed."""
+    with open(baseline_path) as f:
+        base = json.load(f)["results"]
+    with open(fresh_path) as f:
+        fresh = json.load(f)["results"]
+    failures = 0
+    for keys, metric, direction, max_drop in specs:
+        failures += _check_group(base, fresh, keys, metric, max_drop,
+                                 direction, baseline_path, fresh_path)
     if failures:
-        print(f"# {failures} metric(s) regressed > {max_drop:.0%}")
+        print(f"# {failures} metric(s) regressed beyond tolerance")
     return 1 if failures else 0
+
+
+def check(baseline_path: str, fresh_path: str, keys, metric: str,
+          max_drop: float, direction: str = "higher") -> int:
+    """Single-group gate (legacy entry point; tests and older callers)."""
+    return check_specs(baseline_path, fresh_path,
+                       [(keys, metric, direction, max_drop)])
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline", help="committed BENCH_engine.json")
     ap.add_argument("fresh", help="freshly measured BENCH_engine.json")
+    ap.add_argument("--spec", action="append", default=[],
+                    metavar="KEYS:METRIC:DIRECTION:MAX_DROP",
+                    help="repeatable gate group, e.g. "
+                         "scan_round_S100:device_rounds_s:higher:0.30 — "
+                         "one invocation gates every group and reports "
+                         "all failures")
     ap.add_argument("--keys", default=None,
-                    help="comma-separated result keys (default: every "
-                         "baseline key carrying the metric)")
+                    help="legacy single group: comma-separated result "
+                         "keys (default: every baseline key carrying "
+                         "the metric)")
     ap.add_argument("--metric", default="device_rounds_s")
     ap.add_argument("--max-drop", type=float, default=0.30,
                     help="maximum tolerated fractional regression "
@@ -89,9 +139,12 @@ def main() -> None:
                          "(device_rounds_s); 'lower': better when lower "
                          "(grid_wall_s, compile_s)")
     args = ap.parse_args()
-    keys = args.keys.split(",") if args.keys else None
-    sys.exit(check(args.baseline, args.fresh, keys, args.metric,
-                   args.max_drop, args.direction))
+    if args.spec:
+        specs = [parse_spec(s) for s in args.spec]
+    else:
+        keys = args.keys.split(",") if args.keys else None
+        specs = [(keys, args.metric, args.direction, args.max_drop)]
+    sys.exit(check_specs(args.baseline, args.fresh, specs))
 
 
 if __name__ == "__main__":

@@ -250,11 +250,18 @@ def _summarize_method(h: Dict[str, np.ndarray], n_clients: int,
         "H_mid": H_mid.tolist(),
     }
     # longitudinal per-device aggregates only the reducers can provide
-    # without an O(R·S) trace: mean/peak residual energy, staleness
+    # without an O(R·S) trace: mean/peak residual energy, staleness —
+    # plus the whole-campaign P50/P95 tails from the fixed-bin
+    # histogram quantile reducers (one scalar per seed, fleet-tail
+    # semantics: every (round, device) sample of the campaign)
     for tk, name in (("tel/residual_energy/mean", "residual_energy_mean"),
                      ("tel/residual_energy/max", "residual_energy_max"),
                      ("tel/staleness/mean", "staleness_mean"),
-                     ("tel/staleness/max", "staleness_max")):
+                     ("tel/staleness/max", "staleness_max"),
+                     ("tel/residual_energy/p50", "residual_energy_p50"),
+                     ("tel/residual_energy/p95", "residual_energy_p95"),
+                     ("tel/staleness/p50", "staleness_p50"),
+                     ("tel/staleness/p95", "staleness_p95")):
         if tk in h:
             per_device[name] = np.asarray(h[tk], np.float64).tolist()
     us, compile_s = _steady_timing(h.get("chunk_wall_s"),
@@ -310,7 +317,7 @@ def cached_campaign_grid(task: str, methods, seeds=GRID_SEEDS, *,
     target = TARGETS[task] if target_acc is None else target_acc
     base = dict(task=task, seeds=seeds, rounds=rounds, lam=lam,
                 alpha=alpha, beta=beta, n=n_clients, chunk=chunk_size,
-                scenario=scenario, target=target, v=8,
+                scenario=scenario, target=target, v=9,
                 per_seed_fleets=per_seed_fleets, per_client=per_client,
                 k=n_select)
     os.makedirs(FL_DIR, exist_ok=True)
@@ -362,9 +369,14 @@ def cached_campaign_grid(task: str, methods, seeds=GRID_SEEDS, *,
         rate_mean = np.broadcast_to(np.asarray(fleet.rate_mean),
                                     (B, n_clients))
     # streaming telemetry: DEFAULT_SPECS aggregates plus a 3-slot H ring
-    # strided to capture rounds 0 and R//2 (the H_mid table column)
+    # strided to capture rounds 0 and R//2 (the H_mid table column),
+    # plus the fleet-health P50/P95 staleness / residual-energy tails
+    # (repro.obs.health — whole-campaign histogram quantiles, O(bins))
+    from repro.obs.health import HealthCfg
     tcfg = TelemetryCfg(mode="streaming", specs=DEFAULT_SPECS + (
-        MetricSpec("H", "ring", every=max(1, rounds // 2), cap=3),))
+        MetricSpec("H", "ring", every=max(1, rounds // 2), cap=3),
+    ) + HealthCfg().quantile_specs(rounds,
+                                   float(np.max(init_energy))))
     t0 = time.time()
     grids = run_campaign_grid(model, fleet, cx, cy,
                               quick_cfg(n_select, alpha, beta),

@@ -24,19 +24,26 @@ round body (`core.async_agg`, buffer_m=10) at the smallest and largest
 scales; `async_overhead` is the fractional us_per_round cost of the
 pending-buffer carry + masked land steps vs the paired sync row.
 
+The `engine_phases_S*` rows (repro.obs) run a short campaign through
+`run_rounds` under a span tracer + fleet-health monitors and report
+per-phase wall attribution — compile / dispatch / history-drain / eval
+/ transfer seconds — plus the flat-battery count and whole-campaign
+staleness P95 from the streaming quantile reducers. `compile_s` of the
+small row gates in CI with `--direction lower`.
+
   make bench-engine            # or: python -m benchmarks.engine_bench
 
 CLI (for the CI regression gate, which measures the cheap S=100 scale
-plus the batched-only grid row):
+plus the batched-only grid row, then gates everything in ONE
+check_regression invocation so all failures report together):
 
   python -m benchmarks.engine_bench --scales 100 --no-dynamic \
       --no-streaming --grid-no-per-method --out /tmp/bench_fresh.json
   python -m benchmarks.check_regression BENCH_engine.json \
-      /tmp/bench_fresh.json --keys scan_round_S100,async_round_S100 \
-      --max-drop 0.30
-  python -m benchmarks.check_regression BENCH_engine.json \
-      /tmp/bench_fresh.json --keys campaign_grid_4x5 \
-      --metric grid_wall_s --direction lower --max-drop 0.75
+      /tmp/bench_fresh.json \
+      --spec scan_round_S100,async_round_S100:device_rounds_s:higher:0.30 \
+      --spec campaign_grid_4x5:grid_wall_s:lower:0.30 \
+      --spec campaign_grid_4x5,engine_phases_S100:compile_s:lower:0.75
 """
 from __future__ import annotations
 
@@ -51,6 +58,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import ROOT, _steady_timing, emit
+from repro.obs.log import configure_logging, get_logger
+
+log = get_logger("benchmarks.engine_bench")
 
 SCALES = (100, 1_000, 10_000)
 DYNAMIC_SCENARIO = "commuter-diurnal"
@@ -265,6 +275,56 @@ def measure_campaign_grid(S: int = 100, *, n_seeds: int = GRID_SEEDS,
     return out
 
 
+def measure_phases(S: int = 100, *, rounds: int = 16,
+                   chunk: int = 4) -> Dict:
+    """Per-phase wall attribution of a short `run_rounds` campaign.
+
+    Installs a `repro.obs.trace.Tracer` and runs with streaming
+    telemetry + fleet-health monitors on, then reports each engine
+    phase's total seconds from the span summary: XLA compile, warm
+    chunk dispatch, the deferred host-history drain, chunk-boundary
+    eval, and the final device→host transfer. The health columns
+    (flat_battery, staleness_p95) ride along from the HealthReport —
+    CI gates `compile_s` of the S=100 row with `--direction lower` and
+    keeps the health columns visible in BENCH_engine.json."""
+    from repro.core import FLConfig, METHODS, TelemetryCfg, make_eval_fn
+    from repro.core.policy import PolicyCfg
+    from repro.launch.engine import EngineCfg, run_rounds
+    from repro.launch.fl_run import build_task
+    from repro.models.fl_models import make_fl_model
+    from repro.obs.health import HealthCfg
+    from repro.obs.trace import Tracer, tracing
+    from repro.sim.devices import build_fleet
+
+    model = make_fl_model("cnn@mnist", small=True)
+    cfg = FLConfig(n_select=20, batch_size=2, probe_size=2, lr=0.05,
+                   uplink_bits=16e6, policy=PolicyCfg(H0=2, H_max=4))
+    fleet = build_fleet(S, seed=0, init_energy_mean=0.3)
+    cx, cy, test = build_task("cnn@mnist", S, 0.8, per_client=2, n_test=16)
+    eval_fn = make_eval_fn(model, test["x"], test["y"])
+    ecfg = EngineCfg(chunk_size=chunk, collect_per_device=False,
+                     telemetry=TelemetryCfg(mode="streaming"),
+                     health=HealthCfg())
+    with tracing(Tracer()) as tracer:
+        res = run_rounds(model, fleet, cx, cy, cfg, METHODS["rewafl"],
+                         rounds=rounds, key=jax.random.PRNGKey(1),
+                         init_key=jax.random.PRNGKey(0), ecfg=ecfg,
+                         eval_fn=eval_fn)
+    spans = tracer.summary()
+    out = {"S": S, "rounds": rounds, "chunk": chunk}
+    for phase in ("compile", "dispatch", "history_drain", "eval",
+                  "transfer", "health"):
+        s = spans.get(phase)
+        out[f"{phase}_s"] = float(s["total_s"]) if s else 0.0
+    hm = res.health.metrics if res.health is not None else {}
+    out["flat_battery"] = hm.get("flat_battery")
+    out["flat_frac"] = hm.get("flat_frac")
+    out["staleness_p95"] = hm.get("staleness_p95")
+    out["sel_gini"] = hm.get("sel_gini")
+    out["health_ok"] = res.health.ok if res.health is not None else None
+    return out
+
+
 STREAMING_SCALE = 100_000
 HOST_BYTES_SCALE = 10_000
 
@@ -275,7 +335,8 @@ ASYNC_BUFFER_M = 10  # half of n_select=20 — the default run_fl regime
 def run(scales=SCALES, dynamic_scenario: Optional[str] = DYNAMIC_SCENARIO,
         out_path: str = OUT_PATH, timed_chunks: int = 1,
         grid: bool = True, grid_per_method: bool = True,
-        streaming: bool = True, async_rows: bool = True):
+        streaming: bool = True, async_rows: bool = True,
+        phases: bool = True):
     rows = []
     results: Dict[str, Dict] = {}
     # 3 timed chunks at the largest scale: its static row doubles as the
@@ -331,13 +392,32 @@ def run(scales=SCALES, dynamic_scenario: Optional[str] = DYNAMIC_SCENARIO,
                      derived))
         if grid_per_method:
             cells = len(g["methods"]) * g["n_seeds"]
-            print(f"# compile amortization ({len(g['methods'])} methods x "
-                  f"{g['n_seeds']} seeds = {cells} cells): "
-                  f"batched {g['compile_s']:.1f}s total "
-                  f"({g['compile_s_per_cell']:.2f}s/cell) vs per-method "
-                  f"{g['per_method_compile_s']:.1f}s "
-                  f"({g['per_method_compile_s'] / cells:.2f}s/cell) -> "
-                  f"{g['compile_speedup']:.1f}x")
+            log.info(
+                f"# compile amortization ({len(g['methods'])} methods x "
+                f"{g['n_seeds']} seeds = {cells} cells): "
+                f"batched {g['compile_s']:.1f}s total "
+                f"({g['compile_s_per_cell']:.2f}s/cell) vs per-method "
+                f"{g['per_method_compile_s']:.1f}s "
+                f"({g['per_method_compile_s'] / cells:.2f}s/cell) -> "
+                f"{g['compile_speedup']:.1f}x")
+    if phases:
+        # per-phase wall attribution (repro.obs spans) at the smallest
+        # scale always — the CI compile_s gate — and at S=10k when the
+        # full scale sweep runs
+        phase_scales = {min(scales)} | ({10_000} if 10_000 in scales
+                                        else set())
+        for S in sorted(phase_scales):
+            p = measure_phases(S)
+            results[f"engine_phases_S{S}"] = p
+            rows.append((f"engine/engine_phases_S{S}",
+                         p["dispatch_s"] * 1e6 / max(p["rounds"], 1),
+                         f"compile_s={p['compile_s']:.2f};"
+                         f"dispatch_s={p['dispatch_s']:.2f};"
+                         f"drain_s={p['history_drain_s']:.3f};"
+                         f"eval_s={p['eval_s']:.2f};"
+                         f"transfer_s={p['transfer_s']:.3f};"
+                         f"flat_battery={p['flat_battery']};"
+                         f"staleness_p95={p['staleness_p95']}"))
     if streaming:
         # per-device telemetry at a fleet scale where dense (R, S)
         # collection would OOM/thrash the host: the S=100k row runs the
@@ -352,19 +432,19 @@ def run(scales=SCALES, dynamic_scenario: Optional[str] = DYNAMIC_SCENARIO,
                      f"telemetry=streaming"))
         hb = measure_host_bytes(S=HOST_BYTES_SCALE)
         results[f"telemetry_host_bytes_S{HOST_BYTES_SCALE}"] = hb
-        print(f"# host history bytes at S={HOST_BYTES_SCALE}, "
-              f"R={hb['rounds']}: dense {hb['dense_bytes']:,} vs "
-              f"streaming {hb['streaming_bytes']:,} "
-              f"(projected S=1M R=500: dense "
-              f"{hb['projected_dense_gb_S1M_R500']:.1f} GB vs streaming "
-              f"{hb['projected_streaming_gb_S1M_R500']:.2f} GB)")
+        log.info(f"# host history bytes at S={HOST_BYTES_SCALE}, "
+                 f"R={hb['rounds']}: dense {hb['dense_bytes']:,} vs "
+                 f"streaming {hb['streaming_bytes']:,} "
+                 f"(projected S=1M R=500: dense "
+                 f"{hb['projected_dense_gb_S1M_R500']:.1f} GB vs streaming "
+                 f"{hb['projected_streaming_gb_S1M_R500']:.2f} GB)")
     payload = {"bench": "engine", "backend": jax.default_backend(),
                "jax_version": jax.__version__,
                "results": results}
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=1)
     emit(rows)
-    print(f"# wrote {out_path}")
+    log.info(f"# wrote {out_path}")
     return rows
 
 
@@ -388,13 +468,22 @@ def main() -> None:
     ap.add_argument("--no-async", action="store_true",
                     help="skip the FedBuff async-aggregation rows "
                          "(async_round_S*)")
+    ap.add_argument("--no-phases", action="store_true",
+                    help="skip the span-traced per-phase attribution "
+                         "rows (engine_phases_S*)")
     ap.add_argument("--out", default=OUT_PATH,
                     help="output JSON path (default BENCH_engine.json)")
     ap.add_argument("--timed-chunks", type=int, default=3,
                     help="warm chunks per scale; the best one is "
                          "reported (timeit-style), damping contention "
                          "noise on shared hosts")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress progress chatter (the CSV rows and "
+                         "warnings still print)")
+    ap.add_argument("-v", "--verbose", action="count", default=0,
+                    help="debug-level logging")
     args = ap.parse_args()
+    configure_logging(verbosity=args.verbose, quiet=args.quiet)
     scales = (tuple(int(s) for s in args.scales.split(","))
               if args.scales else SCALES)
     run(scales=scales,
@@ -403,7 +492,8 @@ def main() -> None:
         grid=not args.no_grid,
         grid_per_method=not args.grid_no_per_method,
         streaming=not args.no_streaming,
-        async_rows=not args.no_async)
+        async_rows=not args.no_async,
+        phases=not args.no_phases)
 
 
 if __name__ == "__main__":

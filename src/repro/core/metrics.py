@@ -24,6 +24,14 @@ bundles the specs plus the dense/streaming mode switch threaded through
            `every`-th round in a (cap, ...) ring — downsampled curves
            at a fixed memory budget. `ring(every=1, cap=R)` reproduces
            the dense trace exactly (the parity tests lean on this).
+  p50/p95 — streaming quantiles via a fixed-bin histogram over the
+           static range [`lo`, `hi`): every element of every round's
+           value lands in one of `bins` counts (out-of-range samples
+           clip into the end bins), and finalize reads the quantile off
+           the cumulative counts at half-bin resolution. p50 and p95 of
+           the same (metric, bins, lo, hi) share one histogram state —
+           O(bins) memory for the whole campaign's staleness /
+           residual-energy tail (the `obs.health` monitors' input).
 
 Every reducer state is a pytree of arrays shaped like the metric (plus
 a `cap` axis for rings), so the whole carry jits/scans/vmaps/shards
@@ -50,18 +58,25 @@ PER_DEVICE_METRICS = ("selected", "H", "residual_energy", "staleness",
                       "update_staleness")
 DENSE_PER_DEVICE = ("selected", "H")
 
-REDUCERS = ("last", "sum", "mean", "std", "max", "count", "ring")
+QUANTILE_REDUCERS = ("p50", "p95")
+QUANTILE_Q = {"p50": 0.50, "p95": 0.95}
+REDUCERS = ("last", "sum", "mean", "std", "max", "count",
+            "ring") + QUANTILE_REDUCERS
 
 
 @dataclasses.dataclass(frozen=True)
 class MetricSpec:
     """One (metric, reducer) pair. `metric` is a key of the round body's
     raw metrics dict (per-device (S,) leaves in PER_DEVICE_METRICS or
-    any scalar metric); `every`/`cap` apply to `ring` only."""
+    any scalar metric); `every`/`cap` apply to `ring` only, and
+    `bins`/`lo`/`hi` to the histogram quantile reducers (p50/p95)."""
     metric: str
     reducer: str
     every: int = 1    # ring: snapshot every N rounds
     cap: int = 16     # ring: snapshot buffer capacity
+    bins: int = 64    # p50/p95: histogram bin count
+    lo: float = 0.0   # p50/p95: histogram range [lo, hi)
+    hi: float = 1.0
 
     def __post_init__(self):
         if self.reducer not in REDUCERS:
@@ -70,6 +85,13 @@ class MetricSpec:
         if self.reducer == "ring" and (self.every < 1 or self.cap < 1):
             raise ValueError(f"ring needs every >= 1 and cap >= 1, got "
                              f"every={self.every} cap={self.cap}")
+        if self.reducer in QUANTILE_REDUCERS:
+            if self.bins < 1:
+                raise ValueError(f"quantile reducer needs bins >= 1, "
+                                 f"got {self.bins}")
+            if not self.hi > self.lo:
+                raise ValueError(f"quantile reducer needs hi > lo, got "
+                                 f"lo={self.lo} hi={self.hi}")
 
     @property
     def out_key(self) -> str:
@@ -79,11 +101,15 @@ class MetricSpec:
     @property
     def state_key(self) -> str:
         """Carry key of the reducer state. mean/std share one Welford
-        accumulator; rings with different strides stay distinct."""
+        accumulator; quantiles of the same (bins, lo, hi) histogram
+        share one count vector; rings with different strides stay
+        distinct."""
         if self.reducer in ("mean", "std"):
             return f"{self.metric}/welford"
         if self.reducer == "ring":
             return f"{self.metric}/ring{self.every}x{self.cap}"
+        if self.reducer in QUANTILE_REDUCERS:
+            return f"{self.metric}/hist{self.bins}@{self.lo}:{self.hi}"
         return f"{self.metric}/{self.reducer}"
 
 
@@ -151,6 +177,15 @@ class Ring(NamedTuple):
     n: jax.Array      # i32 () — snapshots taken (wraps past cap)
 
 
+class Hist(NamedTuple):
+    """Fixed-bin histogram over a static [lo, hi) range — the shared
+    state of the p50/p95 streaming quantile reducers. Counts fold every
+    element of every round's value (so an (S,) metric contributes S
+    samples per round); the quantile is read off the cumulative counts
+    at finalize, accurate to half a bin width."""
+    counts: jax.Array  # f32 (bins,) — sample counts per bin
+
+
 def _init(spec: MetricSpec, sd) -> Any:
     """Fresh reducer state for a metric of shape/dtype `sd`."""
     shape, dtype = tuple(sd.shape), sd.dtype
@@ -170,6 +205,8 @@ def _init(spec: MetricSpec, sd) -> Any:
         return jnp.full(shape, jnp.iinfo(dtype).min, dtype)
     if r == "count":
         return jnp.zeros(shape, jnp.int32)
+    if r in QUANTILE_REDUCERS:
+        return Hist(counts=jnp.zeros((spec.bins,), jnp.float32))
     # ring
     return Ring(buf=jnp.zeros((spec.cap,) + shape, dtype),
                 n=jnp.zeros((), jnp.int32))
@@ -192,6 +229,12 @@ def _update(spec: MetricSpec, st, v: jax.Array, round_idx: jax.Array):
         return jnp.maximum(st, v.astype(st.dtype))
     if r == "count":
         return st + (v != 0).astype(jnp.int32)
+    if r in QUANTILE_REDUCERS:
+        # every element is one sample; out-of-range clips into end bins
+        x = v.astype(jnp.float32).ravel()
+        idx = jnp.clip(((x - spec.lo) / (spec.hi - spec.lo)
+                        * spec.bins).astype(jnp.int32), 0, spec.bins - 1)
+        return Hist(counts=st.counts.at[idx].add(1.0))
     # ring: non-snapshot rounds write out of bounds and are dropped
     take = (round_idx % spec.every) == 0
     slot = jnp.where(take, (round_idx // spec.every) % spec.cap, spec.cap)
@@ -210,6 +253,19 @@ def _finalize(spec: MetricSpec, st) -> Dict[str, jax.Array]:
                          / jnp.maximum(st.n, 1.0))}
     if r == "ring":
         return {spec.out_key: st.buf, spec.out_key + "/n": st.n}
+    if r in QUANTILE_REDUCERS:
+        # batch-polymorphic over leading carry axes ((B, bins) counts
+        # from vmapped campaign grids): cumulate along the bin axis and
+        # take the first bin whose cumulative count reaches q·total
+        q = QUANTILE_Q[r]
+        c = jnp.cumsum(st.counts, axis=-1)
+        total = c[..., -1]
+        i = jnp.sum(c < q * total[..., None], axis=-1)
+        i = jnp.clip(i, 0, spec.bins - 1)
+        width = (spec.hi - spec.lo) / spec.bins
+        val = spec.lo + (i.astype(jnp.float32) + 0.5) * width
+        return {spec.out_key: jnp.where(total > 0, val,
+                                        jnp.float32(spec.lo))}
     return {spec.out_key: st}
 
 

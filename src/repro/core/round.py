@@ -181,10 +181,15 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
                  astate: Optional[AsyncState], env: EnvState,
                  fleet: DeviceFleet, cx, cy, key, round_idx):
         S = fleet.n
+        # jax.named_scope blocks below are HLO-metadata-only phase labels
+        # (selection / local-update / aggregation / dynamics): they name
+        # the ops in XLA profiler captures and Perfetto traces without
+        # touching the computation — numerics stay bitwise-identical.
         if dyn:
             k_env, k_rate, k_sel, k_train = jax.random.split(key, 4)
-            env, state = step_env(scenario, fleet, env, state, round_idx,
-                                  k_env, model_bits)
+            with jax.named_scope("round.dynamics"):
+                env, state = step_env(scenario, fleet, env, state,
+                                      round_idx, k_env, model_bits)
         else:
             k_rate, k_sel, k_train = jax.random.split(key, 3)
         rates = sample_round_rates(k_rate, fleet, env if dyn else None)
@@ -199,14 +204,16 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
             autofl_eta, autofl_ema = mp.autofl_eta, mp.autofl_ema
 
         # --- global-model probe (amortised when probe_every > 1) ---------
-        if cfg.probe_every > 1:
-            g_loss = jax.lax.cond(
-                round_idx % cfg.probe_every == 0,
-                lambda: _probe_losses(model, params, cx, cy,
-                                      cfg.probe_size)[0],
-                lambda: state.g_loss)
-        else:
-            g_loss, _ = _probe_losses(model, params, cx, cy, cfg.probe_size)
+        with jax.named_scope("round.probe"):
+            if cfg.probe_every > 1:
+                g_loss = jax.lax.cond(
+                    round_idx % cfg.probe_every == 0,
+                    lambda: _probe_losses(model, params, cx, cy,
+                                          cfg.probe_size)[0],
+                    lambda: state.g_loss)
+            else:
+                g_loss, _ = _probe_losses(model, params, cx, cy,
+                                          cfg.probe_size)
 
         # --- candidate H per policy (Algorithm 1 line 8) -----------------
         def h_fixed():
@@ -232,51 +239,57 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
 
         # --- utilities + selection (lines 13–16) -------------------------
         # churn gates selection exactly like dropout, but is transient
-        available = (~state.dropped & env.online) if dyn else ~state.dropped
-        stat = state.last_stat
+        with jax.named_scope("round.selection"):
+            available = ((~state.dropped & env.online) if dyn
+                         else ~state.dropped)
+            stat = state.last_stat
 
-        def sel_random():
-            return sel.random_select(k_sel, K, available)
+            def sel_random():
+                return sel.random_select(k_sel, K, available)
 
-        def oort_utils():
-            stat_tu = sel.temporal_uncertainty(stat, round_idx,
-                                               state.last_round)
-            return util.oort_utility(stat_tu, costs.t_total,
-                                     T_round=cfg.T_round, alpha=alpha)
+            def oort_utils():
+                stat_tu = sel.temporal_uncertainty(stat, round_idx,
+                                                   state.last_round)
+                return util.oort_utility(stat_tu, costs.t_total,
+                                         T_round=cfg.T_round, alpha=alpha)
 
-        def rea_utils():
-            return util.rewafl_utility(
-                stat, costs.t_total, costs.e_total, state.residual_energy,
-                fleet.e0_reserve, T_round=cfg.T_round, alpha=alpha,
-                beta=beta)
+            def rea_utils():
+                return util.rewafl_utility(
+                    stat, costs.t_total, costs.e_total,
+                    state.residual_energy, fleet.e0_reserve,
+                    T_round=cfg.T_round, alpha=alpha, beta=beta)
 
-        if mp is None:
-            if method.selector == "random":
-                selected = sel_random()
-            elif method.selector == "oort":
-                selected = sel.epsilon_greedy(k_sel, oort_utils(), K,
-                                              available, method.exploration)
-            elif method.selector == "autofl":
-                selected = sel.epsilon_greedy(k_sel, state.q_value, K,
-                                              available, method.exploration)
-            else:  # "rea": Eqn (2) — REAFL / REAFL+LUPA / REWAFL
-                selected = sel.top_k_select(rea_utils(), K, available)
-        else:
-            # one unified rank-space ε-greedy serves every selector: the
-            # switch (branch order = methods.SELECTOR_IDS) only picks the
-            # cheap score arithmetic, and mp.exploration is the effective
-            # ε (random ≡ 1: all slots from the same uniform draw
-            # random_select makes; rea ≡ 0: pure ranking). One sort-based
-            # mechanism to compile instead of four — masks stay
-            # bit-identical to the static branches above.
-            scores = jax.lax.switch(mp.selector_id, (
-                lambda: jnp.zeros_like(stat),   # random: ε=1 ignores them
-                oort_utils,
-                lambda: state.q_value,
-                rea_utils,
-            ))
-            selected = sel.epsilon_greedy_traced(k_sel, scores, K,
-                                                 available, mp.exploration)
+            if mp is None:
+                if method.selector == "random":
+                    selected = sel_random()
+                elif method.selector == "oort":
+                    selected = sel.epsilon_greedy(k_sel, oort_utils(), K,
+                                                  available,
+                                                  method.exploration)
+                elif method.selector == "autofl":
+                    selected = sel.epsilon_greedy(k_sel, state.q_value, K,
+                                                  available,
+                                                  method.exploration)
+                else:  # "rea": Eqn (2) — REAFL / REAFL+LUPA / REWAFL
+                    selected = sel.top_k_select(rea_utils(), K, available)
+            else:
+                # one unified rank-space ε-greedy serves every selector:
+                # the switch (branch order = methods.SELECTOR_IDS) only
+                # picks the cheap score arithmetic, and mp.exploration is
+                # the effective ε (random ≡ 1: all slots from the same
+                # uniform draw random_select makes; rea ≡ 0: pure
+                # ranking). One sort-based mechanism to compile instead
+                # of four — masks stay bit-identical to the static
+                # branches above.
+                scores = jax.lax.switch(mp.selector_id, (
+                    lambda: jnp.zeros_like(stat),  # random: ε=1 ignores
+                    oort_utils,
+                    lambda: state.q_value,
+                    rea_utils,
+                ))
+                selected = sel.epsilon_greedy_traced(k_sel, scores, K,
+                                                     available,
+                                                     mp.exploration)
 
         # --- feasibility: selected devices without enough battery fail ---
         feasible = costs.e_total < (state.residual_energy - fleet.e0_reserve)
@@ -286,18 +299,21 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
         # --- local training on the K selected slots ----------------------
         # pad slots (fewer than K selected) are dead: their (harmless)
         # training of device 0's data is discarded by the slot mask
-        sel_idx, slot_live = select_slots(selected, K)
-        part_k = participating[sel_idx] & slot_live
-        Hk = H_cand[sel_idx]
-        xk, yk = cx[sel_idx], cy[sel_idx]
-        keys = jax.random.split(k_train, K)
-        client_params = jax.vmap(
-            lambda x, y, H, kk: _local_sgd(model, params, x, y, H, kk, cfg)
-        )(xk, yk, Hk, keys)
-        weights = (fleet.data_size[sel_idx].astype(jnp.float32)
-                   * part_k.astype(jnp.float32))
+        with jax.named_scope("round.local_update"):
+            sel_idx, slot_live = select_slots(selected, K)
+            part_k = participating[sel_idx] & slot_live
+            Hk = H_cand[sel_idx]
+            xk, yk = cx[sel_idx], cy[sel_idx]
+            keys = jax.random.split(k_train, K)
+            client_params = jax.vmap(
+                lambda x, y, H, kk: _local_sgd(model, params, x, y, H, kk,
+                                               cfg)
+            )(xk, yk, Hk, keys)
+            weights = (fleet.data_size[sel_idx].astype(jnp.float32)
+                       * part_k.astype(jnp.float32))
         if acfg is None:
-            new_params = _fedavg(params, client_params, weights)
+            with jax.named_scope("round.aggregation"):
+                new_params = _fedavg(params, client_params, weights)
         else:
             # ---- async dispatch / land (core.async_agg) -----------------
             # Dispatch: the cohort snapshots θ now; its deltas enter the
@@ -305,47 +321,50 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
             # device's estimated round time (or a unit delay). Failed
             # devices still occupy a slot (weight 0) — the PS cannot
             # tell a crashed device from a slow one until it reports.
-            if acfg.delay == "unit":
-                delays = jnp.ones((K,), jnp.float32)
-            else:  # "wall": compute + uplink time at the sampled rate
-                delays = costs.t_total[sel_idx].astype(jnp.float32)
-            if acfg.delay_jitter > 0.0:
-                k_delay = jax.random.fold_in(key, 0xA57C)
-                delays = delays * jnp.exp(
-                    acfg.delay_jitter
-                    * jax.random.normal(k_delay, (K,)))
-            if mp is None:
-                m_eff = acfg.buffer_m
-            else:  # 0 is the sync sentinel: aggregate full cohorts
-                m_eff = jnp.where(mp.buffer_m > 0, mp.buffer_m, K)
-            pend_before = jnp.sum(astate.slot_live.astype(jnp.int32))
-            astate, n_pushed = async_agg.push_cohort(
-                astate, jax.tree.map(lambda c, p: c - p, client_params,
-                                     params),
-                sel_idx, slot_live, weights, delays)
-            # Land: fixed number of masked aggregation attempts, enough
-            # to drain the dispatch back below M. The first attempt arms
-            # the bitwise sync fast path: an aggregation consuming
-            # exactly this cohort with zero staleness returns the
-            # literal sync _fedavg graph on bit-identical inputs.
-            new_params = params
-            n_agg = jnp.zeros((), jnp.int32)
-            n_landed_r = jnp.zeros((), jnp.int32)
-            stale_sum = jnp.zeros((), jnp.int32)
-            for j in range(n_lands):
-                sync_agg = sync_pred = None
-                if j == 0 and acfg.server_lr == 1.0:
-                    sync_agg = _fedavg(params, client_params, weights)
-                    sync_pred = (lambda n_landed:
-                                 (pend_before == 0) & (n_landed == n_pushed))
-                new_params, astate, info = async_agg.land_once(
-                    new_params, astate, m_eff,
-                    staleness_power=acfg.staleness_power,
-                    server_lr=acfg.server_lr,
-                    sync_aggregate=sync_agg, sync_pred=sync_pred)
-                n_agg = n_agg + info["did_aggregate"]
-                n_landed_r = n_landed_r + info["n_landed"]
-                stale_sum = stale_sum + info["stale_sum"]
+            with jax.named_scope("round.aggregation"):
+                if acfg.delay == "unit":
+                    delays = jnp.ones((K,), jnp.float32)
+                else:  # "wall": compute + uplink time at the sampled rate
+                    delays = costs.t_total[sel_idx].astype(jnp.float32)
+                if acfg.delay_jitter > 0.0:
+                    k_delay = jax.random.fold_in(key, 0xA57C)
+                    delays = delays * jnp.exp(
+                        acfg.delay_jitter
+                        * jax.random.normal(k_delay, (K,)))
+                if mp is None:
+                    m_eff = acfg.buffer_m
+                else:  # 0 is the sync sentinel: aggregate full cohorts
+                    m_eff = jnp.where(mp.buffer_m > 0, mp.buffer_m, K)
+                pend_before = jnp.sum(astate.slot_live.astype(jnp.int32))
+                astate, n_pushed = async_agg.push_cohort(
+                    astate, jax.tree.map(lambda c, p: c - p, client_params,
+                                         params),
+                    sel_idx, slot_live, weights, delays)
+                # Land: fixed number of masked aggregation attempts,
+                # enough to drain the dispatch back below M. The first
+                # attempt arms the bitwise sync fast path: an aggregation
+                # consuming exactly this cohort with zero staleness
+                # returns the literal sync _fedavg graph on bit-identical
+                # inputs.
+                new_params = params
+                n_agg = jnp.zeros((), jnp.int32)
+                n_landed_r = jnp.zeros((), jnp.int32)
+                stale_sum = jnp.zeros((), jnp.int32)
+                for j in range(n_lands):
+                    sync_agg = sync_pred = None
+                    if j == 0 and acfg.server_lr == 1.0:
+                        sync_agg = _fedavg(params, client_params, weights)
+                        sync_pred = (lambda n_landed:
+                                     (pend_before == 0)
+                                     & (n_landed == n_pushed))
+                    new_params, astate, info = async_agg.land_once(
+                        new_params, astate, m_eff,
+                        staleness_power=acfg.staleness_power,
+                        server_lr=acfg.server_lr,
+                        sync_aggregate=sync_agg, sync_pred=sync_pred)
+                    n_agg = n_agg + info["did_aggregate"]
+                    n_landed_r = n_landed_r + info["n_landed"]
+                    stale_sum = stale_sum + info["stale_sum"]
 
         # --- post-training local losses (stat-utility refresh) -----------
         def local_probe(p, x, y):

@@ -15,7 +15,8 @@ class TelemetryCarry(NamedTuple):
 
     `reducers` maps a `core.metrics.MetricSpec.state_key` to that
     reducer's on-device state pytree (running sums, Welford moments,
-    ring snapshot buffers, ...) — O(S) per per-device metric instead of
+    ring snapshot buffers, fixed-bin quantile histograms, ...) — O(S)
+    (or O(bins) for the p50/p95 tails) per per-device metric instead of
     the O(R·S) dense history it replaces. Built/folded/drained by
     `core.metrics.init_telemetry / update_telemetry /
     finalize_telemetry`; the engine treats it as an opaque carry leaf

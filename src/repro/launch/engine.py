@@ -77,8 +77,14 @@ from repro.core.state import (AsyncState, FleetState, init_async_state,
                               init_fleet_state, replicate_state)
 from repro.launch.mesh import make_fleet_mesh
 from repro.models.fl_models import FLModel
+from repro.obs.health import (HealthCfg, HealthReport, chunk_sample,
+                              finalize_report, with_health_specs)
+from repro.obs.log import get_logger
+from repro.obs.trace import span
 from repro.sim.devices import DeviceFleet
 from repro.sim.dynamics import EnvState, Scenario, init_env_state
+
+log = get_logger(__name__)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,6 +112,13 @@ class EngineCfg:
     # the scan carry and across chunk boundaries. None = sync FedAvg
     # barrier, bitwise-unchanged.
     async_cfg: Optional[AsyncCfg] = None
+    # fleet-health monitors (repro.obs.health): when set, run_rounds
+    # samples flat-battery / near-depletion counts at every chunk
+    # boundary (the same host-sync point as the accuracy eval), logs
+    # threshold violations as WARNINGs, auto-extends a streaming
+    # telemetry cfg with the staleness / residual-energy P50/P95
+    # reducers, and attaches a `HealthReport` to EngineResult.health.
+    health: Optional[HealthCfg] = None
 
 
 # --------------------------------------------------------------- sharding
@@ -359,6 +372,12 @@ class _HostHistory:
     def drain(self) -> None:
         """Fetch every pending chunk into the host buffers (blocks only
         on those chunks' completion, not on anything dispatched after)."""
+        if not self._pending:
+            return
+        with span("history_drain", chunks=len(self._pending)):
+            self._drain_pending()
+
+    def _drain_pending(self) -> None:
         for hist, off, length in self._pending:
             h = jax.device_get(hist)
             if self.bufs is None:
@@ -420,6 +439,10 @@ class EngineResult:
     # async engine mode only: final virtual clock + pending-update
     # buffer (core.state.AsyncState)
     async_state: Optional[AsyncState] = None
+    # fleet-health verdict (repro.obs.health), populated when
+    # EngineCfg.health is set: chunk-boundary flat-battery /
+    # near-depletion samples, selection Gini, staleness / energy tails
+    health: Optional[HealthReport] = None
 
 
 def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
@@ -473,6 +496,13 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
 
     tcfg = ecfg.telemetry
     streaming = tcfg.streaming
+    hcfg = ecfg.health
+    if hcfg is not None and streaming:
+        # the health monitors read whole-campaign staleness / energy
+        # tails off the streaming quantile reducers — declare them
+        # before the carry is built (dense runs fall back to exact
+        # end-state percentiles in finalize_report)
+        tcfg = with_health_specs(tcfg, hcfg, rounds, fleet)
     tel = None
     if streaming:
         if acfg is not None:
@@ -503,49 +533,66 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
     acc_curve: List[float] = []
     chunk_wall: List[float] = []
     chunk_len: List[int] = []
+    health_samples: List[Dict[str, float]] = []
+    health_warnings: List[str] = []
     compile_s = 0.0
     reached = None
     done = 0
+    ci = 0
     while done < rounds:
         length = min(ecfg.chunk_size, rounds - done)
         fresh = length not in chunk_fns
         t0 = time.time()
-        lead = ((params, state, astate) if acfg is not None
-                else (params, state))
-        args = lead + (env, fleet, cx, cy, key, jnp.asarray(done,
-                                                            jnp.int32))
-        out = chunk_fn(length)(*args + ((tel,) if streaming else ()))
-        params, state = out[0], out[1]
-        i = 2
-        if acfg is not None:
-            astate = out[i]
-            i += 1
-        env, key = out[i], out[i + 1]
-        if streaming:
-            tel = out[-2]
-        hist = out[-1]
-        if fresh:                    # dispatch wall ≈ trace + compile
-            compile_s += time.time() - t0
-        hh.drain()                   # fetch chunk i−1 while chunk i runs
-        hh.push(hist, done, length)
-        chunk_len.append(length)
-        done += length
-        stop = False
-        if eval_fn is not None:      # blocks on this chunk — timed in,
-            acc = float(eval_fn(params))   # so chunk walls keep covering
-            acc_curve.append(acc)          # the execution they used to
-            if target_acc is not None and acc >= target_acc:
-                reached = done - 1
-                stop = True
+        with span("chunk", ci, rounds=length, start=done):
+            lead = ((params, state, astate) if acfg is not None
+                    else (params, state))
+            args = lead + (env, fleet, cx, cy, key, jnp.asarray(done,
+                                                                jnp.int32))
+            with span("compile" if fresh else "dispatch", ci):
+                out = chunk_fn(length)(*args
+                                       + ((tel,) if streaming else ()))
+            params, state = out[0], out[1]
+            i = 2
+            if acfg is not None:
+                astate = out[i]
+                i += 1
+            env, key = out[i], out[i + 1]
+            if streaming:
+                tel = out[-2]
+            hist = out[-1]
+            if fresh:                # dispatch wall ≈ trace + compile
+                compile_s += time.time() - t0
+            hh.drain()               # fetch chunk i−1 while chunk i runs
+            hh.push(hist, done, length)
+            chunk_len.append(length)
+            done += length
+            stop = False
+            if eval_fn is not None:  # blocks on this chunk — timed in,
+                with span("eval", ci):     # so chunk walls keep covering
+                    acc = float(eval_fn(params))  # the execution they
+                acc_curve.append(acc)             # used to
+                if target_acc is not None and acc >= target_acc:
+                    reached = done - 1
+                    stop = True
+            if hcfg is not None:     # chunk-boundary fleet-health sample
+                with span("health", ci):   # (host sync, like the eval)
+                    sample, warns = chunk_sample(hcfg, state, fleet,
+                                                 done - 1)
+                health_samples.append(sample)
+                for w in warns:
+                    log.warning(w)
+                health_warnings.extend(warns)
         chunk_wall.append(time.time() - t0)
+        ci += 1
         if stop:
             break
     t0 = time.time()
-    history = hh.finalize(done)
-    telemetry_out = None
-    if streaming:                    # one O(S) drain for the whole run
-        telemetry_out = {k: np.asarray(v) for k, v in jax.device_get(
-            finalize_telemetry(tcfg, tel)).items()}
+    with span("transfer"):
+        history = hh.finalize(done)
+        telemetry_out = None
+        if streaming:                # one O(S) drain for the whole run
+            telemetry_out = {k: np.asarray(v) for k, v in jax.device_get(
+                finalize_telemetry(tcfg, tel)).items()}
     if chunk_wall:                   # last fetch blocks on the last chunk
         chunk_wall[-1] += time.time() - t0
     if history is None:  # rounds=0: empty but correctly-keyed history
@@ -555,13 +602,20 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
         if streaming:
             args = args + (tel,)
         history = _empty_history(chunk_fn(1), args)
+    health = None
+    if hcfg is not None:
+        health = finalize_report(hcfg, health_samples, health_warnings,
+                                 state=state, fleet=fleet,
+                                 telemetry=telemetry_out,
+                                 rounds_run=done)
     return EngineResult(params=params, state=state, history=history,
                         rounds_run=done, reached_round=reached,
                         acc_curve=np.asarray(acc_curve, np.float64),
                         env=env, telemetry=telemetry_out,
                         chunk_wall_s=np.asarray(chunk_wall, np.float64),
                         chunk_rounds=np.asarray(chunk_len, np.int64),
-                        compile_s=compile_s, async_state=astate)
+                        compile_s=compile_s, async_state=astate,
+                        health=health)
 
 
 # ------------------------------------------------------- campaign batching
@@ -700,6 +754,7 @@ def run_campaign_batch(model: FLModel, fleet: DeviceFleet, cx, cy,
     compile_s = 0.0
     reached = np.full((B,), -1, np.int64)
     done = 0
+    ci = 0
     while done < rounds:
         length = min(chunk_size, rounds - done)
         fresh = done == 0
@@ -710,35 +765,40 @@ def run_campaign_batch(model: FLModel, fleet: DeviceFleet, cx, cy,
                 in_axes=in_axes))
             fresh = True
         t0 = time.time()
-        lead = ((params, state, astate) if is_async
-                else (params, state))
-        args = lead + (env, fleet, cx, cy, keys,
-                       jnp.asarray(done, jnp.int32))
-        out = batched(*args + ((tel,) if streaming else ()))
-        params, state = out[0], out[1]
-        i = 2
-        if is_async:
-            astate = out[i]
-            i += 1
-        env, keys = out[i], out[i + 1]
-        if streaming:
-            tel = out[-2]
-        hist = out[-1]
-        if fresh:                    # dispatch wall ≈ trace + compile
-            compile_s += time.time() - t0
-        hh.drain()                   # fetch chunk i−1 while chunk i runs
-        hh.push(hist, done, length)
-        chunk_len.append(length)
-        done += length
-        if eval_fn is not None:      # blocks on this chunk — timed in
-            acc = np.asarray(eval_fn(params), np.float64)
-            acc_curve.append(acc)
-            if target_acc is not None:
-                newly = (acc >= target_acc) & (reached < 0)
-                reached[newly] = done - 1
+        with span("chunk", ci, rounds=length, start=done, seeds=B):
+            lead = ((params, state, astate) if is_async
+                    else (params, state))
+            args = lead + (env, fleet, cx, cy, keys,
+                           jnp.asarray(done, jnp.int32))
+            with span("compile" if fresh else "dispatch", ci):
+                out = batched(*args + ((tel,) if streaming else ()))
+            params, state = out[0], out[1]
+            i = 2
+            if is_async:
+                astate = out[i]
+                i += 1
+            env, keys = out[i], out[i + 1]
+            if streaming:
+                tel = out[-2]
+            hist = out[-1]
+            if fresh:                # dispatch wall ≈ trace + compile
+                compile_s += time.time() - t0
+            hh.drain()               # fetch chunk i−1 while chunk i runs
+            hh.push(hist, done, length)
+            chunk_len.append(length)
+            done += length
+            if eval_fn is not None:  # blocks on this chunk — timed in
+                with span("eval", ci):
+                    acc = np.asarray(eval_fn(params), np.float64)
+                acc_curve.append(acc)
+                if target_acc is not None:
+                    newly = (acc >= target_acc) & (reached < 0)
+                    reached[newly] = done - 1
         chunk_wall.append(time.time() - t0)
+        ci += 1
     t0 = time.time()
-    history = hh.finalize(done)
+    with span("transfer"):
+        history = hh.finalize(done)
     if chunk_wall:
         chunk_wall[-1] += time.time() - t0
     if history is None:  # rounds=0: empty but correctly-keyed history
@@ -906,6 +966,7 @@ def _run_grid_batched(model: FLModel, fleet: DeviceFleet, cx, cy,
     compile_s = 0.0
     reached = np.full((M, B), -1, np.int64)
     done = 0
+    ci = 0
     while done < rounds:
         length = min(chunk_size, rounds - done)
         fresh = done == 0
@@ -913,42 +974,47 @@ def _run_grid_batched(model: FLModel, fleet: DeviceFleet, cx, cy,
             batched = grid_fn(length)
             fresh = True
         t0 = time.time()
-        lead = (mp_cells, seed_idx, params, state) + (
-            (astate,) if any_async else ())
-        args = lead + (env, fleet, cx, cy, keys,
-                       jnp.asarray(done, jnp.int32))
-        out = batched(*args + ((tel,) if streaming else ()))
-        params, state = out[0], out[1]
-        i = 2
-        if any_async:
-            astate = out[i]
-            i += 1
-        env, keys = out[i], out[i + 1]
-        if streaming:
-            tel = out[-2]
-        hist = out[-1]
-        if fresh:                    # dispatch wall ≈ trace + compile
-            compile_s += time.time() - t0
-        hh.drain()                   # fetch chunk i−1 while chunk i runs
-        hh.push(hist, done, length)
-        chunk_len.append(length)
-        done += length
-        if eval_fn is not None:      # blocks on this chunk — timed in;
-            # eval_fn is per-batch ((B,) accuracies) — slice per method
-            acc = np.stack([np.asarray(eval_fn(jax.tree.map(
-                lambda x: x[i * B:(i + 1) * B], params)), np.float64)
-                for i in range(M)])
-            acc_curve.append(acc)
-            if target_acc is not None:
-                newly = (acc >= target_acc) & (reached < 0)
-                reached[newly] = done - 1
+        with span("chunk", ci, rounds=length, start=done, cells=M * B):
+            lead = (mp_cells, seed_idx, params, state) + (
+                (astate,) if any_async else ())
+            args = lead + (env, fleet, cx, cy, keys,
+                           jnp.asarray(done, jnp.int32))
+            with span("compile" if fresh else "dispatch", ci):
+                out = batched(*args + ((tel,) if streaming else ()))
+            params, state = out[0], out[1]
+            i = 2
+            if any_async:
+                astate = out[i]
+                i += 1
+            env, keys = out[i], out[i + 1]
+            if streaming:
+                tel = out[-2]
+            hist = out[-1]
+            if fresh:                # dispatch wall ≈ trace + compile
+                compile_s += time.time() - t0
+            hh.drain()               # fetch chunk i−1 while chunk i runs
+            hh.push(hist, done, length)
+            chunk_len.append(length)
+            done += length
+            if eval_fn is not None:  # blocks on this chunk — timed in;
+                # eval_fn is per-batch ((B,) accuracies) — per method
+                with span("eval", ci):
+                    acc = np.stack([np.asarray(eval_fn(jax.tree.map(
+                        lambda x: x[i * B:(i + 1) * B], params)),
+                        np.float64) for i in range(M)])
+                acc_curve.append(acc)
+                if target_acc is not None:
+                    newly = (acc >= target_acc) & (reached < 0)
+                    reached[newly] = done - 1
         chunk_wall.append(time.time() - t0)
+        ci += 1
     t0 = time.time()
-    bufs = hh.finalize(done)
-    tel_out: Dict[str, np.ndarray] = {}
-    if streaming:                    # (M·B, ...) reducer outputs
-        tel_out = {k: np.asarray(v) for k, v in jax.device_get(
-            finalize_telemetry(tcfg, tel)).items()}
+    with span("transfer"):
+        bufs = hh.finalize(done)
+        tel_out: Dict[str, np.ndarray] = {}
+        if streaming:                # (M·B, ...) reducer outputs
+            tel_out = {k: np.asarray(v) for k, v in jax.device_get(
+                finalize_telemetry(tcfg, tel)).items()}
     if chunk_wall:
         chunk_wall[-1] += time.time() - t0
     if bufs is None:  # rounds=0

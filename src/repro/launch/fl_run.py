@@ -7,12 +7,21 @@ dynamics, per-device selections/energy).
 
 CLI:  PYTHONPATH=src python -m repro.launch.fl_run \
           --task cnn@mnist --method rewafl --rounds 100
+
+Observability (repro.obs): `--trace out.trace.json` records host spans
+per engine phase (compile / dispatch / history drain / eval / transfer)
+as Perfetto-loadable Chrome trace JSON; `--health` samples fleet-health
+monitors (flat batteries, near-depletion, selection Gini, staleness
+tails) at chunk boundaries and `--health-strict` turns a tripped
+threshold into exit code 3. Progress chatter goes through the `repro`
+logger (`--quiet` / `-v`); the final JSON blob stays on stdout.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import sys
 import time
 from typing import Dict, List, Optional
 
@@ -22,11 +31,16 @@ import numpy as np
 
 from repro.core import FLConfig, METHODS, init_fleet_state, make_eval_fn, make_round_fn
 from repro.data.partition import client_datasets
+from repro.obs.health import HealthCfg, HealthReport, format_health_table
+from repro.obs.log import configure_logging, get_logger
+from repro.obs.trace import Tracer, format_span_table, tracing
 from repro.sim.dynamics import SCENARIOS, get_scenario, init_env_state
 from repro.data.synthetic import (CHAR_VOCAB, make_char_dataset,
                                   make_har_dataset, make_image_dataset)
 from repro.models.fl_models import make_fl_model
 from repro.sim.devices import build_fleet
+
+log = get_logger(__name__)
 
 
 @dataclasses.dataclass
@@ -57,6 +71,13 @@ class RunResult:
     # Sync campaigns report Σ round_latency as overall_latency_s
     # instead (barrier semantics).
     wall_clock_s: Optional[float] = None
+    # fleet-health verdict (repro.obs.health), set when run_fl(health=
+    # HealthCfg(...)) / `--health`: chunk-boundary flat-battery samples,
+    # selection Gini, staleness / residual-energy tails
+    health: Optional[HealthReport] = None
+    # span aggregates ({name: {count, total_s, mean_s, max_s}}) when
+    # run_fl(trace=...) recorded the campaign's engine phases
+    spans: Optional[Dict[str, Dict[str, float]]] = None
 
 
 def build_task(task: str, n_clients: int, lam: float, *, per_client: int = 128,
@@ -140,7 +161,9 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
            buffer_m: Optional[int] = None,
            staleness_power: float = 0.5,
            delay_jitter: float = 0.0,
-           async_delay: str = "wall") -> RunResult:
+           async_delay: str = "wall",
+           trace: Optional[str] = None,
+           health: Optional[HealthCfg] = None) -> RunResult:
     """Run one FL campaign.
 
     engine="scan" (default) runs rounds in compiled `lax.scan` chunks via
@@ -181,7 +204,28 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
     wall-clock-to-accuracy comparison
     (benchmarks/table5_async_wallclock.py). With `buffer_m=n_select`
     and no jitter the run reproduces the sync history bitwise.
+
+    `trace="out.trace.json"` installs a `repro.obs.trace.Tracer` for the
+    campaign, writes the engine-phase spans as Chrome trace-event JSON
+    (Perfetto-loadable) and attaches the per-phase aggregates to
+    `RunResult.spans`. Tracing is host-side only — the compiled round
+    math and the golden history are bitwise-unchanged.
+
+    `health=HealthCfg(...)` (scan engine only) samples the fleet-health
+    monitors at every chunk boundary (flat-battery / near-depletion
+    counts; selection Gini and staleness / residual-energy tails at the
+    end), logs threshold violations as WARNINGs and attaches the
+    `HealthReport` to `RunResult.health`.
     """
+    if trace is not None:
+        kw = dict(locals())
+        kw.pop("trace")
+        with tracing(Tracer()) as tracer:
+            with tracer.span("run_fl", task=task, method=method):
+                res = run_fl(trace=None, **kw)
+        tracer.write(trace)
+        res.spans = tracer.summary()
+        return res
     model = make_fl_model(task, small=small)
     scen = get_scenario(scenario)
     # benchmark-scale default: the paper's low-initial-battery regime
@@ -211,6 +255,10 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
     if async_mode and engine != "scan":
         raise ValueError("aggregation='async' needs engine='scan' — the "
                          "legacy loop driver has no buffer carry")
+    if health is not None and engine != "scan":
+        raise ValueError("health monitoring needs engine='scan' — the "
+                         "legacy loop driver has no chunk boundaries to "
+                         "sample at")
     if engine == "scan":
         from repro.core.async_agg import AsyncCfg
         from repro.core.metrics import ASYNC_SPECS, TelemetryCfg
@@ -236,7 +284,7 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
             params=model.init(jax.random.PRNGKey(seed + 2)),
             ecfg=EngineCfg(chunk_size=chunk_size, fleet_shards=fleet_shards,
                            collect_per_device=not streaming,
-                           telemetry=tcfg, async_cfg=acfg),
+                           telemetry=tcfg, async_cfg=acfg, health=health),
             eval_fn=eval_fn, target_acc=target_acc,
             scenario=scen, env_key=jax.random.PRNGKey(seed + 3))
         h = res.history
@@ -244,9 +292,9 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
         if verbose:
             for i, acc in enumerate(res.acc_curve):
                 r_end = min((i + 1) * chunk_size, res.rounds_run) - 1
-                print(f"r={r_end:4d} acc={acc:.4f} "
-                      f"loss={h['global_loss'][r_end]:.4f} "
-                      f"drop={int(h['n_dropped'][r_end])}")
+                log.info(f"r={r_end:4d} acc={acc:.4f} "
+                         f"loss={h['global_loss'][r_end]:.4f} "
+                         f"drop={int(h['n_dropped'][r_end])}")
         if streaming:  # per-device traces live in the O(S) reducers
             per_dev = {
                 "sel_count": np.asarray(
@@ -278,7 +326,8 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
             chunk_wall_s=res.chunk_wall_s, chunk_rounds=res.chunk_rounds,
             compile_s=res.compile_s, telemetry=res.telemetry,
             wall_clock_s=(float(h["wall_clock"][-1])
-                          if async_mode and res.rounds_run else None))
+                          if async_mode and res.rounds_run else None),
+            health=res.health)
     if engine != "loop":
         raise ValueError(f"unknown engine {engine!r} (use 'scan' or 'loop')")
     if telemetry != "dense":
@@ -317,10 +366,11 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
             acc = float(eval_fn(params))
             acc_curve.append(acc)
             if verbose:
-                print(f"r={r:4d} acc={acc:.4f} loss={m['global_loss']:.4f} "
-                      f"drop={int(m['n_dropped'])} "
-                      f"H={float(m['mean_H_selected']):.1f} "
-                      f"lat={cum_lat/3600:.3f}h e={cum_energy/1e3:.1f}kJ")
+                log.info(f"r={r:4d} acc={acc:.4f} "
+                         f"loss={m['global_loss']:.4f} "
+                         f"drop={int(m['n_dropped'])} "
+                         f"H={float(m['mean_H_selected']):.1f} "
+                         f"lat={cum_lat/3600:.3f}h e={cum_energy/1e3:.1f}kJ")
             if reached is None and acc >= target_acc:
                 reached = r
                 stop_lat, stop_energy = cum_lat, cum_energy
@@ -388,19 +438,53 @@ def main() -> None:
                     help="async delay model: 'wall' uses each device's "
                          "simulated compute+uplink seconds, 'unit' lands "
                          "every update one clock tick after dispatch")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record engine-phase host spans to PATH as "
+                         "Chrome trace-event JSON (open in "
+                         "ui.perfetto.dev or chrome://tracing)")
+    ap.add_argument("--health", action="store_true",
+                    help="sample fleet-health monitors (flat batteries, "
+                         "near-depletion, selection Gini, staleness "
+                         "tails) at chunk boundaries; scan engine only")
+    ap.add_argument("--health-strict", action="store_true",
+                    help="imply --health and exit 3 when any health "
+                         "threshold tripped (CI gate)")
+    ap.add_argument("--max-flat-frac", type=float, default=0.10,
+                    help="health: max tolerated fraction of the fleet "
+                         "at/below the depletion floor")
+    ap.add_argument("--max-near-frac", type=float, default=0.50,
+                    help="health: max tolerated fraction of the fleet "
+                         "within 50%% of the depletion floor (raise for "
+                         "fleets that START in the low-battery regime, "
+                         "like the benchmark default)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress progress chatter (warnings and the "
+                         "final JSON blob still print)")
+    ap.add_argument("-v", "--verbose", action="count", default=0,
+                    help="debug-level logging")
     args = ap.parse_args()
+    configure_logging(verbosity=args.verbose, quiet=args.quiet)
+    hcfg = (HealthCfg(max_flat_frac=args.max_flat_frac,
+                      max_near_frac=args.max_near_frac)
+            if args.health or args.health_strict else None)
     t0 = time.time()
     res = run_fl(args.task, args.method, rounds=args.rounds,
                  n_clients=args.clients, n_select=args.select, lam=args.lam,
                  target_acc=args.target_acc, alpha=args.alpha,
-                 beta=args.beta, seed=args.seed, verbose=True,
+                 beta=args.beta, seed=args.seed, verbose=not args.quiet,
                  engine=args.engine, chunk_size=args.chunk_size,
                  fleet_shards=args.fleet_shards, scenario=args.scenario,
                  probe_every=args.probe_every, telemetry=args.telemetry,
                  aggregation=args.aggregation, buffer_m=args.buffer_m,
                  staleness_power=args.staleness_power,
                  delay_jitter=args.delay_jitter,
-                 async_delay=args.async_delay)
+                 async_delay=args.async_delay,
+                 trace=args.trace, health=hcfg)
+    if res.spans is not None:
+        log.info("%s", format_span_table(res.spans))
+        log.info("trace written to %s", args.trace)
+    if res.health is not None:
+        log.info("%s", format_health_table(res.health))
     print(json.dumps({
         "task": res.task, "method": res.method,
         "scenario": args.scenario, "telemetry": args.telemetry,
@@ -411,8 +495,11 @@ def main() -> None:
         "overall_energy_kj": res.overall_energy_j / 1e3,
         "wall_clock_s": res.wall_clock_s,
         "final_acc": float(res.acc_curve[-1]),
+        "health_ok": res.health.ok if res.health is not None else None,
         "wall_s": round(time.time() - t0, 1),
     }, indent=1))
+    if args.health_strict and res.health is not None and not res.health.ok:
+        sys.exit(3)
 
 
 if __name__ == "__main__":

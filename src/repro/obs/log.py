@@ -1,0 +1,72 @@
+"""Stdlib logging for runner / benchmark output.
+
+`run_fl` and the benchmarks used bare `print` for everything — progress
+chatter, perf notes, and (now) fleet-health alarms landed in one
+undifferentiated stream. This module routes the human-facing lines
+through one `repro` logger hierarchy so severities separate:
+
+  * progress chatter    -> INFO  (hidden by `--quiet`)
+  * debug detail        -> DEBUG (shown by `-v`)
+  * health alarms       -> WARNING, prefixed `WARNING:` — visible even
+                           under `--quiet`, grep-able in CI logs
+
+Machine-readable output (the final `run_fl` JSON blob, the benchmark
+CSV rows, `check_regression`'s gate lines) stays on plain stdout —
+that's a parsing contract, not chatter.
+
+    from repro.obs.log import configure_logging, get_logger
+    log = get_logger(__name__)
+    configure_logging(verbosity=args.verbose, quiet=args.quiet)
+    log.info("r=%d acc=%.4f", r, acc)
+    log.warning("flat-battery: %d devices below reserve", n)
+"""
+from __future__ import annotations
+
+import logging
+import sys
+from typing import Optional
+
+ROOT_LOGGER = "repro"
+_configured = False
+
+
+class _LevelPrefixFormatter(logging.Formatter):
+    """INFO/DEBUG lines print bare (they replace `print`); WARNING and
+    above keep their level prefix so alarms stand out."""
+
+    def format(self, record: logging.LogRecord) -> str:
+        msg = record.getMessage()
+        if record.levelno >= logging.WARNING:
+            return f"{record.levelname}: {msg}"
+        return msg
+
+
+def configure_logging(verbosity: int = 0, quiet: bool = False,
+                      stream=None) -> logging.Logger:
+    """(Re)configure the `repro` logger: WARNING under `quiet`, DEBUG at
+    verbosity >= 1, INFO otherwise. Idempotent — replaces the single
+    stream handler instead of stacking duplicates."""
+    global _configured
+    root = logging.getLogger(ROOT_LOGGER)
+    for h in list(root.handlers):
+        root.removeHandler(h)
+    handler = logging.StreamHandler(stream if stream is not None
+                                    else sys.stderr)
+    handler.setFormatter(_LevelPrefixFormatter())
+    root.addHandler(handler)
+    root.propagate = False
+    root.setLevel(logging.WARNING if quiet
+                  else logging.DEBUG if verbosity >= 1 else logging.INFO)
+    _configured = True
+    return root
+
+
+def get_logger(name: Optional[str] = None) -> logging.Logger:
+    """Child of the `repro` logger (lazily configured at INFO)."""
+    if not _configured:
+        configure_logging()
+    if not name or name == ROOT_LOGGER:
+        return logging.getLogger(ROOT_LOGGER)
+    if name.startswith("repro."):
+        return logging.getLogger(name)
+    return logging.getLogger(f"{ROOT_LOGGER}.{name}")

@@ -1,0 +1,239 @@
+"""Host-side span tracer writing Chrome trace-event JSON.
+
+The engine's only timing attribution used to be two numbers per run
+(`compile_s`, `chunk_wall_s`) — useless for answering *where* a
+campaign's wall-clock goes: XLA compile vs chunk dispatch vs the
+deferred host-history fetch vs the final device→host transfer. This
+module adds nestable host spans around exactly those phases
+(`launch.engine` enters them in all three drivers) and serializes them
+as Chrome trace events, loadable in Perfetto (https://ui.perfetto.dev)
+or chrome://tracing:
+
+    from repro.obs.trace import Tracer, set_tracer, span
+
+    tracer = Tracer()
+    set_tracer(tracer)
+    with span("chunk", 0):
+        with span("dispatch", 0):
+            ...
+    tracer.write("out.trace.json")
+
+Design constraints:
+
+  * Zero-overhead no-op default. The process-global tracer slot holds a
+    `NullTracer` unless a run opted in (`run_fl --trace`,
+    `engine_bench` phase rows); its `span()` returns one shared
+    do-nothing context manager — no allocation, no clock read, no lock
+    — so the hot engine loops pay one attribute lookup + two empty
+    method calls per span when tracing is off (gated by the
+    `scan_round_S*` throughput rows in `check_regression` and the
+    no-op micro-benchmark in `tests/test_obs.py`).
+  * Thread-safe. `_HostHistory` drains can run from any thread and the
+    async off-load interleaves host work; events append under a lock
+    and carry their thread id, so per-thread nesting renders correctly
+    in Perfetto (same-tid "X" events stack by containment).
+  * Alignable with XLA profiler traces. `Tracer(xla=True)` additionally
+    enters a `jax.profiler.TraceAnnotation` per span, so host spans
+    appear on the TraceMe timeline when a `jax.profiler.trace(...)`
+    capture is active; the `jax.named_scope` phase annotations inside
+    `core.round` give the device-side ops matching names.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+
+class _NullSpan:
+    """Shared do-nothing context manager (the no-op tracer's span)."""
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class NullTracer:
+    """Tracing disabled: every span is the shared no-op context."""
+    enabled = False
+
+    def span(self, name: str, index: Optional[int] = None, **args):
+        return _NULL_SPAN
+
+    def instant(self, name: str, **args) -> None:
+        pass
+
+    @property
+    def events(self) -> List[Dict[str, Any]]:
+        return []
+
+    def summary(self) -> Dict[str, Dict[str, float]]:
+        return {}
+
+
+class _Span:
+    """One live span: records a Chrome 'X' (complete) event on exit."""
+    __slots__ = ("_tracer", "_name", "_args", "_t0", "_ann")
+
+    def __init__(self, tracer: "Tracer", name: str, args: Dict[str, Any]):
+        self._tracer = tracer
+        self._name = name
+        self._args = args
+        self._ann = None
+
+    def __enter__(self):
+        if self._tracer._annotation is not None:
+            self._ann = self._tracer._annotation(self._name)
+            self._ann.__enter__()
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        t1 = time.perf_counter()
+        if self._ann is not None:
+            self._ann.__exit__(*exc)
+        self._tracer._record(self._name, self._t0, t1 - self._t0,
+                             self._args)
+        return False
+
+
+class Tracer:
+    """Collects host spans; serializes to Chrome trace-event JSON.
+
+    `span(name, index)` is a context manager; spans nest freely (the
+    trace format reconstructs the stack from ts/dur containment per
+    thread). `xla=True` mirrors every span into a
+    `jax.profiler.TraceAnnotation` so a concurrent XLA profiler capture
+    shows the same phase boundaries."""
+    enabled = True
+
+    def __init__(self, *, xla: bool = False):
+        self._events: List[Dict[str, Any]] = []
+        self._lock = threading.Lock()
+        self._epoch = time.perf_counter()
+        self._annotation = None
+        if xla:
+            import jax.profiler
+            self._annotation = jax.profiler.TraceAnnotation
+
+    def span(self, name: str, index: Optional[int] = None, **args):
+        if index is not None:
+            args["index"] = index
+        return _Span(self, name, args)
+
+    def instant(self, name: str, **args) -> None:
+        """Zero-duration marker event (Chrome 'i' instant)."""
+        ts = (time.perf_counter() - self._epoch) * 1e6
+        ev = {"name": name, "ph": "i", "ts": ts, "s": "t",
+              "pid": os.getpid(), "tid": threading.get_ident()}
+        if args:
+            ev["args"] = args
+        with self._lock:
+            self._events.append(ev)
+
+    def _record(self, name: str, t0: float, dur_s: float,
+                args: Dict[str, Any]) -> None:
+        ev = {"name": name, "ph": "X",
+              "ts": (t0 - self._epoch) * 1e6, "dur": dur_s * 1e6,
+              "pid": os.getpid(), "tid": threading.get_ident()}
+        if args:
+            ev["args"] = args
+        with self._lock:
+            self._events.append(ev)
+
+    @property
+    def events(self) -> List[Dict[str, Any]]:
+        with self._lock:
+            return list(self._events)
+
+    def summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-span-name aggregates: {name: {count, total_s, mean_s,
+        max_s}} — the phase-attribution table `engine_bench` and
+        `run_fl --trace` report."""
+        out: Dict[str, Dict[str, float]] = {}
+        for ev in self.events:
+            if ev["ph"] != "X":
+                continue
+            s = out.setdefault(ev["name"],
+                               {"count": 0, "total_s": 0.0, "max_s": 0.0})
+            dur = ev["dur"] / 1e6
+            s["count"] += 1
+            s["total_s"] += dur
+            s["max_s"] = max(s["max_s"], dur)
+        for s in out.values():
+            s["mean_s"] = s["total_s"] / max(s["count"], 1)
+        return out
+
+    def to_chrome(self) -> Dict[str, Any]:
+        """The Chrome trace-event JSON object (Perfetto-loadable)."""
+        return {"traceEvents": self.events, "displayTimeUnit": "ms"}
+
+    def write(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_chrome(), f)
+
+
+# Process-global tracer slot. Default: tracing off (NullTracer).
+_TRACER = NullTracer()
+
+
+def get_tracer():
+    return _TRACER
+
+
+def set_tracer(tracer) -> Any:
+    """Install `tracer` globally; returns the previous tracer so callers
+    can restore it (`tracing(...)` does this automatically)."""
+    global _TRACER
+    prev = _TRACER
+    _TRACER = tracer
+    return prev
+
+
+def span(name: str, index: Optional[int] = None, **args):
+    """Open a span on the current global tracer (no-op by default)."""
+    return _TRACER.span(name, index, **args)
+
+
+class tracing:
+    """Context manager installing a tracer for a scoped region:
+
+        with tracing(Tracer()) as t:
+            run_fl(...)
+        t.write("out.trace.json")
+    """
+
+    def __init__(self, tracer):
+        self._tracer = tracer
+        self._prev = None
+
+    def __enter__(self):
+        self._prev = set_tracer(self._tracer)
+        return self._tracer
+
+    def __exit__(self, *exc):
+        set_tracer(self._prev)
+        return False
+
+
+def format_span_table(summary: Dict[str, Dict[str, float]]) -> str:
+    """Fixed-width terminal table of a `Tracer.summary()` dict, widest
+    total first."""
+    if not summary:
+        return "(no spans recorded)"
+    rows = sorted(summary.items(), key=lambda kv: -kv[1]["total_s"])
+    w = max(len("span"), *(len(k) for k in summary))
+    lines = [f"{'span':<{w}}  {'count':>5}  {'total_s':>9}  "
+             f"{'mean_s':>9}  {'max_s':>9}"]
+    for name, s in rows:
+        lines.append(f"{name:<{w}}  {s['count']:>5d}  {s['total_s']:>9.3f}"
+                     f"  {s['mean_s']:>9.4f}  {s['max_s']:>9.4f}")
+    return "\n".join(lines)

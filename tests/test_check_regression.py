@@ -7,7 +7,7 @@ import json
 
 import pytest
 
-from benchmarks.check_regression import check
+from benchmarks.check_regression import check, check_specs, parse_spec
 
 
 def _write(tmp_path, name, results):
@@ -93,3 +93,54 @@ def test_default_keys_cover_union_and_still_gate(paths, capsys, tmp_path):
         "scan_round_S100": {"device_rounds_s": 1.0},
         "only_in_fresh": {"device_rounds_s": 123.0}})
     assert check(base, bad, None, "device_rounds_s", 0.30) == 1
+
+
+# ----------------------------------------------------- multi-group spec
+
+def test_parse_spec_round_trip():
+    keys, metric, direction, drop = parse_spec(
+        "scan_round_S100,async_round_S100:device_rounds_s:higher:0.30")
+    assert keys == ["scan_round_S100", "async_round_S100"]
+    assert (metric, direction, drop) == ("device_rounds_s", "higher", 0.30)
+    # empty KEYS means all-carrying default
+    assert parse_spec(":grid_wall_s:lower:0.75")[0] is None
+
+
+def test_parse_spec_rejects_malformed():
+    with pytest.raises(ValueError, match="KEYS:METRIC:DIRECTION"):
+        parse_spec("a:b:higher")
+    with pytest.raises(ValueError, match="direction"):
+        parse_spec("a:b:sideways:0.3")
+
+
+def test_check_specs_reports_all_failing_groups(tmp_path, capsys):
+    """One invocation gates every group and logs every violation — CI
+    must see the full damage, not just the first failing group."""
+    base = _write(tmp_path, "b.json", {
+        "scan_round_S100": {"device_rounds_s": 400.0},
+        "campaign_grid_4x5": {"grid_wall_s": 10.0, "compile_s": 4.0}})
+    fresh = _write(tmp_path, "f.json", {
+        "scan_round_S100": {"device_rounds_s": 100.0},   # 4x drop: FAIL
+        "campaign_grid_4x5": {"grid_wall_s": 40.0,       # 4x rise: FAIL
+                              "compile_s": 4.1}})        # fine: OK
+    specs = [(["scan_round_S100"], "device_rounds_s", "higher", 0.30),
+             (["campaign_grid_4x5"], "grid_wall_s", "lower", 0.75),
+             (["campaign_grid_4x5"], "compile_s", "lower", 0.75)]
+    assert check_specs(base, fresh, specs) == 1
+    out = capsys.readouterr().out
+    assert "FAIL scan_round_S100.device_rounds_s" in out
+    assert "FAIL campaign_grid_4x5.grid_wall_s" in out
+    assert "OK campaign_grid_4x5.compile_s" in out
+    assert "# 2 metric(s) regressed beyond tolerance" in out
+
+
+def test_check_specs_all_green(tmp_path):
+    base = _write(tmp_path, "b.json",
+                  {"scan_round_S100": {"device_rounds_s": 400.0,
+                                       "compile_s": 4.0}})
+    fresh = _write(tmp_path, "f.json",
+                   {"scan_round_S100": {"device_rounds_s": 390.0,
+                                        "compile_s": 3.5}})
+    assert check_specs(base, fresh,
+                       [(None, "device_rounds_s", "higher", 0.30),
+                        (None, "compile_s", "lower", 0.75)]) == 0

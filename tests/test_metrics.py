@@ -133,6 +133,90 @@ def test_update_inside_scan_matches_python_loop():
                                    err_msg=k)
 
 
+def test_quantile_reducers_match_percentile_within_half_bin():
+    """p50/p95 fold every (round, device) sample into one fixed-bin
+    histogram; the read-off quantile lands within one bin width of the
+    exact sample percentile."""
+    rng = np.random.default_rng(3)
+    trace = rng.uniform(0.0, 1.0, size=(20, 30)).astype(np.float32)
+    out = _fold([M.MetricSpec("x", "p50", bins=64, lo=0.0, hi=1.0),
+                 M.MetricSpec("x", "p95", bins=64, lo=0.0, hi=1.0)],
+                trace)
+    width = 1.0 / 64
+    assert out["tel/x/p50"].shape == ()  # one scalar over all samples
+    np.testing.assert_allclose(out["tel/x/p50"],
+                               np.percentile(trace, 50), atol=width)
+    np.testing.assert_allclose(out["tel/x/p95"],
+                               np.percentile(trace, 95), atol=width)
+
+
+def test_quantiles_share_one_histogram_state():
+    specs = (M.MetricSpec("x", "p50", bins=16, lo=0.0, hi=8.0),
+             M.MetricSpec("x", "p95", bins=16, lo=0.0, hi=8.0))
+    cfg = M.TelemetryCfg(mode="streaming", specs=specs)
+    carry = M.init_telemetry(
+        cfg, {"x": jax.ShapeDtypeStruct((3,), jnp.float32)})
+    assert list(carry.reducers) == ["x/hist16@0.0:8.0"]
+    # a different range is a different accumulator
+    cfg2 = M.TelemetryCfg(mode="streaming", specs=specs[:1] + (
+        M.MetricSpec("x", "p95", bins=16, lo=0.0, hi=4.0),))
+    carry2 = M.init_telemetry(
+        cfg2, {"x": jax.ShapeDtypeStruct((3,), jnp.float32)})
+    assert len(carry2.reducers) == 2
+
+
+def test_quantile_out_of_range_clips_into_end_bins():
+    trace = np.array([[-3.0, 0.5, 9.0]], np.float32)  # lo=0, hi=1
+    out = _fold([M.MetricSpec("x", "p50", bins=4, lo=0.0, hi=1.0),
+                 M.MetricSpec("x", "p95", bins=4, lo=0.0, hi=1.0)], trace)
+    width = 1.0 / 4
+    # p95 sits in the top bin (clipped 9.0), reported at its center
+    np.testing.assert_allclose(out["tel/x/p95"], 1.0 - width / 2)
+    assert 0.0 <= float(out["tel/x/p50"]) <= 1.0
+
+
+def test_quantile_empty_histogram_reports_lo():
+    cfg = M.TelemetryCfg(mode="streaming",
+                         specs=(M.MetricSpec("x", "p95", bins=8,
+                                             lo=2.0, hi=10.0),))
+    carry = M.init_telemetry(
+        cfg, {"x": jax.ShapeDtypeStruct((2,), jnp.float32)})
+    out = M.finalize_telemetry(cfg, carry)  # no updates folded
+    np.testing.assert_allclose(np.asarray(out["tel/x/p95"]), 2.0)
+
+
+def test_quantile_finalize_is_batch_polymorphic():
+    """Grid batching vmaps finalize over leading carry axes: per-cell
+    quantiles must equal the per-trace eager fold."""
+    rng = np.random.default_rng(4)
+    traces = rng.uniform(0.0, 1.0, size=(3, 12, 5)).astype(np.float32)
+    cfg = M.TelemetryCfg(mode="streaming",
+                         specs=(M.MetricSpec("x", "p95", bins=32,
+                                             lo=0.0, hi=1.0),))
+    shapes = {"x": jax.ShapeDtypeStruct((5,), jnp.float32)}
+
+    def fold_one(trace):
+        carry = M.init_telemetry(cfg, shapes)
+        for r in range(trace.shape[0]):
+            carry = M.update_telemetry(cfg, carry, {"x": trace[r]},
+                                       jnp.asarray(r, jnp.int32))
+        return carry
+
+    batched = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[fold_one(t) for t in traces])
+    out = jax.vmap(lambda c: M.finalize_telemetry(cfg, c))(batched)
+    assert out["tel/x/p95"].shape == (3,)
+    for b in range(3):
+        eager = _fold(cfg.specs, traces[b])
+        np.testing.assert_allclose(out["tel/x/p95"][b],
+                                   eager["tel/x/p95"], rtol=1e-6)
+
+
+def test_quantile_spec_validation():
+    with pytest.raises(ValueError, match="bins"):
+        M.MetricSpec("x", "p50", bins=0)
+
+
 def test_default_specs_cover_per_device_metrics():
     """DEFAULT_SPECS must only reference metrics the round body emits
     (the per-device raw leaves), so engine init never KeyErrors."""
