@@ -1,6 +1,7 @@
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test test-all bench-kernels bench bench-engine dev-deps
+.PHONY: test test-all lint contracts check bench-kernels bench \
+	bench-engine bench-jaxpr dev-deps
 
 # tier-1: fast suite (pytest.ini defaults to -m "not slow")
 test:
@@ -10,6 +11,36 @@ test:
 test-all:
 	$(PY) -m pytest -q -m ""
 
+# static analysis, AST layer: the JAX-aware custom linter over the
+# whole tree, then ruff (pyflakes/pycodestyle/isort; pyproject.toml
+# [tool.ruff]) when it is installed — local environments without ruff
+# still get the custom rules, CI always installs it (requirements-dev)
+lint:
+	$(PY) -m repro.analysis src/ benchmarks/ tests/ examples/
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check src benchmarks tests examples; \
+	else \
+		echo "ruff not installed — skipping (pip install -r requirements-dev.txt)"; \
+	fi
+
+# static analysis, jaxpr layer: trace every scenario x {sync,async} x
+# {dense,streaming} chunk and assert the scan-carry contract (stable
+# structure/shapes/dtypes, no f64 leaves, no host callbacks); compare
+# the primitive-count budget against the committed BENCH_jaxpr.json
+contracts:
+	$(PY) -m repro.analysis --contracts --emit-prims /tmp/bench_jaxpr_fresh.json
+	@if [ -n "$$REPRO_SKIP_PRIM_GATE" ]; then \
+		echo "REPRO_SKIP_PRIM_GATE set: contract checks ran, skipping the"; \
+		echo "primitive-budget comparison (counts are (code, jax version)-"; \
+		echo "specific; the pinned static-analysis CI job owns that gate)"; \
+	else \
+		$(PY) -m benchmarks.check_regression BENCH_jaxpr.json \
+			/tmp/bench_jaxpr_fresh.json --spec 'jaxpr_*:n_prims:lower:0.10'; \
+	fi
+
+# the one target CI runs: lint + contracts + tier-1 tests
+check: lint contracts test
+
 # one-command bench-regression smoke: kernel ops + engine rounds/s
 bench-kernels:
 	$(PY) -m benchmarks.run --only kernels
@@ -18,6 +49,11 @@ bench-kernels:
 # emits BENCH_engine.json (ROADMAP perf gate)
 bench-engine:
 	$(PY) -m benchmarks.engine_bench
+
+# refresh the committed jaxpr primitive-count baseline (run after a
+# deliberate round-body change, commit the diff)
+bench-jaxpr:
+	$(PY) -m repro.analysis --contracts --emit-prims BENCH_jaxpr.json
 
 bench:
 	$(PY) -m benchmarks.run

@@ -21,7 +21,13 @@ show the full damage instead of stopping at the first failing group:
 Each `--spec` is KEYS:METRIC:DIRECTION:MAX_DROP — comma-separated
 result keys, the metric name, 'higher' (throughput-like: a drop is bad)
 or 'lower' (wall/compile-like: a rise is bad), and the tolerated
-fractional regression. The legacy single-group flags still work:
+fractional regression. KEYS entries may be fnmatch globs — e.g.
+`'jaxpr_*:n_prims:lower:0.10'` gates every traced contract cell the
+static-analysis job records in BENCH_jaxpr.json without enumerating
+the scenario matrix. A glob expands over *baseline* keys carrying the
+metric (a glob matching nothing is reported and counts as a gate
+failure — a renamed key family must not silently un-gate itself).
+The legacy single-group flags still work:
 
   python -m benchmarks.check_regression BENCH_engine.json \
       /tmp/bench_fresh.json --keys scan_round_S100 --max-drop 0.30
@@ -29,9 +35,10 @@ fractional regression. The legacy single-group flags still work:
 from __future__ import annotations
 
 import argparse
+import fnmatch
 import json
 import sys
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 # (keys or None for all-carrying, metric, direction, max_drop)
 Spec = Tuple[Optional[Sequence[str]], str, str, float]
@@ -56,6 +63,29 @@ def _carries(results, key, metric) -> bool:
     return isinstance(entry, dict) and metric in entry
 
 
+def _expand_keys(keys, base, metric: str):
+    """Expand fnmatch globs in a key list against the baseline's keys
+    (those carrying the metric). Literal keys pass through untouched —
+    their missing-key handling stays warn-and-skip. A glob matching
+    nothing yields a sentinel that `_check_group` fails on."""
+    out = []
+    for k in keys:
+        if any(ch in k for ch in "*?["):
+            hits = sorted(b for b in base
+                          if fnmatch.fnmatch(b, k)
+                          and _carries(base, b, metric))
+            out.extend(hits if hits else [("__unmatched_glob__", k)])
+        else:
+            out.append(k)
+    return out
+
+
+def _fmt(x: float) -> str:
+    """Counts (primitive budgets) print as integers; rates/seconds keep
+    one decimal."""
+    return f"{x:.0f}" if float(x).is_integer() else f"{x:.1f}"
+
+
 def _check_group(base, fresh, keys, metric: str, max_drop: float,
                  direction: str, baseline_path: str,
                  fresh_path: str) -> int:
@@ -64,11 +94,17 @@ def _check_group(base, fresh, keys, metric: str, max_drop: float,
     # ignored; keys present in only one file — or naming a non-dict
     # entry like the scalar `dyn_overhead` — warn-and-skip rather than
     # KeyError, keeping the gate green while baselines lag the code
-    keys = list(keys) if keys else sorted(
+    keys = _expand_keys(keys, base, metric) if keys else sorted(
         k for k in set(base) | set(fresh)
         if _carries(base, k, metric) or _carries(fresh, k, metric))
     failures = 0
     for k in keys:
+        if isinstance(k, tuple):  # glob that matched no baseline key
+            print(f"FAIL {k[1]}.{metric}: glob matches no baseline key "
+                  f"in {baseline_path} — a renamed key family must be "
+                  f"re-gated, not silently dropped")
+            failures += 1
+            continue
         if not _carries(base, k, metric):
             print(f"SKIP {k}.{metric}: not in baseline {baseline_path} "
                   f"(new bench key? refresh the committed baseline to "
@@ -86,8 +122,8 @@ def _check_group(base, fresh, keys, metric: str, max_drop: float,
         status = "OK" if ok else "FAIL"
         if not ok:
             failures += 1
-        print(f"{status} {k}.{metric}: baseline={b:.1f} fresh={f_:.1f} "
-              f"ratio={ratio:.3f} ({bound})")
+        print(f"{status} {k}.{metric}: baseline={_fmt(b)} "
+              f"fresh={_fmt(f_)} ratio={ratio:.3f} ({bound})")
     return failures
 
 

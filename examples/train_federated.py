@@ -10,10 +10,7 @@ import os
 import sys
 sys.path.insert(0, "src")
 
-import jax
-
 from repro.launch.fl_run import run_fl
-from repro.models.fl_models import make_fl_model
 from repro.training import checkpoint
 
 

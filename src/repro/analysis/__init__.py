@@ -1,0 +1,25 @@
+"""Static analysis for the repro engine: JAX-aware AST lint rules and
+a jaxpr-level scan-carry contract checker. See docs/analysis.md."""
+from repro.analysis.lint import (
+    DEFAULT_CONFIG,
+    RULES,
+    Finding,
+    LintConfig,
+    lint_file,
+    lint_paths,
+    lint_source,
+    load_baseline,
+    make_baseline,
+)
+
+__all__ = [
+    "DEFAULT_CONFIG",
+    "RULES",
+    "Finding",
+    "LintConfig",
+    "lint_file",
+    "lint_paths",
+    "lint_source",
+    "load_baseline",
+    "make_baseline",
+]

@@ -1,0 +1,151 @@
+"""CLI for the analysis subsystem.
+
+    python -m repro.analysis src/                 # AST lint layer
+    python -m repro.analysis --contracts          # jaxpr contract layer
+    python -m repro.analysis src/ --contracts     # both
+    python -m repro.analysis --contracts --emit-prims BENCH_jaxpr.json
+
+Exit codes: 0 clean, 1 findings, 2 usage/internal error. `--format
+json` emits a machine-readable report; `--baseline FILE` suppresses
+known findings; `--write-baseline FILE` records the current findings
+as the new suppression set.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis.lint import (
+    RULES,
+    lint_paths,
+    load_baseline,
+    make_baseline,
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX-aware static analysis: AST lint + jaxpr "
+                    "carry-contract checks")
+    ap.add_argument("paths", nargs="*",
+                    help="files/directories to lint (AST layer)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--baseline", default=None,
+                    help="JSON suppression file (see docs/analysis.md)")
+    ap.add_argument("--write-baseline", default=None, metavar="FILE",
+                    help="record current lint findings as the baseline "
+                         "and exit 0")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule subset (default: all); "
+                         f"known: {', '.join(sorted(RULES))}")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule registry and exit")
+    ap.add_argument("--contracts", action="store_true",
+                    help="run the jaxpr carry-contract checker over the "
+                         "scenario x {sync,async} x {dense,streaming} "
+                         "matrix (imports jax; ~10 s)")
+    ap.add_argument("--cells", default=None,
+                    help="restrict --contracts to matching cells: an "
+                         "fnmatch glob when it contains */?/[ (e.g. "
+                         "'sync_*'), else a substring (e.g. "
+                         "'static-paper')")
+    ap.add_argument("--emit-prims", default=None, metavar="FILE",
+                    help="with --contracts: write the per-cell primitive"
+                         "-count budget as BENCH-style JSON for "
+                         "check_regression --spec gating")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name in sorted(RULES):
+            print(f"{name:18s} {RULES[name].doc}")
+        return 0
+
+    if not args.paths and not args.contracts:
+        ap.error("nothing to do: give paths to lint and/or --contracts")
+
+    report = {"findings": [], "contracts": [], "prim_budget": {}}
+    exit_code = 0
+
+    # ------------------------------------------------------ AST layer
+    if args.paths:
+        baseline = load_baseline(args.baseline) if args.baseline else None
+        rules = [r.strip() for r in args.rules.split(",")] \
+            if args.rules else None
+        if rules:
+            unknown = [r for r in rules if r not in RULES]
+            if unknown:
+                ap.error(f"unknown rule(s): {', '.join(unknown)}")
+        findings = lint_paths(args.paths, baseline=baseline, rules=rules)
+        if args.write_baseline:
+            with open(args.write_baseline, "w") as f:
+                json.dump(make_baseline(findings), f, indent=2)
+                f.write("\n")
+            print(f"wrote {len(findings)} suppression(s) to "
+                  f"{args.write_baseline}")
+            return 0
+        report["findings"] = [f.as_dict() for f in findings]
+        if findings:
+            exit_code = 1
+
+    # ---------------------------------------------------- jaxpr layer
+    if args.contracts:
+        # deferred: the AST layer must work without importing jax
+        from repro.analysis.jaxpr_check import (
+            check_contracts,
+            default_matrix,
+            prim_budget_results,
+        )
+        cells = default_matrix()
+        if args.cells:
+            import fnmatch
+
+            from repro.analysis.jaxpr_check import cell_name
+            if any(ch in args.cells for ch in "*?["):
+                cells = [c for c in cells
+                         if fnmatch.fnmatch(cell_name(*c), args.cells)]
+            else:
+                cells = [c for c in cells if args.cells in cell_name(*c)]
+            if not cells:
+                ap.error(f"--cells {args.cells!r} matches no cell")
+        progress = (lambda name: print(f"tracing {name} ...",
+                                       file=sys.stderr)) \
+            if args.format == "text" else None
+        reports = check_contracts(cells, progress=progress)
+        contract_findings = [f for r in reports for f in r.findings]
+        report["contracts"] = [f.as_dict() for f in contract_findings]
+        budget = prim_budget_results(reports)
+        report["prim_budget"] = budget
+        if args.emit_prims:
+            with open(args.emit_prims, "w") as f:
+                json.dump(budget, f, indent=2, sort_keys=True)
+                f.write("\n")
+        if contract_findings:
+            exit_code = 1
+
+    # ----------------------------------------------------------- emit
+    if args.format == "json":
+        json.dump(report, sys.stdout, indent=2)
+        print()
+    else:
+        for f in report["findings"]:
+            print(f"{f['path']}:{f['line']}:{f['col']}: "
+                  f"[{f['rule']}] {f['message']}")
+        for f in report["contracts"]:
+            print(f"[{f['check']}] {f['cell']}: {f['message']}")
+        n_lint = len(report["findings"])
+        n_con = len(report["contracts"])
+        bits = []
+        if args.paths:
+            bits.append(f"{n_lint} lint finding(s)")
+        if args.contracts:
+            n_cells = len(report["prim_budget"].get("results", {}))
+            bits.append(f"{n_con} contract finding(s) across "
+                        f"{n_cells} traced cell(s)")
+        print(("FAIL: " if exit_code else "OK: ") + ", ".join(bits))
+    return exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,573 @@
+"""JAX-aware AST linter — repo-specific hot-path hygiene rules.
+
+Generic linters (ruff's pyflakes/pycodestyle layer) catch dead imports
+and typos; they know nothing about what makes a `jit(scan)` hot path
+slow or silently wrong. This module encodes the invariants PRs 1-7
+established by convention as mechanical AST checks:
+
+  host-item        .item() / .tolist() on a traced value forces a
+                   device->host sync (and a recompile-blocking constant)
+                   inside jitted fleet math.
+  host-asarray     np.asarray / np.array inside traced modules pulls the
+                   array off-device mid-graph.
+  host-cast        float()/int()/bool() wrapped around a jnp expression
+                   concretizes a tracer — TracerConversionError at best,
+                   a silent per-round host sync at worst.
+  host-branch      Python `if`/`while` on a jnp expression branches on a
+                   traced value (ConcretizationTypeError under jit; a
+                   re-trace per value otherwise).
+  bare-print       print() in engine/round/kernel modules — human chatter
+                   must route through `repro.obs.log` so severities
+                   separate and `--quiet` works; machine-readable stdout
+                   contracts carry an explicit `# noqa: bare-print`.
+  jit-static-args  jax.jit/jax.vmap of a function whose signature carries
+                   known-static config arguments without declaring
+                   static_argnames/static_argnums (or in_axes): every
+                   config change silently recompiles (or vmaps a
+                   non-array).
+  f64-literal      float64 dtypes in fleet math — the carry contract is
+                   f32/i32; an f64 leaf doubles carry bytes and upcasts
+                   the REWAFL utility/energy math.
+  pytree-order     a registered pytree class whose tree_flatten children
+                   order diverges from field declaration order —
+                   flatten/unflatten silently permute leaves.
+
+The traced-module set (`LintConfig.traced_prefixes`) scopes the
+host-sync rules to code that actually runs under `jit(scan)`; host-side
+orchestration (engine history drains, obs monitors) legitimately calls
+numpy. Suppressions: inline `# noqa: <rule>` (or `# lint: allow(<rule>)`)
+on the flagged line, or a checked-in baseline file (see `load_baseline`).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------- findings
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    snippet: str = ""
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] " \
+               f"{self.message}"
+
+
+# ---------------------------------------------------------------- config
+
+
+def _norm(path: str) -> str:
+    """Repo-relative module path: everything from the last `repro/` (or
+    `benchmarks/`, `tests/`) component on, so rules match the same way
+    whether the linter is invoked on `src/`, an absolute path, or a
+    test fixture directory mimicking the layout."""
+    p = path.replace(os.sep, "/")
+    for anchor in ("repro/", "benchmarks/", "tests/"):
+        i = p.rfind("/" + anchor)
+        if i >= 0:
+            return p[i + 1:]
+        if p.startswith(anchor):
+            return p
+    return p
+
+
+@dataclasses.dataclass(frozen=True)
+class LintConfig:
+    # modules whose function bodies run inside jit(scan)/pallas traces —
+    # the host-sync rules (host-*) only fire here. sim/devices.py (fleet
+    # builder) and launch/engine.py (host orchestration around the
+    # compiled chunks) are deliberately absent.
+    traced_prefixes: Tuple[str, ...] = (
+        "repro/core/",
+        "repro/kernels/",
+        "repro/sim/dynamics/",
+        "repro/sim/energy.py",
+        "repro/sim/wireless.py",
+    )
+    # modules where bare print() is forbidden (route through obs.log);
+    # the logging implementation itself is exempt.
+    no_print_prefixes: Tuple[str, ...] = ("repro/",)
+    no_print_exempt: Tuple[str, ...] = (
+        "repro/obs/log.py",            # the logging implementation
+        "repro/analysis/__main__.py",  # lint CLI: stdout IS the report
+    )
+    # argument names that are trace-time configuration: jitting/vmapping
+    # a function with one of these in its signature without declaring it
+    # static (or in_axes=None) recompiles per value / maps a non-array.
+    known_static_args: Tuple[str, ...] = (
+        "cfg", "config", "scenario", "method", "mesh", "interpret",
+        "chunk_size", "length", "block_p", "block_q", "block_s",
+        "block_k", "nh", "capacity", "n_lands",
+    )
+
+    def is_traced(self, path: str) -> bool:
+        n = _norm(path)
+        return any(n.startswith(p) for p in self.traced_prefixes)
+
+    def no_print(self, path: str) -> bool:
+        n = _norm(path)
+        return (any(n.startswith(p) for p in self.no_print_prefixes)
+                and n not in self.no_print_exempt)
+
+
+DEFAULT_CONFIG = LintConfig()
+
+# ---------------------------------------------------------------- registry
+
+RuleFn = Callable[[ast.AST, "LintCtx"], List[Finding]]
+RULES: Dict[str, "Rule"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    name: str
+    doc: str
+    fn: RuleFn
+
+
+def rule(name: str, doc: str):
+    def deco(fn: RuleFn) -> RuleFn:
+        RULES[name] = Rule(name, doc, fn)
+        return fn
+    return deco
+
+
+@dataclasses.dataclass
+class LintCtx:
+    path: str
+    lines: List[str]
+    config: LintConfig
+
+    def finding(self, name: str, node: ast.AST, message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        snippet = self.lines[line - 1].strip() if line <= len(self.lines) \
+            else ""
+        return Finding(name, self.path, line, col, message, snippet)
+
+
+# ------------------------------------------------------------- AST helpers
+
+
+def _attr_chain(node: ast.AST) -> str:
+    """Dotted name of an Attribute/Name chain ('' when not a chain)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+_NP_ROOTS = ("np", "numpy", "onp")
+_JNP_ROOTS = ("jnp", "jax.numpy")
+
+# jnp/jax helpers that return *host* values (dtype queries, static
+# shapes) — branching on them is trace-time dispatch, not a host sync.
+_HOST_OK_FNS = frozenset({
+    "issubdtype", "isdtype", "iinfo", "finfo", "result_type", "dtype",
+    "ndim", "shape", "size", "tree_structure", "treedef_is_leaf",
+    "default_backend", "devices", "device_count", "local_device_count",
+    "process_index", "process_count",
+})
+
+
+def _jnp_calls(node: ast.AST):
+    """Calls on jnp/jax roots inside `node` that yield traced arrays."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            chain = _attr_chain(sub.func)
+            if not chain:
+                continue
+            root = chain.split(".")[0]
+            leaf = chain.split(".")[-1]
+            if root in ("jnp", "jax") and leaf not in _HOST_OK_FNS:
+                yield sub, chain
+
+
+# ------------------------------------------------------------------- rules
+
+
+@rule("host-item",
+      ".item()/.tolist() on a traced value syncs device->host inside "
+      "the hot path")
+def _r_host_item(tree: ast.AST, ctx: LintCtx) -> List[Finding]:
+    if not ctx.config.is_traced(ctx.path):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call) and not node.args
+                and not node.keywords
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in ("item", "tolist")):
+            out.append(ctx.finding(
+                "host-item", node,
+                f".{node.func.attr}() forces a device->host transfer; "
+                f"keep the value on device (0-d arrays compare/compute "
+                f"fine) or move the read outside the traced path"))
+    return out
+
+
+@rule("host-asarray",
+      "np.asarray/np.array in a traced module pulls arrays to the host "
+      "mid-graph")
+def _r_host_asarray(tree: ast.AST, ctx: LintCtx) -> List[Finding]:
+    if not ctx.config.is_traced(ctx.path):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            chain = _attr_chain(node.func)
+            if chain and chain.split(".")[0] in _NP_ROOTS and \
+                    chain.split(".")[-1] in ("asarray", "array"):
+                out.append(ctx.finding(
+                    "host-asarray", node,
+                    f"{chain}() materialises on the host; use jnp."
+                    f"{chain.split('.')[-1]} (stays traced) or hoist the "
+                    f"conversion out of the traced module"))
+    return out
+
+
+@rule("host-cast",
+      "float()/int()/bool() around a jnp expression concretizes a "
+      "tracer (host sync / trace error)")
+def _r_host_cast(tree: ast.AST, ctx: LintCtx) -> List[Finding]:
+    if not ctx.config.is_traced(ctx.path):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id in ("float", "int", "bool")
+                and len(node.args) == 1):
+            hits = list(_jnp_calls(node.args[0]))
+            if hits:
+                out.append(ctx.finding(
+                    "host-cast", node,
+                    f"{node.func.id}({hits[0][1]}(...)) concretizes a "
+                    f"traced value; use .astype / jnp casts and keep the "
+                    f"scalar on device"))
+    return out
+
+
+@rule("host-branch",
+      "Python if/while on a jnp expression branches on a traced value "
+      "(use lax.cond/lax.while_loop/jnp.where)")
+def _r_host_branch(tree: ast.AST, ctx: LintCtx) -> List[Finding]:
+    if not ctx.config.is_traced(ctx.path):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.If, ast.While)):
+            hits = list(_jnp_calls(node.test))
+            if hits:
+                kw = "if" if isinstance(node, ast.If) else "while"
+                out.append(ctx.finding(
+                    "host-branch", node,
+                    f"`{kw}` on {hits[0][1]}(...) branches on a traced "
+                    f"value — under jit this is a ConcretizationTypeError"
+                    f"; use lax.cond / lax.while_loop / jnp.where"))
+    return out
+
+
+@rule("bare-print",
+      "print() in engine/round/kernel modules — route human output "
+      "through repro.obs.log")
+def _r_bare_print(tree: ast.AST, ctx: LintCtx) -> List[Finding]:
+    if not ctx.config.no_print(ctx.path):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id == "print"):
+            out.append(ctx.finding(
+                "bare-print", node,
+                "bare print(): use repro.obs.log (get_logger(__name__)."
+                "info/...) so --quiet/-v and CI severity filtering work; "
+                "machine-readable stdout contracts take `# noqa: "
+                "bare-print`"))
+    return out
+
+
+def _local_funcs(tree: ast.AST) -> Dict[str, ast.AST]:
+    """Name -> def for every function defined anywhere in the module."""
+    return {n.name: n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def _params(fn: ast.AST) -> List[str]:
+    a = fn.args
+    names = [p.arg for p in
+             list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)]
+    return names
+
+
+@rule("jit-static-args",
+      "jax.jit/jax.vmap over a function with known-static config args "
+      "and no static_argnames/in_axes declaration")
+def _r_jit_static(tree: ast.AST, ctx: LintCtx) -> List[Finding]:
+    funcs = _local_funcs(tree)
+    known = set(ctx.config.known_static_args)
+    out = []
+
+    def check_target(call: ast.Call, target: ast.AST, kind: str):
+        # resolve the wrapped callable's parameter names
+        if isinstance(target, ast.Lambda):
+            names = [p.arg for p in target.args.args]
+        elif isinstance(target, ast.Name) and target.id in funcs:
+            names = _params(funcs[target.id])
+        else:
+            return  # unresolvable — don't guess
+        statics = [n for n in names if n in known]
+        if not statics:
+            return
+        kws = {k.arg for k in call.keywords}
+        ok = {"jit": {"static_argnames", "static_argnums"},
+              "vmap": {"in_axes"}}[kind]
+        if kws & ok:
+            return
+        decl = ("static_argnames" if kind == "jit" else "in_axes=...None")
+        out.append(ctx.finding(
+            "jit-static-args", call,
+            f"jax.{kind} of a function taking config argument(s) "
+            f"{statics} without {decl}: every config value change "
+            f"silently {'recompiles' if kind == 'jit' else 'maps a non-array'}"))
+
+    for node in ast.walk(tree):
+        # direct call form: jax.jit(f, ...) / jax.vmap(f, ...)
+        if isinstance(node, ast.Call):
+            chain = _attr_chain(node.func)
+            if chain in ("jax.jit", "jit", "jax.vmap", "vmap") \
+                    and node.args:
+                check_target(node, node.args[0],
+                             "jit" if chain.endswith("jit") else "vmap")
+        # decorator form: @jax.jit  /  @partial(jax.jit, ...) handles
+        # static_argnames in the partial call's keywords
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                chain = _attr_chain(dec)
+                if chain in ("jax.jit", "jit"):
+                    statics = [n for n in _params(node) if n in known]
+                    if statics:
+                        out.append(ctx.finding(
+                            "jit-static-args", dec,
+                            f"@jax.jit on {node.name}({', '.join(statics)}"
+                            f", ...) without static_argnames — every "
+                            f"config value change silently recompiles"))
+                elif (isinstance(dec, ast.Call)
+                      and _attr_chain(dec.func) in ("functools.partial",
+                                                    "partial")
+                      and dec.args
+                      and _attr_chain(dec.args[0]) in ("jax.jit", "jit")):
+                    statics = [n for n in _params(node) if n in known]
+                    kws = {k.arg for k in dec.keywords}
+                    if statics and not (kws & {"static_argnames",
+                                               "static_argnums"}):
+                        out.append(ctx.finding(
+                            "jit-static-args", dec,
+                            f"partial(jax.jit) on {node.name} leaves "
+                            f"config argument(s) {statics} traced — "
+                            f"declare static_argnames"))
+    return out
+
+
+_F64_STRINGS = ("float64", "f8", ">f8", "<f8", "double")
+_DTYPE_CALLS = ("asarray", "array", "astype", "full", "zeros", "ones",
+                "arange", "linspace", "empty")
+
+
+@rule("f64-literal",
+      "float64 dtype in fleet math — the carry contract is f32/i32")
+def _r_f64(tree: ast.AST, ctx: LintCtx) -> List[Finding]:
+    if not ctx.config.is_traced(ctx.path):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        chain = _attr_chain(node) if isinstance(node, ast.Attribute) else ""
+        if chain and chain.split(".")[-1] == "float64" and \
+                chain.split(".")[0] in _NP_ROOTS + ("jnp", "jax"):
+            out.append(ctx.finding(
+                "f64-literal", node,
+                f"{chain} in traced fleet math: the scan carry contract "
+                f"is f32/i32 (an f64 leaf doubles carry bytes and "
+                f"upcasts the utility/energy math)"))
+        if isinstance(node, ast.Call):
+            cchain = _attr_chain(node.func)
+            in_dtype_call = cchain.split(".")[-1] in _DTYPE_CALLS \
+                if cchain else False
+            for kw in node.keywords:
+                if kw.arg == "dtype":
+                    if isinstance(kw.value, ast.Constant) and \
+                            kw.value.value in _F64_STRINGS:
+                        out.append(ctx.finding(
+                            "f64-literal", kw.value,
+                            f'dtype="{kw.value.value}" in traced fleet '
+                            f"math — use jnp.float32"))
+                    if isinstance(kw.value, ast.Name) and \
+                            kw.value.id == "float":
+                        out.append(ctx.finding(
+                            "f64-literal", kw.value,
+                            "dtype=float is float64 on the host side — "
+                            "use jnp.float32"))
+            if in_dtype_call:
+                for a in node.args:
+                    if isinstance(a, ast.Constant) and \
+                            a.value in _F64_STRINGS:
+                        out.append(ctx.finding(
+                            "f64-literal", a,
+                            f'"{a.value}" dtype in traced fleet math — '
+                            f"use jnp.float32"))
+    return out
+
+
+@rule("pytree-order",
+      "tree_flatten children order diverges from field declaration "
+      "order — flatten/unflatten silently permute leaves")
+def _r_pytree_order(tree: ast.AST, ctx: LintCtx) -> List[Finding]:
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        flatten = next((m for m in node.body
+                        if isinstance(m, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef))
+                        and m.name == "tree_flatten"), None)
+        if flatten is None:
+            continue
+        declared = [s.target.id for s in node.body
+                    if isinstance(s, ast.AnnAssign)
+                    and isinstance(s.target, ast.Name)]
+        if not declared:
+            continue
+        # children = first element of the returned (children, aux) pair
+        for ret in ast.walk(flatten):
+            if not (isinstance(ret, ast.Return)
+                    and isinstance(ret.value, (ast.Tuple, ast.List))
+                    and ret.value.elts
+                    and isinstance(ret.value.elts[0],
+                                   (ast.Tuple, ast.List))):
+                continue
+            children = []
+            for e in ret.value.elts[0].elts:
+                if (isinstance(e, ast.Attribute)
+                        and isinstance(e.value, ast.Name)
+                        and e.value.id == "self"):
+                    children.append(e.attr)
+            fields = [c for c in children if c in declared]
+            expected = [d for d in declared if d in fields]
+            if fields != expected:
+                out.append(ctx.finding(
+                    "pytree-order", ret,
+                    f"{node.name}.tree_flatten children order {fields} "
+                    f"diverges from declaration order {expected}: "
+                    f"unflatten round-trips will permute leaves"))
+    return out
+
+
+# ------------------------------------------------------------ suppressions
+
+_NOQA_RE = re.compile(
+    r"#\s*(?:noqa:\s*(?P<noqa>[\w,\- ]+)|lint:\s*allow\((?P<allow>[\w,\- ]+)\))")
+
+
+def _inline_suppressed(finding: Finding, lines: List[str]) -> bool:
+    if finding.line > len(lines):
+        return False
+    m = _NOQA_RE.search(lines[finding.line - 1])
+    if not m:
+        return False
+    names = (m.group("noqa") or m.group("allow") or "")
+    allowed = {n.strip() for n in names.split(",")}
+    return finding.rule in allowed or "all" in allowed
+
+
+def load_baseline(path: str) -> List[Dict]:
+    with open(path) as f:
+        data = json.load(f)
+    return data.get("entries", []) if isinstance(data, dict) else data
+
+
+def baseline_suppressed(finding: Finding, entries: Sequence[Dict]) -> bool:
+    """An entry suppresses by (rule, path[, line content]) — content
+    matching survives line-number drift; an entry without `line_content`
+    suppresses the rule for the whole file."""
+    n = _norm(finding.path)
+    for e in entries:
+        if e.get("rule") != finding.rule:
+            continue
+        if _norm(e.get("path", "")) != n:
+            continue
+        want = e.get("line_content")
+        if want is None or want.strip() == finding.snippet:
+            return True
+    return False
+
+
+def make_baseline(findings: Sequence[Finding]) -> Dict:
+    return {"version": 1, "entries": [
+        {"rule": f.rule, "path": _norm(f.path), "line_content": f.snippet}
+        for f in findings]}
+
+
+# ------------------------------------------------------------ entry points
+
+
+def lint_source(source: str, path: str,
+                config: LintConfig = DEFAULT_CONFIG,
+                rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint one file's text. `rules` restricts to a subset by name."""
+    tree = ast.parse(source, filename=path)
+    lines = source.splitlines()
+    ctx = LintCtx(path=path, lines=lines, config=config)
+    active = [RULES[r] for r in rules] if rules else list(RULES.values())
+    findings: List[Finding] = []
+    for r in active:
+        findings.extend(r.fn(tree, ctx))
+    findings = [f for f in findings if not _inline_suppressed(f, lines)]
+    return sorted(findings, key=lambda f: (f.path, f.line, f.col, f.rule))
+
+
+def lint_file(path: str, config: LintConfig = DEFAULT_CONFIG,
+              rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    with open(path) as f:
+        return lint_source(f.read(), path, config, rules)
+
+
+def iter_py_files(paths: Sequence[str]):
+    for p in paths:
+        if os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = [d for d in dirs
+                           if d not in ("__pycache__", ".git")]
+                for fn in sorted(files):
+                    if fn.endswith(".py"):
+                        yield os.path.join(root, fn)
+        elif p.endswith(".py"):
+            yield p
+
+
+def lint_paths(paths: Sequence[str], config: LintConfig = DEFAULT_CONFIG,
+               baseline: Optional[Sequence[Dict]] = None,
+               rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    findings: List[Finding] = []
+    for path in iter_py_files(paths):
+        findings.extend(lint_file(path, config, rules))
+    if baseline:
+        findings = [f for f in findings
+                    if not baseline_suppressed(f, baseline)]
+    return findings

@@ -25,7 +25,7 @@ Method dispatch has two flavours sharing this one body:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,7 @@ All generators are deterministic in their seed and produce numpy arrays
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Tuple
 
 import numpy as np
 

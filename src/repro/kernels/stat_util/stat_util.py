@@ -17,8 +17,8 @@ BLOCK_S = 128
 
 def _kernel(l_ref, sz_ref, o_ref):
     # l_ref: (BLOCK_S, n); sz_ref: (BLOCK_S, 1); o_ref: (BLOCK_S,)
-    l = l_ref[...].astype(jnp.float32)
-    msq = jnp.mean(l * l, axis=-1)
+    lv = l_ref[...].astype(jnp.float32)
+    msq = jnp.mean(lv * lv, axis=-1)
     out = sz_ref[...][:, 0].astype(jnp.float32) * jnp.sqrt(
         jnp.maximum(msq, 0.0))
     o_ref[...] = out

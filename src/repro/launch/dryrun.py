@@ -32,10 +32,13 @@ def main() -> None:
 
     from repro.configs.base import INPUT_SHAPES, list_archs
     from repro.launch import dryrun_lib
+    from repro.obs.log import get_logger
+
+    log = get_logger(__name__)
 
     if args.list:
         for a in list_archs():
-            print(a)
+            print(a)  # noqa: bare-print — `--list` stdout is scriptable
         return
 
     pairs = []
@@ -60,7 +63,8 @@ def main() -> None:
                 with open(p) as f:
                     prev = json.load(f)
                 if prev.get("status") in ("ok", "skipped"):
-                    print(f"[done] {arch:18s} {shape:12s} {mesh_name}")
+                    log.info("[done] %-18s %-12s %s", arch, shape,
+                             mesh_name)
                     continue
         t0 = time.time()
         rec = dryrun_lib.run_pair(arch, shape, multi_pod=mp,
@@ -74,19 +78,17 @@ def main() -> None:
         if st == "ok":
             m = rec["memory"]
             r = rec["roofline"]
-            print(f"[ok]   {arch:18s} {shape:12s} {mesh_name:8s} "
-                  f"{dt:6.1f}s  peak={m['peak_bytes']/2**30:7.2f}GiB  "
-                  f"dom={r['dominant']:13s} "
-                  f"t_bound={r['step_time_lower_bound_s']:.4g}s")
-            sys.stdout.flush()
+            log.info("[ok]   %-18s %-12s %-8s %6.1fs  peak=%7.2fGiB  "
+                     "dom=%-13s t_bound=%.4gs", arch, shape, mesh_name,
+                     dt, m["peak_bytes"] / 2**30, r["dominant"],
+                     r["step_time_lower_bound_s"])
         elif st == "skipped":
-            print(f"[skip] {arch:18s} {shape:12s} {mesh_name}: "
-                  f"{rec['reason'][:70]}")
+            log.info("[skip] %-18s %-12s %s: %s", arch, shape,
+                     mesh_name, rec["reason"][:70])
         else:
-            print(f"[ERR]  {arch:18s} {shape:12s} {mesh_name}: "
-                  f"{rec['error'][:200]}")
-        sys.stdout.flush()
-    print(f"done: ok={n_ok} skipped={n_skip} errors={n_err}")
+            log.error("[ERR]  %-18s %-12s %s: %s", arch, shape,
+                      mesh_name, rec["error"][:200])
+    log.info("done: ok=%d skipped=%d errors=%d", n_ok, n_skip, n_err)
     if n_err:
         sys.exit(1)
 

@@ -13,7 +13,6 @@ For each pair we:
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import time
@@ -23,15 +22,16 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import (ArchCfg, INPUT_SHAPES, get_config, input_specs,
-                                list_archs, model_flops, param_count,
-                                active_param_count)
+from repro.configs.base import (INPUT_SHAPES, ArchCfg, active_param_count,
+                                get_config, input_specs, model_flops,
+                                param_count)
 from repro.launch import hlo_costs
 from repro.launch.mesh import make_shard_cfg
 from repro.models.api import get_model_api
-from repro.nn.sharding import ShardCfg, as_shardings, infer_param_specs
+from repro.nn.sharding import ShardCfg, infer_param_specs
 from repro.training import optim
 from repro.training.train import make_prefill_step, make_serve_step, make_train_step
 

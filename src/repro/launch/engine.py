@@ -726,7 +726,10 @@ def run_campaign_batch(model: FLModel, fleet: DeviceFleet, cx, cy,
 
     params, state, env, keys = _campaign_init(model, fleet, cfg, seeds,
                                               scenario, per_seed_fleets)
-    cell = lambda t: jax.tree.map(lambda x: x[0], t)
+
+    def cell(t):
+        return jax.tree.map(lambda x: x[0], t)
+
     astate = None
     if is_async:
         S = state.residual_energy.shape[-1]
@@ -931,12 +934,17 @@ def _run_grid_batched(model: FLModel, fleet: DeviceFleet, cx, cy,
                                               scenario, per_seed_fleets)
     # every method starts from the same per-seed init: tile the (B, ...)
     # carry leaves to (M·B, ...) cells
-    tile = lambda t: jax.tree.map(
-        lambda x: jnp.broadcast_to(x, (M,) + x.shape).reshape(
-            (M * B,) + x.shape[1:]), t)
+    def tile(t):
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (M,) + x.shape).reshape(
+                (M * B,) + x.shape[1:]), t)
+
     params, state, env, keys = (tile(params), tile(state), tile(env),
                                 tile(keys))
-    cell = lambda t: jax.tree.map(lambda x: x[0], t)
+
+    def cell(t):
+        return jax.tree.map(lambda x: x[0], t)
+
     astate = None
     if any_async:
         S = state.residual_energy.shape[-1]

@@ -29,16 +29,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import FLConfig, METHODS, init_fleet_state, make_eval_fn, make_round_fn
+from repro.core import (METHODS, FLConfig, init_fleet_state, make_eval_fn,
+                        make_round_fn)
 from repro.data.partition import client_datasets
+from repro.data.synthetic import (make_char_dataset, make_har_dataset,
+                                  make_image_dataset)
+from repro.models.fl_models import make_fl_model
 from repro.obs.health import HealthCfg, HealthReport, format_health_table
 from repro.obs.log import configure_logging, get_logger
 from repro.obs.trace import Tracer, format_span_table, tracing
-from repro.sim.dynamics import SCENARIOS, get_scenario, init_env_state
-from repro.data.synthetic import (CHAR_VOCAB, make_char_dataset,
-                                  make_har_dataset, make_image_dataset)
-from repro.models.fl_models import make_fl_model
 from repro.sim.devices import build_fleet
+from repro.sim.dynamics import SCENARIOS, get_scenario, init_env_state
 
 log = get_logger(__name__)
 
@@ -485,7 +486,7 @@ def main() -> None:
         log.info("trace written to %s", args.trace)
     if res.health is not None:
         log.info("%s", format_health_table(res.health))
-    print(json.dumps({
+    print(json.dumps({  # noqa: bare-print — stdout JSON is the machine contract
         "task": res.task, "method": res.method,
         "scenario": args.scenario, "telemetry": args.telemetry,
         "aggregation": args.aggregation,

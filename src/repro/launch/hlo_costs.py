@@ -21,7 +21,6 @@ appropriate (collective bytes are per-device link traffic already).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, List, Optional, Tuple
 
@@ -192,7 +191,6 @@ def analyze_hlo(hlo: str) -> HloCosts:
                     fused.add(m.group(1))
 
     costs = HloCosts()
-    visited_pairs = set()
 
     def walk(comp: str, mult: float):
         # a computation may be visited multiple times with different mults

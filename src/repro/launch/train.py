@@ -15,11 +15,10 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
-from repro.models import get_model_api
 from repro.nn.sharding import UNSHARDED
+from repro.obs.log import get_logger
 from repro.training import checkpoint
 from repro.training.optim import for_config
 from repro.training.train import init_train_state, make_train_step
@@ -55,14 +54,14 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
-    api = get_model_api(cfg)
+    log = get_logger(__name__)
     opt = for_config(cfg.optimizer, args.lr)
     step_fn = jax.jit(make_train_step(cfg, UNSHARDED, opt), donate_argnums=(0, 1))
     key = jax.random.PRNGKey(0)
     params, opt_state, step = init_train_state(key, cfg, UNSHARDED, opt)
     n = sum(int(p.size) for p in jax.tree.leaves(params))
-    print(f"training {cfg.name}: {n/1e6:.1f}M params, "
-          f"{args.steps} steps @ batch {args.batch} × seq {args.seq}")
+    log.info("training %s: %.1fM params, %d steps @ batch %d × seq %d",
+             cfg.name, n / 1e6, args.steps, args.batch, args.seq)
 
     losses = []
     t0 = time.time()
@@ -73,15 +72,15 @@ def main() -> None:
             params, opt_state, step, batch)
         losses.append(float(loss))
         if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
-            print(f"  step {i:4d}  loss {losses[-1]:.4f}")
+            log.info("  step %4d  loss %.4f", i, losses[-1])
     dt = time.time() - t0
-    print(f"{args.steps} steps in {dt:.1f}s "
-          f"({args.steps*args.batch*args.seq/dt:.0f} tok/s); "
-          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    log.info("%d steps in %.1fs (%.0f tok/s); loss %.3f -> %.3f",
+             args.steps, dt, args.steps * args.batch * args.seq / dt,
+             losses[0], losses[-1])
     assert losses[-1] < losses[0], "training did not reduce loss"
     if args.ckpt:
         checkpoint.save(args.ckpt, params)
-        print(f"saved {args.ckpt}")
+        log.info("saved %s", args.ckpt)
 
 
 if __name__ == "__main__":

@@ -2,13 +2,10 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict
-
-import jax
+from typing import Callable
 
 from repro.configs.base import ArchCfg
 from repro.models import lm
-from repro.nn.sharding import ShardCfg
 
 
 @dataclasses.dataclass(frozen=True)

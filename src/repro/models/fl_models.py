@@ -10,7 +10,6 @@ Uniform FL-model API (used by repro.core's round loop):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable, Tuple
 
 import jax

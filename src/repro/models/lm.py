@@ -20,14 +20,15 @@ for zamba2's windowed shared attention).
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchCfg
 from repro.nn import attention as attn
-from repro.nn import layers, ssm, transformer as tf, xlstm
+from repro.nn import layers, ssm, xlstm
+from repro.nn import transformer as tf
 from repro.nn.sharding import ShardCfg, shard_act
 
 LB_COEF = 0.01
@@ -178,7 +179,6 @@ def moe_init(key, cfg: ArchCfg, sc: ShardCfg):
 
 
 def _moe_backbone(params, x, cfg: ArchCfg, sc: ShardCfg):
-    aux_tot = jnp.zeros((), jnp.float32)
     if "prefix_stack" in params:
         x, _ = tf.stack_apply(params["prefix_stack"], x, cfg, sc,
                               use_moe=False, windows=None)
@@ -199,7 +199,6 @@ def moe_loss(params, batch, cfg: ArchCfg, sc: ShardCfg):
 
 def moe_prefill(params, batch, cfg: ArchCfg, sc: ShardCfg):
     x = _embed(params, batch["tokens"], cfg)
-    m = cfg.moe
     pre_caches = None
     if "prefix_stack" in params:
         x, pre_caches = tf.stack_prefill(params["prefix_stack"], x, cfg, sc,

@@ -10,14 +10,14 @@ them. Positions are sinusoidal for both encoder (faithful) and decoder
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchCfg
 from repro.nn import attention as attn
-from repro.nn import layers, transformer as tf
+from repro.nn import layers
+from repro.nn import transformer as tf
 from repro.nn.sharding import ShardCfg, shard_act
 
 

@@ -8,7 +8,7 @@ param dtype with fp32 accumulation where it matters (norms, softmax, loss).
 from __future__ import annotations
 
 import math
-from typing import Optional, Sequence
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -22,8 +22,6 @@ from __future__ import annotations
 import dataclasses
 import inspect
 import math
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -17,11 +17,11 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any, Optional, Sequence
+from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
 
 
 @dataclasses.dataclass(frozen=True)

@@ -14,16 +14,15 @@ Three execution modes per stack:
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchCfg
 from repro.nn import attention as attn
-from repro.nn import layers, moe as moe_lib
+from repro.nn import layers
+from repro.nn import moe as moe_lib
 from repro.nn.sharding import ShardCfg, axis_if_divisible, shard_act
 
 

@@ -8,7 +8,7 @@ configs where fp32 Adam state would not fit 512 × 16 GB alongside params
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

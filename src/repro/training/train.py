@@ -6,15 +6,13 @@ KV/recurrent cache of seq_len).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
-
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchCfg
-from repro.models.api import ModelAPI, get_model_api
+from repro.models.api import get_model_api
 from repro.nn.sharding import ShardCfg, constrain_params
-from repro.training.optim import Optimizer, for_config
+from repro.training.optim import Optimizer
 
 
 def make_train_step(cfg: ArchCfg, sc: ShardCfg, optimizer: Optimizer):

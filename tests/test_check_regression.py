@@ -144,3 +144,57 @@ def test_check_specs_all_green(tmp_path):
     assert check_specs(base, fresh,
                        [(None, "device_rounds_s", "higher", 0.30),
                         (None, "compile_s", "lower", 0.75)]) == 0
+
+
+# ------------------------------------------------------------ glob KEYS
+# ISSUE 8: the static-analysis job gates every `jaxpr_*` primitive-count
+# row with one spec instead of enumerating the scenario matrix.
+
+@pytest.fixture()
+def jaxpr_paths(tmp_path):
+    base = _write(tmp_path, "jb.json", {
+        "jaxpr_sync_dense_static-paper": {"n_prims": 844},
+        "jaxpr_async_dense_static-paper": {"n_prims": 1117},
+        "scan_round_S100": {"device_rounds_s": 400.0}})
+    fresh = _write(tmp_path, "jf.json", {
+        "jaxpr_sync_dense_static-paper": {"n_prims": 850},   # +0.7%: OK
+        "jaxpr_async_dense_static-paper": {"n_prims": 1400},  # +25%: FAIL
+        "scan_round_S100": {"device_rounds_s": 395.0}})
+    return base, fresh
+
+
+def test_glob_expands_over_baseline_keys(jaxpr_paths, capsys):
+    base, fresh = jaxpr_paths
+    assert check_specs(base, fresh,
+                       [(["jaxpr_*"], "n_prims", "lower", 0.10)]) == 1
+    out = capsys.readouterr().out
+    assert "OK jaxpr_sync_dense_static-paper.n_prims" in out
+    assert "FAIL jaxpr_async_dense_static-paper.n_prims" in out
+    # the glob must not drag unrelated keys into the group
+    assert "scan_round_S100" not in out
+
+
+def test_glob_prints_integer_counts(jaxpr_paths, capsys):
+    """Primitive budgets are counts — `baseline=844`, not `844.0`."""
+    base, fresh = jaxpr_paths
+    check_specs(base, fresh, [(["jaxpr_*"], "n_prims", "lower", 0.10)])
+    out = capsys.readouterr().out
+    assert "baseline=844 fresh=850" in out
+
+
+def test_glob_matching_nothing_fails_loudly(jaxpr_paths, capsys):
+    """A renamed key family must re-gate itself, not silently pass."""
+    base, fresh = jaxpr_paths
+    assert check_specs(base, fresh,
+                       [(["renamed_*"], "n_prims", "lower", 0.10)]) == 1
+    assert "glob matches no baseline key" in capsys.readouterr().out
+
+
+def test_literal_keys_keep_warn_and_skip(jaxpr_paths, capsys):
+    """Globs fail-loud on zero matches; literal keys keep the legacy
+    warn-and-skip so lagging baselines don't break unrelated gates."""
+    base, fresh = jaxpr_paths
+    assert check_specs(base, fresh,
+                       [(["jaxpr_not_yet_recorded"], "n_prims",
+                         "lower", 0.10)]) == 0
+    assert "SKIP jaxpr_not_yet_recorded" in capsys.readouterr().out

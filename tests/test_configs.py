@@ -3,8 +3,8 @@ verified against real init shapes on reduced variants."""
 import jax
 import pytest
 
-from repro.configs import (ARCH_REGISTRY, get_config, input_specs,
-                           list_archs, param_count, model_flops)
+from repro.configs import (get_config, input_specs, list_archs,
+                           model_flops, param_count)
 from repro.configs.base import INPUT_SHAPES
 from repro.models import get_model_api
 from repro.nn.sharding import UNSHARDED

@@ -16,13 +16,13 @@ from repro.launch import engine as eng
 from repro.launch.fl_run import build_task, run_fl
 from repro.models.fl_models import make_fl_model
 from repro.sim.devices import build_fleet
-from repro.sim.dynamics import (SCENARIOS, Scenario, get_scenario,
-                                init_env_state, step_env)
+from repro.sim.dynamics import (SCENARIOS, get_scenario, init_env_state,
+                                step_env)
 from repro.sim.dynamics.battery import charge_and_drain, plug_step
+from repro.sim.dynamics.channel import channel_step, effective_rate_mean
 from repro.sim.dynamics.diurnal import (day_of_week, diurnal_markov_step,
                                         is_weekend, night_weight,
                                         time_of_day)
-from repro.sim.dynamics.channel import channel_step, effective_rate_mean
 
 N, K = 10, 4
 

@@ -4,7 +4,6 @@ handle partial trailing chunks and early-stop truncation, survive
 rounds=0 finalize, and keep every metric's dtype/shape bit-for-bit
 (ISSUE 5 satellite)."""
 import numpy as np
-import pytest
 
 from repro.launch.engine import _HostHistory
 

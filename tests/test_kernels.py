@@ -5,9 +5,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.fedavg import fedavg as fa_k, ops as fa_ops, ref as fa_ref
-from repro.kernels.flash_attention import flash_attention as fl_k, ref as fl_ref
-from repro.kernels.stat_util import ops as su_ops, ref as su_ref, stat_util as su_k
+from repro.kernels.fedavg import fedavg as fa_k
+from repro.kernels.fedavg import ops as fa_ops
+from repro.kernels.fedavg import ref as fa_ref
+from repro.kernels.flash_attention import flash_attention as fl_k
+from repro.kernels.flash_attention import ref as fl_ref
+from repro.kernels.stat_util import ops as su_ops
+from repro.kernels.stat_util import ref as su_ref
 
 
 # ------------------------------------------------------------- fedavg ----

@@ -7,7 +7,6 @@ import pytest
 
 from repro.nn import attention as A
 from repro.nn import moe, ssm, xlstm
-from repro.nn.sharding import UNSHARDED
 
 
 @pytest.fixture(scope="module")

@@ -3,9 +3,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.data.synthetic import (make_char_dataset, make_har_dataset,
-                                  make_image_dataset, CHAR_VOCAB)
-from repro.sim.devices import DEVICE_CATALOG, build_fleet
+from repro.data.synthetic import (CHAR_VOCAB, make_char_dataset,
+                                  make_har_dataset, make_image_dataset)
+from repro.sim.devices import build_fleet
 from repro.sim.energy import round_costs
 from repro.sim.wireless import sample_rates
 
