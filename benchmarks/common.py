@@ -184,7 +184,12 @@ def cached_run(task: str, method: str, *, rounds: int = 50,
 
 PER_SEED_KEYS = ("final_loss", "final_acc", "reached_round",
                  "dropout_ratio", "overall_latency_h", "overall_energy_kj",
-                 "energy_kj", "mean_H_final")
+                 "energy_kj", "mean_H_final", "fault_rate")
+
+# per-round chaos counters a faulted scenario streams into the grid
+# history (sim.faults gates; absent — and identically zero — on clean
+# scenarios, where the chaos layer traces no ops at all)
+FAULT_COUNT_KEYS = ("n_aborted", "n_lost", "n_corrupted", "n_straggler")
 
 
 def _summarize_method(h: Dict[str, np.ndarray], n_clients: int,
@@ -212,6 +217,13 @@ def _summarize_method(h: Dict[str, np.ndarray], n_clients: int,
     # mirroring run_rounds' early stop); never-reached seeds use the
     # full campaign, like cached_run when the target is missed
     stop = np.where(reached >= 0, reached, R - 1)
+    # fault rate: injected fault events per participant-round, the
+    # Table-1 chaos column (0.0 on clean scenarios — no gates traced)
+    present = [k for k in FAULT_COUNT_KEYS if k in h]
+    faults = (np.sum([np.asarray(h[k], np.float64) for k in present],
+                     axis=0) if present else np.zeros((B, R)))
+    npart = np.asarray(h.get("n_participating", np.ones((B, R))),
+                       np.float64)
     per_seed: Dict[str, List] = {k: [] for k in PER_SEED_KEYS}
     for b in range(B):
         s = int(stop[b])
@@ -226,6 +238,9 @@ def _summarize_method(h: Dict[str, np.ndarray], n_clients: int,
             float(en[b, :s + 1].sum()) / 1e3)
         per_seed["energy_kj"].append(float(en[b].sum()) / 1e3)
         per_seed["mean_H_final"].append(float(mh[b, s]))
+        per_seed["fault_rate"].append(
+            float(faults[b, :s + 1].sum())
+            / max(float(npart[b, :s + 1].sum()), 1.0))
     if "tel/selected/count" in h:    # streaming reducer outputs (v=8)
         sel_count = np.asarray(h["tel/selected/count"], np.int64)
         H_final = np.asarray(h["tel/H/last"], np.int64)
@@ -317,7 +332,7 @@ def cached_campaign_grid(task: str, methods, seeds=GRID_SEEDS, *,
     target = TARGETS[task] if target_acc is None else target_acc
     base = dict(task=task, seeds=seeds, rounds=rounds, lam=lam,
                 alpha=alpha, beta=beta, n=n_clients, chunk=chunk_size,
-                scenario=scenario, target=target, v=9,
+                scenario=scenario, target=target, v=10,
                 per_seed_fleets=per_seed_fleets, per_client=per_client,
                 k=n_select)
     os.makedirs(FL_DIR, exist_ok=True)

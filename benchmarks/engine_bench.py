@@ -24,6 +24,12 @@ round body (`core.async_agg`, buffer_m=10) at the smallest and largest
 scales; `async_overhead` is the fractional us_per_round cost of the
 pending-buffer carry + masked land steps vs the paired sync row.
 
+The `fault_round_S{min}` row runs a static scenario with the chaos
+layer on (`sim.faults`: aborts/uplink loss/corruption/stragglers, and
+the `core.resilience` robust screen auto-enabled); `fault_overhead` is
+the fractional us_per_round cost vs the paired same-scale static row —
+the CI bench-gate bounds its throughput like the async row.
+
 The `engine_phases_S*` rows (repro.obs) run a short campaign through
 `run_rounds` under a span tracer + fleet-health monitors and report
 per-phase wall attribution — compile / dispatch / history-drain / eval
@@ -41,7 +47,7 @@ check_regression invocation so all failures report together):
       --no-streaming --grid-no-per-method --out /tmp/bench_fresh.json
   python -m benchmarks.check_regression BENCH_engine.json \
       /tmp/bench_fresh.json \
-      --spec scan_round_S100,async_round_S100:device_rounds_s:higher:0.30 \
+      --spec scan_round_S100,async_round_S100,fault_round_S100:device_rounds_s:higher:0.30 \
       --spec campaign_grid_4x5:grid_wall_s:lower:0.30 \
       --spec campaign_grid_4x5,engine_phases_S100:compile_s:lower:0.75
 """
@@ -101,9 +107,10 @@ def measure_engine(S: int, scenario: str = "static-paper", *,
     from repro.launch.fl_run import build_task
     from repro.models.fl_models import make_fl_model
     from repro.sim.devices import build_fleet
-    from repro.sim.dynamics import get_scenario, init_env_state
+    from repro.sim.dynamics import Scenario, get_scenario, init_env_state
 
-    scen = get_scenario(scenario)
+    scen = (scenario if isinstance(scenario, Scenario)
+            else get_scenario(scenario))
     chunk = chunk or (8 if S <= 1_000 else 2)
     model = make_fl_model("cnn@mnist", small=True)
     cfg = FLConfig(n_select=20, batch_size=2, probe_size=2, lr=0.05,
@@ -146,7 +153,7 @@ def measure_engine(S: int, scenario: str = "static-paper", *,
         jax.block_until_ready(out[0])
         chunk_walls.append(time.time() - t0)
     dt = min(chunk_walls)
-    return {"S": S, "scenario": scenario, "chunk": chunk,
+    return {"S": S, "scenario": scen.name, "chunk": chunk,
             "telemetry": "streaming" if streaming else "dense",
             "aggregation": f"async_m{async_m}" if async_m else "sync",
             "us_per_round": dt / chunk * 1e6,
@@ -332,11 +339,24 @@ HOST_BYTES_SCALE = 10_000
 ASYNC_BUFFER_M = 10  # half of n_select=20 — the default run_fl regime
 
 
+def _fault_scenario():
+    """The fault_round_S* bench scenario: a static-paper twin with the
+    chaos layer on (aborts/loss/corruption/stragglers traced, and the
+    robust screen auto-enabled), so `fault_overhead` vs the same-scale
+    static row isolates the fault+screen cost from dynamics cost."""
+    from repro.sim.dynamics import Scenario
+    from repro.sim.faults import FaultCfg
+    return Scenario(name="fault-bench", static=True,
+                    faults=FaultCfg(abort_rate=0.1, loss_rate=0.2,
+                                    corrupt_rate=0.05,
+                                    straggler_rate=0.2))
+
+
 def run(scales=SCALES, dynamic_scenario: Optional[str] = DYNAMIC_SCENARIO,
         out_path: str = OUT_PATH, timed_chunks: int = 1,
         grid: bool = True, grid_per_method: bool = True,
         streaming: bool = True, async_rows: bool = True,
-        phases: bool = True):
+        phases: bool = True, fault_rows: bool = True):
     rows = []
     results: Dict[str, Dict] = {}
     # 3 timed chunks at the largest scale: its static row doubles as the
@@ -368,6 +388,20 @@ def run(scales=SCALES, dynamic_scenario: Optional[str] = DYNAMIC_SCENARIO,
                          f"device_rounds_s={r['device_rounds_s']:.0f};"
                          f"buffer_m={ASYNC_BUFFER_M};"
                          f"async_overhead={overhead:+.3f}"))
+    if fault_rows:
+        # fault-injection + robust-screen overhead at the smallest
+        # scale (the CI-gated row): fault_overhead is the fractional
+        # us_per_round cost vs the paired same-scale static row
+        S = min(scales)
+        r = measure_engine(S, _fault_scenario(), timed_chunks=3)
+        results[f"fault_round_S{S}"] = r
+        overhead = (r["us_per_round"]
+                    / results[f"scan_round_S{S}"]["us_per_round"] - 1.0)
+        r["fault_overhead"] = overhead
+        rows.append((f"engine/fault_round_S{S}", r["us_per_round"],
+                     f"rounds_s={r['rounds_s']:.2f};"
+                     f"device_rounds_s={r['device_rounds_s']:.0f};"
+                     f"fault_overhead={overhead:+.3f}"))
     if dynamic_scenario is not None:
         S = max(scales)
         static = results[f"scan_round_S{S}"]
@@ -471,6 +505,9 @@ def main() -> None:
     ap.add_argument("--no-phases", action="store_true",
                     help="skip the span-traced per-phase attribution "
                          "rows (engine_phases_S*)")
+    ap.add_argument("--no-fault", action="store_true",
+                    help="skip the fault-injection overhead row "
+                         "(fault_round_S<min scale>)")
     ap.add_argument("--out", default=OUT_PATH,
                     help="output JSON path (default BENCH_engine.json)")
     ap.add_argument("--timed-chunks", type=int, default=3,
@@ -493,7 +530,8 @@ def main() -> None:
         grid_per_method=not args.grid_no_per_method,
         streaming=not args.no_streaming,
         async_rows=not args.no_async,
-        phases=not args.no_phases)
+        phases=not args.no_phases,
+        fault_rows=not args.no_fault)
 
 
 if __name__ == "__main__":

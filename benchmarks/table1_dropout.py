@@ -1,7 +1,15 @@
 """Table I: dropout ratio of residual-energy-UNAWARE PS designs (Oort,
 AutoFL, Random) at target accuracy — the paper's motivating observation.
 Mean±std over GRID_SEEDS per-seed fleets/partitions via the vmapped
-campaign grid."""
+campaign grid.
+
+Every row carries a `fault_rate` column (injected fault events per
+participant-round, from the `sim.faults` counters the grid history
+streams) — identically 0.00±0.00 on the default static-paper scenario,
+nonzero when the grid runs a chaos scenario. Passing
+`chaos_scenario="flaky-fleet"` appends a second row set per task under
+device/link chaos, showing how injected aborts/loss/corruption shift
+the dropout picture for energy-unaware selectors."""
 from __future__ import annotations
 
 from benchmarks.common import (ALL_TASKS, GRID_SEEDS, QUICK_TASKS,
@@ -11,21 +19,32 @@ from benchmarks.common import (ALL_TASKS, GRID_SEEDS, QUICK_TASKS,
 METHODS = ("oort", "autofl", "random")
 
 
-def run(tasks=None, seeds=GRID_SEEDS, **grid_kw):
+def _rows_for(task: str, g, label: str):
+    rows = []
+    for method in METHODS:
+        s = g["methods"][method]
+        ms = s["mean_std"]
+        rows.append((f"table1/{label}/{method}", s["us_per_round"],
+                     f"dropout_ratio={fmt_ms(ms['dropout_ratio'], 2)};"
+                     f"fault_rate={fmt_ms(ms['fault_rate'], 2)};"
+                     f"reached={fmt_reached(s)};"
+                     f"acc={fmt_ms(ms['final_acc'], 3)}"))
+    return rows
+
+
+def run(tasks=None, seeds=GRID_SEEDS, chaos_scenario=None, **grid_kw):
     tasks = tasks or QUICK_TASKS
     rows = []
     for task in tasks:
         g = cached_campaign_grid(task, METHODS, seeds, **grid_kw)
-        for method in METHODS:
-            s = g["methods"][method]
-            ms = s["mean_std"]
-            rows.append((f"table1/{task}/{method}", s["us_per_round"],
-                         f"dropout_ratio={fmt_ms(ms['dropout_ratio'], 2)};"
-                         f"reached={fmt_reached(s)};"
-                         f"acc={fmt_ms(ms['final_acc'], 3)}"))
+        rows.extend(_rows_for(task, g, task))
+        if chaos_scenario is not None:
+            gc = cached_campaign_grid(task, METHODS, seeds,
+                                      scenario=chaos_scenario, **grid_kw)
+            rows.extend(_rows_for(task, gc, f"{task}@{chaos_scenario}"))
     emit(rows)
     return rows
 
 
 if __name__ == "__main__":
-    run(ALL_TASKS)
+    run(ALL_TASKS, chaos_scenario="flaky-fleet")

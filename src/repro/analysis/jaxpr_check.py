@@ -25,8 +25,12 @@ and asserts the invariants the `jit(scan)` engine depends on:
                     throughput drop.
 
 Tracing is abstract — no kernel runs, no real data loads — so the full
-20-cell matrix (5 scenarios x {sync,async} x {dense,streaming}) traces
-in ~10 s on CPU, cheap enough for the CI static-analysis job.
+28-cell matrix (7 scenarios x {sync,async} x {dense,streaming}) traces
+in ~10 s on CPU, cheap enough for the CI static-analysis job. The chaos
+scenarios (`lossy-uplink`, `flaky-fleet`) trace the fault-injection +
+robust-screen gates (and, in their async cells, the slot-TTL
+expire/retry path), so chaos-path op-count growth gates in CI exactly
+like the clean hot path.
 """
 from __future__ import annotations
 
@@ -204,7 +208,11 @@ def build_cell(scenario_name: Optional[str], aggregation: str,
     state = init_fleet_state(fleet)
     scenario = get_scenario(scenario_name) if scenario_name else None
     env = init_env_state(fleet, scenario, jax.random.PRNGKey(1))
-    mp = method_params(METHODS["rewafl"])
+    # chaos scenarios thread FaultParams through MethodParams (the
+    # compile-once grid path) — trace them here too so the fault gates'
+    # carry leaves are contract-checked like every other cell
+    fcfg = scenario.faults if scenario is not None else None
+    mp = method_params(METHODS["rewafl"], fault_cfg=fcfg)
     key = jax.random.PRNGKey(2)
     r0 = jnp.int32(0)
 
@@ -212,7 +220,10 @@ def build_cell(scenario_name: Optional[str], aggregation: str,
         else None
 
     if aggregation == "async":
-        acfg = AsyncCfg(buffer_m=hc.buffer_m)
+        # faulted cells also trace the slot-TTL expire/retry path (the
+        # async half of core.resilience) so its counters are budgeted
+        ttl = 300.0 if (fcfg is not None and fcfg.enabled) else None
+        acfg = AsyncCfg(buffer_m=hc.buffer_m, ttl=ttl)
         body = make_async_round_body_mp(model, cfg, scenario, acfg)
         astate = init_async_state(params, S, acfg.slots(K))
         body_args = (mp, params, state, astate, env, fleet, cx, cy,

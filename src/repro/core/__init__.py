@@ -13,18 +13,23 @@
                  O(R·S) dense per-device histories
   async_agg.py — FedBuff-style buffered aggregation: virtual clock,
                  fixed-capacity pending-update buffer, staleness-
-                 weighted landing (the async engine mode)
+                 weighted landing (the async engine mode) + slot TTL
+                 with bounded retry/re-dispatch
+  resilience.py— round deadline + robust update screening (the defense
+                 half of the sim.faults chaos layer)
 """
 from repro.core.state import (AsyncState, FleetState,  # noqa: F401
                               TelemetryCarry, init_async_state,
                               init_fleet_state, replicate_state)
 from repro.core.metrics import (ASYNC_SPECS, DEFAULT_SPECS,  # noqa: F401
-                                MetricSpec, TelemetryCfg)
+                                FAULT_SPECS, MetricSpec, TelemetryCfg)
 from repro.core.methods import (METHODS, MethodParams,  # noqa: F401
                                 MethodSpec, async_variant, batchable,
                                 method_params, method_params_batch)
-from repro.core.async_agg import (AsyncCfg, land_once,  # noqa: F401
-                                  push_cohort)
+from repro.core.async_agg import (AsyncCfg, expire_and_retry,  # noqa: F401
+                                  land_once, push_cohort)
+from repro.core.resilience import (ResilienceCfg,  # noqa: F401
+                                   screen_updates)
 from repro.core.round import (FLConfig, bind_round_body,  # noqa: F401
                               make_async_round_body,
                               make_async_round_body_mp, make_round_body,
@@ -33,3 +38,5 @@ from repro.core.round import (FLConfig, bind_round_body,  # noqa: F401
                               select_slots)
 from repro.sim.dynamics import (EnvState, SCENARIOS, Scenario,  # noqa: F401
                                 get_scenario, init_env_state)
+from repro.sim.faults import (FaultCfg, FaultParams,  # noqa: F401
+                              fault_params)

@@ -23,7 +23,8 @@ Buffer invariants (enforced by tests/test_async_property.py):
   * landed-update staleness = server_version − snapshot_version ≥ 0;
   * live occupancy at step end never reaches M (every step runs
     `lands_per_step` land attempts, enough to drain a K-slot dispatch);
-  * device-rounds are conserved: n_dispatched = n_landed + live slots.
+  * device-rounds are conserved: n_dispatched = n_landed + live slots
+    (+ n_expired once a slot TTL drops updates, `expire_and_retry`).
 
 Sync equivalence: with M = K, full cohorts, and server_lr = 1, every
 step's aggregation consumes exactly the cohort it just dispatched with
@@ -70,6 +71,18 @@ class AsyncCfg:
                         ceil(K / buffer_m), enough to drain a full
                         dispatch). Grids that mix buffer sizes override
                         both so one static shape covers every cell.
+    ttl               — slot time-to-live in virtual seconds (None =
+                        off, nothing extra traces): an in-flight update
+                        whose remaining arrival delay exceeds the TTL
+                        is re-dispatched — its remaining delay shrinks
+                        by `retry_backoff` (a retry over a presumably
+                        better path) — up to `max_retries` times, after
+                        which the slot is dropped and counted in
+                        `AsyncState.n_expired`. The resilience
+                        counterpart of the sync round deadline
+                        (`core.resilience.ResilienceCfg.deadline_s`).
+    max_retries       — bounded re-dispatch attempts per slot (≥ 0).
+    retry_backoff     — remaining-delay multiplier per retry, in (0, 1).
     """
     buffer_m: int = 10
     delay: str = "wall"
@@ -78,6 +91,9 @@ class AsyncCfg:
     server_lr: float = 1.0
     capacity: Optional[int] = None
     n_lands: Optional[int] = None
+    ttl: Optional[float] = None
+    max_retries: int = 2
+    retry_backoff: float = 0.5
 
     def __post_init__(self):
         if self.buffer_m < 1:
@@ -89,6 +105,14 @@ class AsyncCfg:
             raise ValueError("delay_jitter must be >= 0")
         if self.staleness_power < 0:
             raise ValueError("staleness_power must be >= 0")
+        if self.ttl is not None and self.ttl <= 0:
+            raise ValueError(f"ttl must be > 0, got {self.ttl}")
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, "
+                             f"got {self.max_retries}")
+        if not 0.0 < self.retry_backoff < 1.0:
+            raise ValueError("retry_backoff must be in (0, 1), "
+                             f"got {self.retry_backoff}")
 
     def slots(self, k: int) -> int:
         """Static pending-buffer capacity P for a K-slot dispatch."""
@@ -139,9 +163,44 @@ def push_cohort(st: AsyncState, deltas, device_idx: jax.Array,
             lambda buf, d: buf.at[target].set(d.astype(buf.dtype),
                                               mode="drop"),
             st.slot_delta, deltas),
+        slot_retry=st.slot_retry.at[target].set(0, mode="drop"),
         n_dispatched=st.n_dispatched + jnp.sum(written.astype(jnp.int32)),
     )
     return new, jnp.sum(written.astype(jnp.int32))
+
+
+def expire_and_retry(st: AsyncState, *, ttl: float, max_retries: int,
+                     retry_backoff: float
+                     ) -> Tuple[AsyncState, Dict[str, jax.Array]]:
+    """Slot TTL with bounded re-dispatch (deterministic — no PRNG).
+
+    An in-flight update is *overdue* when its remaining virtual delay
+    `slot_arrival − t_now` exceeds `ttl`. Overdue slots with retries
+    left are re-dispatched: the remaining delay shrinks by
+    `retry_backoff` (each retry models resending over a better path /
+    closer edge, so the bounded sequence converges toward t_now) and
+    `slot_retry` increments. Overdue slots out of retries are dropped —
+    freed and counted in `n_expired`, so device-round conservation
+    becomes n_dispatched = n_landed + n_expired + live slots.
+
+    Returns (state', {"n_retried", "n_expired"}) with per-call counts.
+    """
+    remaining = st.slot_arrival - st.t_now
+    overdue = st.slot_live & (remaining > ttl)
+    can_retry = overdue & (st.slot_retry < max_retries)
+    give_up = overdue & ~can_retry
+    new_arrival = jnp.where(can_retry,
+                            st.t_now + remaining * retry_backoff,
+                            st.slot_arrival)
+    n_retried = jnp.sum(can_retry.astype(jnp.int32))
+    n_expired = jnp.sum(give_up.astype(jnp.int32))
+    new = st._replace(
+        slot_live=st.slot_live & ~give_up,
+        slot_arrival=new_arrival,
+        slot_retry=st.slot_retry + can_retry.astype(jnp.int32),
+        n_expired=st.n_expired + n_expired,
+    )
+    return new, {"n_retried": n_retried, "n_expired": n_expired}
 
 
 def land_once(params, st: AsyncState, m_eff, *, staleness_power: float,

@@ -30,6 +30,8 @@ from typing import NamedTuple, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.sim.faults import FaultCfg, FaultParams, fault_params
+
 
 @dataclasses.dataclass(frozen=True)
 class MethodSpec:
@@ -101,13 +103,20 @@ class MethodParams(NamedTuple):
                              # round body, consumed by the async one —
                              # what lets one compiled grid span
                              # sync × async aggregation regimes.
+    faults: FaultParams      # traced fault rates (sim.faults) — only
+                             # consumed when the scenario's FaultCfg
+                             # enables the fault branch at trace time;
+                             # zero rates otherwise (inert leaves, so
+                             # fault-free grids carry them unread).
 
 
 def method_params(spec: MethodSpec, *, alpha: float = 1.0,
                   beta: float = 1.0, autofl_eta: float = 1.0,
-                  autofl_ema: float = 0.5) -> MethodParams:
+                  autofl_ema: float = 0.5,
+                  fault_cfg: FaultCfg | None = None) -> MethodParams:
     """Lower a static MethodSpec (+ the FLConfig's utility/bandit
-    hyperparameters) to the traced MethodParams pytree."""
+    hyperparameters and the scenario's FaultCfg) to the traced
+    MethodParams pytree."""
     if spec.selector not in SELECTOR_IDS:
         raise ValueError(f"selector {spec.selector!r} has no traced branch")
     if spec.policy not in POLICY_IDS:
@@ -125,6 +134,7 @@ def method_params(spec: MethodSpec, *, alpha: float = 1.0,
         buffer_m=jnp.asarray(
             spec.buffer_m if spec.aggregation == "async" else 0,
             jnp.int32),
+        faults=fault_params(fault_cfg),
     )
 
 

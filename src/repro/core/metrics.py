@@ -136,6 +136,20 @@ ASYNC_SPECS: Tuple[MetricSpec, ...] = DEFAULT_SPECS + (
     MetricSpec("update_staleness", "max"),
 )
 
+# Whole-campaign totals of the chaos/resilience counters (sim.faults /
+# core.resilience): on-device `sum` reducers for streaming runs that
+# want O(1) totals in the telemetry output instead of summing the
+# per-round scalar rows host-side. Opt-in and gate-dependent — each
+# counter exists only when its trace-time gate was on (fault scenario,
+# deadline, screen, async TTL), so append exactly the specs your run's
+# metrics dict carries (init_telemetry raises on the rest).
+FAULT_SPECS: Tuple[MetricSpec, ...] = (
+    MetricSpec("n_aborted", "sum"),
+    MetricSpec("n_lost", "sum"),
+    MetricSpec("n_corrupted", "sum"),
+    MetricSpec("n_straggler", "sum"),
+)
+
 
 @dataclasses.dataclass(frozen=True)
 class TelemetryCfg:

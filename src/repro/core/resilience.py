@@ -1,0 +1,128 @@
+"""Resilience half of the chaos layer: round deadlines + robust screen.
+
+`sim.faults` injects failures; this module keeps them from hurting the
+global model. Two mechanisms, both fully traced and mask-based so they
+live inside the scanned round body:
+
+  deadline  — a per-round wall-clock cutoff (`ResilienceCfg.deadline_s`):
+              participants whose (possibly straggler-inflated) round
+              time exceeds it are cut from aggregation and the FedAvg
+              weights renormalize over the survivors. The cut device
+              still burned its full round energy — it just reported too
+              late. In async mode the analogous mechanism is the slot
+              TTL (`core.async_agg.AsyncCfg.ttl`), which operates on
+              buffered arrivals instead of the dispatch cohort.
+
+  screen    — robust-aggregation screening (`screen_updates`): before
+              any update lands, its delta norm is checked against the
+              cohort. Non-finite deltas and norm outliers (norm >
+              `norm_mult` × the masked median of the cohort's finite
+              live norms) are rejected: their FedAvg weight is zeroed
+              AND their delta rows are replaced by θ (zero delta), so a
+              NaN can never reach the aggregation kernel (0 · NaN = NaN
+              would otherwise poison the sum). Known limit: the median
+              is only an anchor while honest updates are a majority —
+              a cohort that is mostly corrupted can shift it (the
+              non-finite rejection still holds unconditionally).
+
+The screen turns on automatically whenever the scenario injects faults
+(`screen="auto"`); both knobs default to off/auto such that a default
+`FLConfig` traces byte-identical programs to the pre-resilience engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+SCREEN_MODES = ("auto", "on", "off")
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilienceCfg:
+    """Static resilience knobs, attached to `core.round.FLConfig`.
+
+    deadline_s — sync-round straggler cutoff in seconds (None = no
+                 deadline; nothing extra traces). Applies to the
+                 dispatch cohort in async mode too (a cut update is
+                 never pushed); buffered-arrival lateness is the TTL's
+                 job.
+    screen     — "auto": screen iff the scenario injects faults;
+                 "on"/"off": force. Off with faults on is allowed (for
+                 measuring unprotected damage) but not the default.
+    norm_mult  — outlier threshold: reject deltas with
+                 ‖Δ‖ > norm_mult · median(live finite ‖Δ‖).
+    """
+    deadline_s: Optional[float] = None
+    screen: str = "auto"
+    norm_mult: float = 10.0
+
+    def __post_init__(self):
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0, got {self.deadline_s}")
+        if self.screen not in SCREEN_MODES:
+            raise ValueError(f"screen must be one of {SCREEN_MODES}, "
+                             f"got {self.screen!r}")
+        if self.norm_mult <= 1.0:
+            raise ValueError(f"norm_mult must be > 1, got {self.norm_mult}")
+
+    def screen_on(self, faults_enabled: bool) -> bool:
+        """Trace-time resolution of the "auto" mode."""
+        if self.screen == "auto":
+            return faults_enabled
+        return self.screen == "on"
+
+
+def delta_norms(global_params, client_params) -> jax.Array:
+    """(K,) L2 norms of the cohort's update deltas θ_k − θ."""
+    def leaf_sq(c, g):
+        d = (c - g).astype(jnp.float32)
+        return jnp.sum(d.reshape(d.shape[0], -1) ** 2, axis=1)
+
+    sq = sum(jax.tree.leaves(jax.tree.map(leaf_sq, client_params,
+                                          global_params)))
+    return jnp.sqrt(sq)
+
+
+def masked_median(values: jax.Array, mask: jax.Array) -> jax.Array:
+    """Median of `values[mask]` with static shapes: sort with +inf fill
+    and index the (count−1)//2-th element. 0 when the mask is empty."""
+    vals = jnp.where(mask, values, jnp.inf)
+    srt = jnp.sort(vals)
+    cnt = jnp.sum(mask.astype(jnp.int32))
+    med = srt[jnp.maximum((cnt - 1) // 2, 0)]
+    return jnp.where(cnt > 0, med, 0.0)
+
+
+def screen_updates(global_params, client_params, weights: jax.Array, *,
+                   norm_mult: float) -> Tuple[object, jax.Array, jax.Array]:
+    """Reject non-finite / norm-outlier cohort updates before they land.
+
+    weights: (K,) FedAvg weights (0 marks slots already excluded —
+    dead pads, non-participants, aborted/lost/cut devices; those are
+    never *rejections*, they simply aren't candidates). Returns
+    (clean_client_params, new_weights, reject_k):
+
+      * reject_k  — (K,) bool: candidate slots whose delta is
+        non-finite or an outlier vs norm_mult × median;
+      * new_weights — weights with rejected slots zeroed;
+      * clean_client_params — rejected slot rows replaced by θ (zero
+        delta), so non-finite values cannot reach the aggregation
+        kernel through a 0-weight · NaN product.
+    """
+    norm = delta_norms(global_params, client_params)
+    cand = weights > 0
+    finite = jnp.isfinite(norm)
+    med = masked_median(norm, cand & finite)
+    outlier = norm > norm_mult * jnp.maximum(med, 1e-12)
+    reject = cand & (~finite | outlier)
+    new_w = jnp.where(reject, 0.0, weights)
+
+    def leaf(c, g):
+        m = reject.reshape((c.shape[0],) + (1,) * (c.ndim - 1))
+        return jnp.where(m, g.astype(c.dtype), c)
+
+    clean = jax.tree.map(leaf, client_params, global_params)
+    return clean, new_w, reject

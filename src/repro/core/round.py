@@ -32,13 +32,16 @@ import jax.numpy as jnp
 
 from repro.core import async_agg
 from repro.core import policy as pol
+from repro.core import resilience as res
 from repro.core import selection as sel
 from repro.core import utility as util
 from repro.core.async_agg import AsyncCfg
 from repro.core.methods import MethodParams, MethodSpec
+from repro.core.resilience import ResilienceCfg
 from repro.core.state import AsyncState, FleetState
 from repro.kernels.fedavg import ops as fedavg_ops
 from repro.models.fl_models import FLModel
+from repro.sim import faults as flt
 from repro.sim.devices import DeviceFleet
 from repro.sim.dynamics.channel import effective_rate_mean
 from repro.sim.dynamics.env import EnvState, step_env
@@ -71,6 +74,12 @@ class FLConfig:
     # forward and staleness-lags Eqn (4)'s |Loss(θ_i)−Loss(θ)| signal,
     # the AutoFL reward, and the `global_loss` metric by < N rounds.
     probe_every: int = 1
+    # resilience knobs (round deadline + robust update screen); the
+    # default is fully inert — no extra traced ops, bitwise-unchanged
+    # programs — and the screen auto-arms when the scenario injects
+    # faults (core.resilience.ResilienceCfg)
+    resilience: ResilienceCfg = dataclasses.field(
+        default_factory=ResilienceCfg)
 
 
 def _probe_losses(model: FLModel, params, cx, cy, probe: int) -> jax.Array:
@@ -169,6 +178,15 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
     K = cfg.n_select
     model_bits = float(cfg.uplink_bits or model.param_bits)
     dyn = scenario is not None and scenario.dynamic
+    # chaos/resilience trace-time gates: with every gate off, the body
+    # below traces ZERO additional ops and draws from the same PRNG
+    # stream — static-paper stays bitwise-golden (tests/test_dynamics).
+    fcfg = scenario.faults if scenario is not None else flt.FaultCfg()
+    faults_on = fcfg.enabled
+    rcfg = cfg.resilience
+    deadline_on = rcfg.deadline_s is not None
+    screen_on = rcfg.screen_on(faults_on)
+    chaos = faults_on or deadline_on      # delivery ≠ participation
     pcfg = cfg.policy
     if method is not None and method.policy == "fixed":
         # fixed-H baselines never exceed H0 — shrink the static loop bound
@@ -296,6 +314,39 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
         participating = selected & feasible
         failed = selected & ~feasible
 
+        # --- fault injection (sim.faults; trace-gated side channel) ------
+        # `t_round` is the realized per-device round time (straggler
+        # spikes included); `delivered` is the subset of participants
+        # whose update actually reaches the server. With all gates off
+        # both alias the fault-free tensors — no new ops, same stream.
+        t_round = costs.t_total
+        if faults_on:
+            fp = mp.faults if mp is not None else flt.fault_params(fcfg)
+            dr = flt.fault_draws(key, S)
+            with jax.named_scope("round.faults"):
+                straggler = (participating
+                             & (dr.u_straggler < fp.straggler_rate))
+                t_round = jnp.where(straggler,
+                                    costs.t_total * fp.straggler_mult,
+                                    costs.t_total)
+                # mid-round compute abort: h_frac of the local steps ran
+                # (their energy still drains below); the update is lost
+                aborted = participating & (dr.u_abort < fp.abort_rate)
+                # upload loss: only a *bad* Gilbert–Elliott channel
+                # loses updates — energy was spent transmitting. Inert
+                # on static scenarios (channel_good ≡ True).
+                lost = (participating & ~aborted & ~env.channel_good
+                        & (dr.u_loss < fp.loss_rate))
+                delivered = participating & ~aborted & ~lost
+        else:
+            delivered = participating
+        if deadline_on:
+            # round deadline: too-late survivors are cut from the
+            # aggregation (FedAvg renormalizes over the rest) but their
+            # round energy is already burned
+            cut = delivered & (t_round > rcfg.deadline_s)
+            delivered = delivered & ~cut
+
         # --- local training on the K selected slots ----------------------
         # pad slots (fewer than K selected) are dead: their (harmless)
         # training of device 0's data is discarded by the slot mask
@@ -309,8 +360,32 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
                 lambda x, y, H, kk: _local_sgd(model, params, x, y, H, kk,
                                                cfg)
             )(xk, yk, Hk, keys)
+            deliver_k = (part_k if not chaos
+                         else delivered[sel_idx] & slot_live)
             weights = (fleet.data_size[sel_idx].astype(jnp.float32)
-                       * part_k.astype(jnp.float32))
+                       * deliver_k.astype(jnp.float32))
+
+        # --- update corruption + robust screen (core.resilience) ---------
+        if faults_on:
+            with jax.named_scope("round.faults"):
+                corrupt = delivered & (dr.u_corrupt < fp.corrupt_rate)
+                client_params = flt.corrupt_cohort(
+                    client_params, params, corrupt[sel_idx] & deliver_k,
+                    dr.u_cmode[sel_idx], scale=fcfg.corrupt_scale,
+                    nan_frac=fcfg.corrupt_nan_frac)
+        if screen_on:
+            with jax.named_scope("round.screen"):
+                client_params, weights, reject_k = res.screen_updates(
+                    params, client_params, weights,
+                    norm_mult=rcfg.norm_mult)
+                rejected = jnp.zeros((S,), bool).at[
+                    jnp.where(slot_live, sel_idx, S)].set(reject_k,
+                                                          mode="drop")
+            ok = delivered & ~rejected
+            ok_k = deliver_k & ~reject_k
+        else:
+            ok = delivered
+            ok_k = deliver_k
         if acfg is None:
             with jax.named_scope("round.aggregation"):
                 new_params = _fedavg(params, client_params, weights)
@@ -324,8 +399,10 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
             with jax.named_scope("round.aggregation"):
                 if acfg.delay == "unit":
                     delays = jnp.ones((K,), jnp.float32)
-                else:  # "wall": compute + uplink time at the sampled rate
-                    delays = costs.t_total[sel_idx].astype(jnp.float32)
+                else:  # "wall": compute + uplink time at the sampled
+                    # rate (straggler-inflated when faults are on —
+                    # t_round aliases t_total otherwise)
+                    delays = t_round[sel_idx].astype(jnp.float32)
                 if acfg.delay_jitter > 0.0:
                     k_delay = jax.random.fold_in(key, 0xA57C)
                     delays = delays * jnp.exp(
@@ -336,10 +413,35 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
                 else:  # 0 is the sync sentinel: aggregate full cohorts
                     m_eff = jnp.where(mp.buffer_m > 0, mp.buffer_m, K)
                 pend_before = jnp.sum(astate.slot_live.astype(jnp.int32))
+                # chaos drops non-delivered updates *before* dispatch —
+                # a lost/aborted/cut upload never occupies a buffer
+                # slot. The fault-free path keeps the legacy semantics
+                # (failed devices hold weight-0 slots: the PS cannot
+                # tell a crashed device from a slow one).
+                push_live = slot_live if not (chaos or screen_on) else ok_k
                 astate, n_pushed = async_agg.push_cohort(
                     astate, jax.tree.map(lambda c, p: c - p, client_params,
                                          params),
-                    sel_idx, slot_live, weights, delays)
+                    sel_idx, push_live, weights, delays)
+                n_retried_r = jnp.zeros((), jnp.int32)
+                n_expired_r = jnp.zeros((), jnp.int32)
+                if acfg.ttl is not None:
+                    astate, tinfo = async_agg.expire_and_retry(
+                        astate, ttl=acfg.ttl,
+                        max_retries=acfg.max_retries,
+                        retry_backoff=acfg.retry_backoff)
+                    n_retried_r = tinfo["n_retried"]
+                    n_expired_r = tinfo["n_expired"]
+                # strict-trigger liveness fix: when nothing new can be
+                # dispatched (n_pushed == 0) a sub-M residue would park
+                # in the buffer forever under `pending >= M`. Relax the
+                # trigger to the live occupancy for this step's land
+                # attempts so terminal partial cohorts still land.
+                pend_after = jnp.sum(astate.slot_live.astype(jnp.int32))
+                stuck = (n_pushed == 0) & (pend_after > 0)
+                m_land = jnp.where(
+                    stuck,
+                    jnp.maximum(jnp.minimum(m_eff, pend_after), 1), m_eff)
                 # Land: fixed number of masked aggregation attempts,
                 # enough to drain the dispatch back below M. The first
                 # attempt arms the bitwise sync fast path: an aggregation
@@ -358,7 +460,7 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
                                      (pend_before == 0)
                                      & (n_landed == n_pushed))
                     new_params, astate, info = async_agg.land_once(
-                        new_params, astate, m_eff,
+                        new_params, astate, m_land,
                         staleness_power=acfg.staleness_power,
                         server_lr=acfg.server_lr,
                         sync_aggregate=sync_agg, sync_pred=sync_pred)
@@ -375,11 +477,20 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
         l_loss_k, l_sq_k = jax.vmap(local_probe)(client_params, xk, yk)
 
         # --- state update (lines 18–27) ----------------------------------
+        # `succ` gates the PS-state refresh: a device whose update never
+        # reached (or never passed) the server keeps its stale PS view —
+        # but its energy is gone regardless (aborts drain only the
+        # fraction of compute that ran; comm never started). Fault-free
+        # programs alias succ = participating: zero new ops.
+        succ = participating if not (chaos or screen_on) else ok
+        succ_k = part_k if not (chaos or screen_on) else ok_k
         e_spent = jnp.where(participating, costs.e_total, 0.0)
+        if faults_on:
+            e_spent = jnp.where(aborted, costs.e_comp * dr.h_frac, e_spent)
         new_E = state.residual_energy - e_spent
-        new_u = jnp.where(participating, 0, state.u + 1)
-        new_H = jnp.where(participating, H_cand, state.H)
-        new_last_round = jnp.where(participating, round_idx, state.last_round)
+        new_u = jnp.where(succ, 0, state.u + 1)
+        new_H = jnp.where(succ, H_cand, state.H)
+        new_last_round = jnp.where(succ, round_idx, state.last_round)
 
         # dead pad slots scatter to an out-of-bounds index and are
         # dropped: a live slot for device 0 must not race a pad slot
@@ -393,10 +504,10 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
             return upd
 
         stat_k = util.statistical_utility(fleet.data_size[sel_idx], l_sq_k)
-        new_stat = scatter(state.last_stat, stat_k, part_k)
-        new_lll = scatter(state.last_local_loss, l_loss_k, part_k)
-        new_ecp = jnp.where(participating, costs.e_comp, state.last_ecp)
-        new_lastE = jnp.where(participating, state.residual_energy,
+        new_stat = scatter(state.last_stat, stat_k, succ_k)
+        new_lll = scatter(state.last_local_loss, l_loss_k, succ_k)
+        new_ecp = jnp.where(succ, costs.e_comp, state.last_ecp)
+        new_lastE = jnp.where(succ, state.residual_energy,
                               state.last_energy)
 
         # AutoFL bandit value: EMA of (global-loss drop proxy)/energy
@@ -405,7 +516,7 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
                                       eta=autofl_eta)
         q_sel = (autofl_ema * state.q_value[sel_idx]
                  + (1 - autofl_ema) * reward_k * 1e3)
-        new_q = scatter(state.q_value, q_sel, part_k)
+        new_q = scatter(state.q_value, q_sel, succ_k)
 
         # dropout: can no longer afford even H=1 + uplink at its mean
         # rate (paper: depleted devices disabled from participation).
@@ -437,9 +548,14 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
         # and what folds into on-device reducers — the round body just
         # reports everything it knows (unconsumed leaves are dropped at
         # trace time, so dense-mode programs stay bitwise-identical).
+        # realized round latency: straggler-inflated, but never past the
+        # deadline — the server stops waiting there (fault-free programs
+        # alias t_round = costs.t_total: identical graph)
+        latency = jnp.max(jnp.where(participating, t_round, 0.0))
+        if deadline_on:
+            latency = jnp.minimum(latency, rcfg.deadline_s)
         metrics = {
-            "round_latency": jnp.max(jnp.where(participating,
-                                               costs.t_total, 0.0)),
+            "round_latency": latency,
             "round_energy": jnp.sum(e_spent),
             "n_participating": n_part,
             "n_failed": jnp.sum(failed),
@@ -455,6 +571,19 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
             "residual_energy": new_E,
             "staleness": new_u,
         }
+        # chaos counters (only traced when the matching gate is on, so
+        # fault-free histories keep their exact schema)
+        if faults_on:
+            metrics.update({
+                "n_aborted": jnp.sum(aborted.astype(jnp.int32)),
+                "n_lost": jnp.sum(lost.astype(jnp.int32)),
+                "n_corrupted": jnp.sum(corrupt.astype(jnp.int32)),
+                "n_straggler": jnp.sum(straggler.astype(jnp.int32)),
+            })
+        if deadline_on:
+            metrics["n_deadline_cut"] = jnp.sum(cut.astype(jnp.int32))
+        if screen_on:
+            metrics["n_rejected"] = jnp.sum(reject_k.astype(jnp.int32))
         if acfg is not None:
             metrics.update({
                 # virtual wall clock + buffer health, streamed per round
@@ -469,6 +598,9 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
                 # per-device (S,): staleness of the last landed update
                 "update_staleness": astate.update_staleness,
             })
+            if acfg.ttl is not None:
+                metrics["n_retried"] = n_retried_r
+                metrics["n_expired"] = n_expired_r
         return new_params, new_state, astate, env, metrics
 
     if acfg is not None:

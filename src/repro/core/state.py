@@ -58,8 +58,13 @@ class AsyncState(NamedTuple):
     slot_version: jax.Array      # i32 (P,) — server_version at dispatch
     slot_weight: jax.Array       # f32 (P,) — FedAvg weight (0 = failed)
     slot_delta: Any              # params-pytree, (P, ...) leaves
+    slot_retry: jax.Array        # i32 (P,) — TTL re-dispatch attempts so
+                                 # far for the slot's in-flight update
+                                 # (core.async_agg.expire_and_retry)
     n_dispatched: jax.Array      # i32 () — updates pushed (ever)
     n_landed: jax.Array          # i32 () — updates aggregated (ever)
+    n_expired: jax.Array         # i32 () — updates dropped by the slot
+                                 # TTL after exhausting retries (ever)
     update_staleness: jax.Array  # i32 (S,) — staleness of each device's
                                  # most recently landed update
 
@@ -79,8 +84,10 @@ def init_async_state(params, n_devices: int, capacity: int) -> AsyncState:
         slot_delta=jax.tree.map(
             lambda x: jnp.zeros((P,) + jnp.shape(x),
                                 jnp.asarray(x).dtype), params),
+        slot_retry=jnp.zeros((P,), jnp.int32),
         n_dispatched=jnp.zeros((), jnp.int32),
         n_landed=jnp.zeros((), jnp.int32),
+        n_expired=jnp.zeros((), jnp.int32),
         update_staleness=jnp.zeros((n_devices,), jnp.int32),
     )
 

@@ -58,6 +58,7 @@ Layers (each usable on its own):
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -83,6 +84,7 @@ from repro.obs.log import get_logger
 from repro.obs.trace import span
 from repro.sim.devices import DeviceFleet
 from repro.sim.dynamics import EnvState, Scenario, init_env_state
+from repro.training import checkpoint as ckpt
 
 log = get_logger(__name__)
 
@@ -119,6 +121,21 @@ class EngineCfg:
     # telemetry cfg with the staleness / residual-energy P50/P95
     # reducers, and attaches a `HealthReport` to EngineResult.health.
     health: Optional[HealthCfg] = None
+    # exact checkpoint/resume (repro.training.checkpoint): every
+    # `checkpoint_every` completed rounds, run_rounds serializes the FULL
+    # scan carry — params, FleetState, EnvState, AsyncState (async mode),
+    # TelemetryCarry (streaming mode), the loop PRNG key, and the round
+    # counter — to `checkpoint_dir/ckpt_r{round:08d}.npz` with a sha256
+    # sidecar, at the first chunk boundary crossing each multiple.
+    # `resume` names a checkpoint file, or a directory to resume from the
+    # newest *intact* checkpoint (corrupt/torn files are skipped with a
+    # warning). Resume is bitwise: because chunking is scan partitioning
+    # (round r's math never depends on chunk alignment), a resumed run's
+    # carry equals the uninterrupted run's at every subsequent boundary
+    # (tests/test_checkpoint_resume.py).
+    checkpoint_every: Optional[int] = None
+    checkpoint_dir: Optional[str] = None
+    resume: Optional[str] = None
 
 
 # --------------------------------------------------------------- sharding
@@ -443,6 +460,25 @@ class EngineResult:
     # EngineCfg.health is set: chunk-boundary flat-battery /
     # near-depletion samples, selection Gini, staleness / energy tails
     health: Optional[HealthReport] = None
+    # checkpoint/resume only: the round this run started from (0 unless
+    # EngineCfg.resume loaded a checkpoint). history rows [0, start_round)
+    # were not run here and are zero-filled.
+    start_round: int = 0
+
+
+def _carry_payload(params, state, astate, env, tel, key, done: int) -> Dict:
+    """The full scan carry as a flat checkpoint payload. Everything round
+    `done+1` depends on is in here — params, fleet/env/async/telemetry
+    state, and the loop PRNG key — so load-and-continue is bitwise equal
+    to never having stopped. Keys are stable: they are the npz tree paths
+    (`training.checkpoint`)."""
+    payload = {"params": params, "state": state, "env": env, "key": key,
+               "round": jnp.asarray(done, jnp.int32)}
+    if astate is not None:
+        payload["astate"] = astate
+    if tel is not None:
+        payload["tel"] = tel
+    return payload
 
 
 def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
@@ -517,6 +553,31 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
                 (params, state, env, fleet, cx, cy, key,
                  jnp.asarray(0, jnp.int32)))
 
+    if ecfg.checkpoint_every is not None:
+        if ecfg.checkpoint_every < 1:
+            raise ValueError(f"checkpoint_every must be >= 1, got "
+                             f"{ecfg.checkpoint_every}")
+        if ecfg.checkpoint_dir is None:
+            raise ValueError("checkpoint_every needs checkpoint_dir")
+    start = 0
+    if ecfg.resume is not None:
+        # the freshly-initialized carry is the structural `like` tree —
+        # resume must match the run's exact configuration (same model /
+        # fleet size / async & telemetry modes), or load fails loudly
+        like = _carry_payload(params, state, astate, env, tel, key, 0)
+        loaded, ck_path = ckpt.load_latest(ecfg.resume, like)
+        params, state = loaded["params"], loaded["state"]
+        env, key = loaded["env"], loaded["key"]
+        if acfg is not None:
+            astate = loaded["astate"]
+        if streaming:
+            tel = loaded["tel"]
+        start = int(loaded["round"])
+        log.info("resumed from %s at round %d", ck_path, start)
+        if start > rounds:
+            raise ValueError(f"checkpoint round {start} is beyond the "
+                             f"requested {rounds} rounds")
+
     chunk_fns: Dict[int, object] = {}
 
     def chunk_fn(length: int):
@@ -537,7 +598,7 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
     health_warnings: List[str] = []
     compile_s = 0.0
     reached = None
-    done = 0
+    done = start
     ci = 0
     while done < rounds:
         length = min(ecfg.chunk_size, rounds - done)
@@ -566,6 +627,19 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
             hh.push(hist, done, length)
             chunk_len.append(length)
             done += length
+            every = ecfg.checkpoint_every
+            if every is not None and (done // every) > ((done - length)
+                                                        // every):
+                # serialize at the boundary crossing the multiple. The
+                # np.asarray copies inside save() read the chunk outputs
+                # BEFORE the next dispatch donates them — host copies,
+                # so donation stays safe.
+                with span("checkpoint", ci, round=done):
+                    path = os.path.join(ecfg.checkpoint_dir,
+                                        f"ckpt_r{done:08d}.npz")
+                    ckpt.save_checkpoint(path, _carry_payload(
+                        params, state, astate, env, tel, key, done))
+                    log.info("checkpoint written: %s", path)
             stop = False
             if eval_fn is not None:  # blocks on this chunk — timed in,
                 with span("eval", ci):     # so chunk walls keep covering
@@ -602,12 +676,18 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
         if streaming:
             args = args + (tel,)
         history = _empty_history(chunk_fn(1), args)
+    elif start > 0:
+        # rows before the resume point were run by the checkpointing
+        # process, not this one — the preallocated buffers hold garbage
+        # there, so zero-fill to keep downstream reductions deterministic
+        for v in history.values():
+            v[:start] = 0
     health = None
     if hcfg is not None:
         health = finalize_report(hcfg, health_samples, health_warnings,
                                  state=state, fleet=fleet,
                                  telemetry=telemetry_out,
-                                 rounds_run=done)
+                                 rounds_run=done, history=history)
     return EngineResult(params=params, state=state, history=history,
                         rounds_run=done, reached_round=reached,
                         acc_curve=np.asarray(acc_curve, np.float64),
@@ -615,7 +695,7 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
                         chunk_wall_s=np.asarray(chunk_wall, np.float64),
                         chunk_rounds=np.asarray(chunk_len, np.int64),
                         compile_s=compile_s, async_state=astate,
-                        health=health)
+                        health=health, start_round=start)
 
 
 # ------------------------------------------------------- campaign batching
@@ -861,7 +941,9 @@ def _run_grid_batched(model: FLModel, fleet: DeviceFleet, cx, cy,
     mp = method_params_batch([methods[n] for n in names],
                              alpha=cfg.alpha, beta=cfg.beta,
                              autofl_eta=cfg.autofl_eta,
-                             autofl_ema=cfg.autofl_ema)
+                             autofl_ema=cfg.autofl_ema,
+                             fault_cfg=scenario.faults
+                             if scenario is not None else None)
     if all(methods[n].policy == "fixed" for n in names):
         # the shared local-SGD loop bound must cover every method in the
         # grid: an all-fixed grid never exceeds H0, so shrink the static

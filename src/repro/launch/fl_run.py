@@ -79,6 +79,13 @@ class RunResult:
     # span aggregates ({name: {count, total_s, mean_s, max_s}}) when
     # run_fl(trace=...) recorded the campaign's engine phases
     spans: Optional[Dict[str, Dict[str, float]]] = None
+    # checkpoint/resume only (scan engine): sha256 fingerprint of the
+    # final carry (params, FleetState, EnvState, AsyncState when async)
+    # — the bitwise resume-equivalence token the CI chaos-smoke gate
+    # compares between an interrupted+resumed run and an uninterrupted
+    # one — and the round this process actually started from
+    carry_sha: Optional[str] = None
+    start_round: int = 0
 
 
 def build_task(task: str, n_clients: int, lam: float, *, per_client: int = 128,
@@ -145,6 +152,13 @@ HIST_KEYS = ("round_latency", "round_energy", "n_dropped",
 ASYNC_HIST_KEYS = ("wall_clock", "server_version", "n_pending",
                    "n_aggregations", "n_landed", "mean_update_staleness")
 
+# chaos/resilience counters (sim.faults / core.resilience) — present in
+# the engine history only for the gates the run actually traced (fault
+# scenario, deadline, screen, async TTL), so they are copied through
+# opportunistically rather than listed in HIST_KEYS
+FAULT_HIST_KEYS = ("n_aborted", "n_lost", "n_corrupted", "n_straggler",
+                   "n_deadline_cut", "n_rejected", "n_retried", "n_expired")
+
 
 def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
            rounds: int = 100, n_clients: int = 100, n_select: int = 20,
@@ -164,7 +178,10 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
            delay_jitter: float = 0.0,
            async_delay: str = "wall",
            trace: Optional[str] = None,
-           health: Optional[HealthCfg] = None) -> RunResult:
+           health: Optional[HealthCfg] = None,
+           checkpoint_every: Optional[int] = None,
+           checkpoint_dir: Optional[str] = None,
+           resume: Optional[str] = None) -> RunResult:
     """Run one FL campaign.
 
     engine="scan" (default) runs rounds in compiled `lax.scan` chunks via
@@ -217,6 +234,15 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
     counts; selection Gini and staleness / residual-energy tails at the
     end), logs threshold violations as WARNINGs and attaches the
     `HealthReport` to `RunResult.health`.
+
+    `checkpoint_every=N` (scan engine only) serializes the FULL scan
+    carry to `checkpoint_dir/ckpt_r{round:08d}.npz` (+ sha256 sidecar)
+    every N completed rounds; `resume=PATH` (file or directory —
+    directories resume from the newest intact checkpoint) continues a
+    crashed run bitwise from that boundary
+    (`launch.engine.EngineCfg` / `training.checkpoint`). When either is
+    set, `RunResult.carry_sha` fingerprints the final carry for the
+    resume-equivalence gate.
     """
     if trace is not None:
         kw = dict(locals())
@@ -260,6 +286,10 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
         raise ValueError("health monitoring needs engine='scan' — the "
                          "legacy loop driver has no chunk boundaries to "
                          "sample at")
+    ckpt_mode = (checkpoint_every is not None or resume is not None)
+    if ckpt_mode and engine != "scan":
+        raise ValueError("checkpoint/resume needs engine='scan' — the "
+                         "carry is serialized at chunk boundaries")
     if engine == "scan":
         from repro.core.async_agg import AsyncCfg
         from repro.core.metrics import ASYNC_SPECS, TelemetryCfg
@@ -285,11 +315,20 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
             params=model.init(jax.random.PRNGKey(seed + 2)),
             ecfg=EngineCfg(chunk_size=chunk_size, fleet_shards=fleet_shards,
                            collect_per_device=not streaming,
-                           telemetry=tcfg, async_cfg=acfg, health=health),
+                           telemetry=tcfg, async_cfg=acfg, health=health,
+                           checkpoint_every=checkpoint_every,
+                           checkpoint_dir=checkpoint_dir, resume=resume),
             eval_fn=eval_fn, target_acc=target_acc,
             scenario=scen, env_key=jax.random.PRNGKey(seed + 3))
         h = res.history
         state, params = res.state, res.params
+        carry_sha = None
+        if ckpt_mode:
+            from repro.training.checkpoint import tree_digest
+            carry = {"params": params, "state": state, "env": res.env}
+            if res.async_state is not None:
+                carry["astate"] = res.async_state
+            carry_sha = tree_digest(carry)
         if verbose:
             for i, acc in enumerate(res.acc_curve):
                 r_end = min((i + 1) * chunk_size, res.rounds_run) - 1
@@ -312,6 +351,8 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
             task=task, method=method, rounds_run=res.rounds_run,
             reached_round=res.reached_round, target_acc=target_acc,
             history={k: np.asarray(h[k], np.float64) for k in hist_keys}
+            | {k: np.asarray(h[k], np.float64) for k in FAULT_HIST_KEYS
+               if k in h}
             | per_dev | {
                 "residual_energy": np.asarray(state.residual_energy),
                 "init_energy": np.asarray(fleet.init_energy),
@@ -328,7 +369,8 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
             compile_s=res.compile_s, telemetry=res.telemetry,
             wall_clock_s=(float(h["wall_clock"][-1])
                           if async_mode and res.rounds_run else None),
-            health=res.health)
+            health=res.health, carry_sha=carry_sha,
+            start_round=res.start_round)
     if engine != "loop":
         raise ValueError(f"unknown engine {engine!r} (use 'scan' or 'loop')")
     if telemetry != "dense":
@@ -439,6 +481,18 @@ def main() -> None:
                     help="async delay model: 'wall' uses each device's "
                          "simulated compute+uplink seconds, 'unit' lands "
                          "every update one clock tick after dispatch")
+    ap.add_argument("--checkpoint-every", type=int, default=None,
+                    metavar="N",
+                    help="serialize the full scan carry every N completed "
+                         "rounds (needs --checkpoint-dir; scan engine "
+                         "only)")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="directory for ckpt_r*.npz checkpoints (+ sha256 "
+                         "sidecars)")
+    ap.add_argument("--resume", default=None, metavar="PATH",
+                    help="resume bitwise from a checkpoint file, or from "
+                         "the newest intact checkpoint in a directory "
+                         "(corrupt files are skipped)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="record engine-phase host spans to PATH as "
                          "Chrome trace-event JSON (open in "
@@ -480,7 +534,9 @@ def main() -> None:
                  staleness_power=args.staleness_power,
                  delay_jitter=args.delay_jitter,
                  async_delay=args.async_delay,
-                 trace=args.trace, health=hcfg)
+                 trace=args.trace, health=hcfg,
+                 checkpoint_every=args.checkpoint_every,
+                 checkpoint_dir=args.checkpoint_dir, resume=args.resume)
     if res.spans is not None:
         log.info("%s", format_span_table(res.spans))
         log.info("trace written to %s", args.trace)
@@ -495,8 +551,15 @@ def main() -> None:
         "overall_latency_h": res.overall_latency_s / 3600,
         "overall_energy_kj": res.overall_energy_j / 1e3,
         "wall_clock_s": res.wall_clock_s,
-        "final_acc": float(res.acc_curve[-1]),
+        "final_acc": (float(res.acc_curve[-1]) if len(res.acc_curve)
+                      else None),
         "health_ok": res.health.ok if res.health is not None else None,
+        "fault_totals": {k: float(np.sum(res.history[k]))
+                         for k in ("n_aborted", "n_lost", "n_corrupted",
+                                   "n_straggler", "n_deadline_cut",
+                                   "n_rejected", "n_retried", "n_expired")
+                         if k in res.history},
+        "carry_sha": res.carry_sha, "start_round": res.start_round,
         "wall_s": round(time.time() - t0, 1),
     }, indent=1))
     if args.health_strict and res.health is not None and not res.health.ok:

@@ -38,6 +38,16 @@ import numpy as np
 from repro.core.metrics import MetricSpec, TelemetryCfg
 
 
+# Per-round chaos/resilience counters (sim.faults / core.resilience /
+# the async slot TTL) — whichever of these the run's traced gates
+# emitted are totalled into HealthReport.metrics as `<name>_total`.
+# Report-only: injected faults are the *experiment*, not a fleet
+# malfunction, so they never flip `ok` (strict CI health gates keep
+# their existing meaning under chaos runs).
+FAULT_COUNTERS = ("n_aborted", "n_lost", "n_corrupted", "n_straggler",
+                  "n_deadline_cut", "n_rejected", "n_retried", "n_expired")
+
+
 def gini(counts) -> float:
     """Gini coefficient of a non-negative count vector (0 = perfectly
     even, -> 1 = maximally concentrated). All-zero counts -> 0."""
@@ -160,13 +170,16 @@ class HealthReport:
 def finalize_report(cfg: HealthCfg, samples: List[Dict[str, float]],
                     warnings: List[str], *, state, fleet,
                     telemetry: Optional[Dict] = None,
-                    rounds_run: int = 0) -> HealthReport:
+                    rounds_run: int = 0,
+                    history: Optional[Dict] = None) -> HealthReport:
     """Fold the chunk-boundary samples + final state into a HealthReport.
 
     Staleness / residual-energy quantiles prefer the streaming reducer
     outputs (`tel/<metric>/p50|p95`, every (round, device) sample of the
     whole campaign); dense-telemetry runs fall back to exact end-state
-    percentiles over `state.u` / `state.residual_energy`."""
+    percentiles over `state.u` / `state.residual_energy`. A `history`
+    dict (per-round scalars) adds whole-run `FAULT_COUNTERS` totals to
+    `metrics` — report-only, never a threshold."""
     warnings = list(warnings)
     metrics: Dict[str, float] = {}
     if samples:
@@ -191,6 +204,10 @@ def finalize_report(cfg: HealthCfg, samples: List[Dict[str, float]],
                 metrics[f"{metric}_{qk}"] = float(np.asarray(tel[key]))
             elif rounds_run:  # dense: exact end-state percentile
                 metrics[f"{metric}_{qk}"] = float(np.percentile(arr, q))
+    for k in FAULT_COUNTERS:
+        if history is not None and k in history:
+            metrics[f"{k}_total"] = float(
+                np.sum(np.asarray(history[k], np.float64)))
     p95 = metrics.get("staleness_p95")
     if (cfg.max_staleness_p95 is not None and p95 is not None
             and p95 > cfg.max_staleness_p95):

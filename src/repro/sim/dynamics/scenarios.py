@@ -16,6 +16,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional
 
+from repro.sim.faults import FaultCfg
+
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
@@ -58,6 +60,12 @@ class Scenario:
     weekend_plug_off_mult: float = 1.0   # scales unplug prob
     weekend_online_on_mult: float = 1.0  # scales offline->online prob
     weekend_online_off_mult: float = 1.0 # scales online->offline prob
+
+    # --- chaos: seeded fault injection (sim.faults). The default
+    # (all-zero rates) is the trace-time OFF gate: the round body
+    # injects nothing and stays bitwise-identical to the fault-free
+    # program — `static-paper` keeps its golden history.
+    faults: FaultCfg = dataclasses.field(default_factory=FaultCfg)
 
     @property
     def dynamic(self) -> bool:
@@ -129,6 +137,28 @@ register(Scenario(
     plug_off_day=0.15, plug_off_night=0.10,
     p_offline_day=0.30, p_offline_night=0.25,
     p_online_day=0.35, p_online_night=0.35, frac_online0=0.6))
+
+
+# Chaos scenarios (sim.faults + core.resilience). `lossy-uplink` is the
+# wireless pathology: a channel biased hard toward the bad state where
+# uploads actually get LOST after their energy is spent — plus a tail of
+# stragglers. Charging/churn stay at commuter defaults so the damage is
+# attributable to the link.
+register(Scenario(
+    name="lossy-uplink",
+    p_good_to_bad=0.30, p_bad_to_good=0.15,
+    faults=FaultCfg(loss_rate=0.6, straggler_rate=0.10,
+                    straggler_mult=6.0)))
+
+# `flaky-fleet` is the device pathology: mid-round compute aborts that
+# still drain the battery, occasional corrupted (NaN / blown-up)
+# updates that the robust screen must reject, and frequent latency
+# spikes — the regime for the deadline / TTL / screening machinery.
+register(Scenario(
+    name="flaky-fleet",
+    p_good_to_bad=0.10, p_bad_to_good=0.15,
+    faults=FaultCfg(abort_rate=0.15, loss_rate=0.20, corrupt_rate=0.10,
+                    straggler_rate=0.20, straggler_mult=8.0)))
 
 
 def get_scenario(name: Optional[str]) -> Scenario:

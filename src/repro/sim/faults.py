@@ -1,0 +1,162 @@
+"""Deterministic fault injection for the FL round (chaos layer).
+
+REWAFL's premise is that mobile participants are unreliable; the seed
+simulator models exactly one failure mode (battery infeasibility). This
+module adds the other three the mobile-FL literature identifies — and a
+latency pathology — as *seeded, fully-traced* events inside the one
+`jit(lax.scan)` round body:
+
+  abort      — the device crashes after a fraction h/H of its local
+               steps (app killed, thermal throttle, OS eviction). The
+               update is lost but the compute energy already burned
+               (h/H · e_comp) still drains the battery.
+  loss       — the upload is transmitted but never received. Gated on
+               the Gilbert–Elliott *bad* channel state, so lossy links
+               actually lose updates after the (full) energy is spent.
+               Inert on static scenarios, whose channel is always good.
+  corrupt    — the delivered update is garbage: either non-finite
+               (NaN) or a norm blow-up by `corrupt_scale`. The
+               resilience screen (`core.resilience`) must reject these
+               before they can poison θ.
+  straggler  — a latency spike: the device's round time is multiplied
+               by `straggler_mult` (background load, cell handover).
+               Interacts with the sync round deadline
+               (`core.resilience.ResilienceCfg.deadline_s`) and the
+               async slot TTL (`core.async_agg.AsyncCfg.ttl`).
+
+Two views, mirroring `core.methods`:
+
+  FaultCfg    — the static (Python) description attached to a
+                `sim.dynamics.Scenario`. `cfg.enabled` is the
+                trace-time gate: when False the round body traces ZERO
+                fault ops and the PRNG stream is untouched, keeping
+                `static-paper` bitwise-golden.
+  FaultParams — the traced scalar-rate pytree carried inside
+                `core.methods.MethodParams`, so the compile-once
+                campaign grid can vmap methods over a faulted scenario
+                without retracing.
+
+All randomness derives from `jax.random.fold_in(round_key, FAULT_SALT)`
+— a side-channel fold exactly like the async delay jitter — so enabling
+faults never perturbs selection/training draws.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+# side-channel PRNG salt (cf. 0xA57C async delay jitter, 0x0d1f env key)
+FAULT_SALT = 0xFA17
+
+_RATE_FIELDS = ("abort_rate", "loss_rate", "corrupt_rate",
+                "straggler_rate", "corrupt_nan_frac")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultCfg:
+    """Static fault-injection knobs (per-scenario; all rates per round).
+
+    abort_rate       — P(mid-round compute abort | participating).
+    loss_rate        — P(upload lost | participating ∧ channel bad).
+    corrupt_rate     — P(update corrupted | delivered).
+    straggler_rate   — P(latency spike | participating).
+    straggler_mult   — round-time multiplier for stragglers (≥ 1).
+    corrupt_scale    — delta blow-up factor for norm-corruption.
+    corrupt_nan_frac — fraction of corruptions that are NaN instead of
+                       a norm blow-up (drawn per event).
+    """
+    abort_rate: float = 0.0
+    loss_rate: float = 0.0
+    corrupt_rate: float = 0.0
+    straggler_rate: float = 0.0
+    straggler_mult: float = 8.0
+    corrupt_scale: float = 1e8
+    corrupt_nan_frac: float = 0.5
+
+    def __post_init__(self):
+        for f in _RATE_FIELDS:
+            v = getattr(self, f)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{f} must be in [0, 1], got {v}")
+        if self.straggler_mult < 1.0:
+            raise ValueError("straggler_mult must be >= 1, "
+                             f"got {self.straggler_mult}")
+        if self.corrupt_scale <= 0.0:
+            raise ValueError("corrupt_scale must be > 0, "
+                             f"got {self.corrupt_scale}")
+
+    @property
+    def enabled(self) -> bool:
+        """Trace-time gate: False ⇒ the round body injects nothing and
+        traces zero additional ops (bitwise-golden static path)."""
+        return (self.abort_rate > 0.0 or self.loss_rate > 0.0
+                or self.corrupt_rate > 0.0 or self.straggler_rate > 0.0)
+
+
+class FaultParams(NamedTuple):
+    """Traced fault rates (0-d f32 scalars), carried inside
+    `core.methods.MethodParams` so a faulted campaign grid still traces
+    once. `corrupt_scale` / `corrupt_nan_frac` stay trace-time constants
+    read from the scenario's FaultCfg (they shape the corruption, not
+    per-method policy)."""
+    abort_rate: jax.Array
+    loss_rate: jax.Array
+    corrupt_rate: jax.Array
+    straggler_rate: jax.Array
+    straggler_mult: jax.Array
+
+
+def fault_params(cfg: Optional[FaultCfg]) -> FaultParams:
+    """Lower a FaultCfg (None ≡ disabled) to the traced pytree."""
+    c = cfg if cfg is not None else FaultCfg()
+    f = lambda v: jnp.asarray(v, jnp.float32)  # noqa: E731
+    return FaultParams(abort_rate=f(c.abort_rate), loss_rate=f(c.loss_rate),
+                       corrupt_rate=f(c.corrupt_rate),
+                       straggler_rate=f(c.straggler_rate),
+                       straggler_mult=f(c.straggler_mult))
+
+
+class FaultDraws(NamedTuple):
+    """One round's per-device U(0,1) fields, all from the single folded
+    fault key. `h_frac` is the abort progress fraction (how much of the
+    local compute ran before the crash); `u_cmode` picks NaN vs blow-up
+    per corruption event."""
+    u_straggler: jax.Array  # (S,)
+    u_abort: jax.Array      # (S,)
+    h_frac: jax.Array       # (S,)
+    u_loss: jax.Array       # (S,)
+    u_corrupt: jax.Array    # (S,)
+    u_cmode: jax.Array      # (S,)
+
+
+def fault_draws(round_key: jax.Array, n_devices: int) -> FaultDraws:
+    """All of a round's fault randomness in one (6, S) uniform draw from
+    the FAULT_SALT side-channel — the base PRNG stream never moves."""
+    kf = jax.random.fold_in(round_key, FAULT_SALT)
+    u = jax.random.uniform(kf, (6, n_devices))
+    return FaultDraws(u_straggler=u[0], u_abort=u[1], h_frac=u[2],
+                      u_loss=u[3], u_corrupt=u[4], u_cmode=u[5])
+
+
+def corrupt_cohort(client_params, global_params, corrupt_k: jax.Array,
+                   u_cmode_k: jax.Array, *, scale: float, nan_frac: float):
+    """Corrupt the marked cohort slots' updates in place.
+
+    client_params: (K, ...)-leaf pytree of post-training local params;
+    corrupt_k: (K,) bool mask; u_cmode_k: (K,) uniform picking the
+    corruption mode. A corrupted slot's delta θ_k − θ is either replaced
+    by NaN (u < nan_frac) or scaled by `scale` (norm blow-up, typically
+    overflowing to ±inf in f32) — both must be caught by the robust
+    screen before aggregation."""
+    factor = jnp.where(u_cmode_k < nan_frac, jnp.nan, scale)
+
+    def leaf(c, g):
+        shape = (c.shape[0],) + (1,) * (c.ndim - 1)
+        m = corrupt_k.reshape(shape)
+        f = factor.reshape(shape).astype(c.dtype)
+        return jnp.where(m, g + (c - g) * f, c)
+
+    return jax.tree.map(leaf, client_params, global_params)

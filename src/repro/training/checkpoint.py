@@ -2,17 +2,37 @@
 
 Trees are flattened with '/'-joined key paths; dtypes/shapes round-trip
 exactly. bf16 is stored via uint16 bit-view (npz has no bfloat16).
+
+On top of the raw save/load pair sits the *verified* checkpoint layer
+used by the engine's exact resume (`launch.engine.EngineCfg.
+checkpoint_every`): `save_checkpoint` writes a sha256 sidecar next to
+the npz, `load_checkpoint` refuses a payload whose bytes don't match it,
+and `load_latest` walks a checkpoint directory newest→oldest skipping
+anything corrupt (bad sha, truncated npz, structure mismatch) — a
+crashed run resumes from the newest *intact* boundary. `tree_digest`
+gives the canonical carry fingerprint the resume-equivalence gates
+compare (CI chaos-smoke, tests/test_checkpoint_resume.py).
 """
 from __future__ import annotations
 
+import glob
+import hashlib
 import os
-from typing import Any, Dict
+import re
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 _BF16_SUFFIX = "::bf16"
+_SHA_SUFFIX = ".sha256"
+_CKPT_RE = re.compile(r"ckpt_r(\d+)\.npz$")
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint failed verification (sha mismatch) or deserialization
+    (unreadable npz / tree-structure mismatch with the `like` carry)."""
 
 
 def _path_str(path) -> str:
@@ -59,6 +79,122 @@ def load(path: str, like: Any) -> Any:
         else:
             arr = stored[key]
         assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
-        return jnp.asarray(arr, dtype=leaf.dtype)
+        # copy=True: a zero-copy view of the numpy buffer is NOT safe to
+        # donate — the engine feeds loaded carries straight into
+        # donate_argnums jits, and a donated alias of host memory leaves
+        # pass-through leaves dangling once the base array is released
+        return jnp.array(arr, dtype=leaf.dtype, copy=True)
 
     return jax.tree_util.tree_map_with_path(restore, like)
+
+
+# ------------------------------------------------- verified checkpoints
+
+def _sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
+def save_checkpoint(path: str, tree: Any) -> str:
+    """`save` + a sha256 sidecar (`path + '.sha256'`) over the npz bytes
+    so a later resume can detect torn/corrupted files. The npz write is
+    already atomic (tmp + os.replace); the sidecar lands after it, so a
+    crash between the two leaves an npz without a sidecar — which
+    `load_checkpoint(verify=True)` rejects, exactly the conservative
+    behaviour resume-with-fallback wants. Returns `path`."""
+    save(path, tree)
+    digest = _sha256_file(path)
+    tmp = path + _SHA_SUFFIX + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(digest + "\n")
+    os.replace(tmp, path + _SHA_SUFFIX)
+    return path
+
+
+def load_checkpoint(path: str, like: Any, *, verify: bool = True) -> Any:
+    """`load` with integrity checks: with `verify` the sha256 sidecar
+    must exist and match the npz bytes. Any failure — missing/stale
+    sidecar, unreadable npz, shape/structure mismatch against `like` —
+    raises `CheckpointError` (never a partial tree), which `load_latest`
+    turns into fall-back-to-the-previous-checkpoint."""
+    if verify:
+        sidecar = path + _SHA_SUFFIX
+        if not os.path.exists(sidecar):
+            raise CheckpointError(f"{path}: missing {_SHA_SUFFIX} sidecar")
+        with open(sidecar) as f:
+            expect = f.read().strip()
+        got = _sha256_file(path)
+        if got != expect:
+            raise CheckpointError(
+                f"{path}: sha256 mismatch (file {got[:12]}… != sidecar "
+                f"{expect[:12]}…)")
+    try:
+        return load(path, like)
+    except CheckpointError:
+        raise
+    except Exception as e:  # unreadable npz / missing key / bad shape
+        raise CheckpointError(f"{path}: failed to deserialize: {e}") from e
+
+
+def checkpoint_paths(ckpt_dir: str) -> List[str]:
+    """Engine-written checkpoints in `ckpt_dir` (ckpt_r{round:08d}.npz),
+    sorted by round ascending."""
+    paths = glob.glob(os.path.join(ckpt_dir, "ckpt_r*.npz"))
+    keyed = []
+    for p in paths:
+        m = _CKPT_RE.search(os.path.basename(p))
+        if m:
+            keyed.append((int(m.group(1)), p))
+    return [p for _, p in sorted(keyed)]
+
+
+def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
+    """Newest engine checkpoint in `ckpt_dir`, or None."""
+    paths = checkpoint_paths(ckpt_dir)
+    return paths[-1] if paths else None
+
+
+def load_latest(path_or_dir: str, like: Any, *,
+                verify: bool = True) -> Tuple[Any, str]:
+    """Resume entry point: a file loads that exact checkpoint; a
+    directory walks the engine checkpoints newest→oldest and returns the
+    first that verifies and deserializes, so a run whose final write was
+    torn by a crash falls back to the previous intact boundary instead
+    of dying. Returns (tree, path). Raises `CheckpointError` when no
+    candidate survives."""
+    if os.path.isdir(path_or_dir):
+        candidates = list(reversed(checkpoint_paths(path_or_dir)))
+        if not candidates:
+            raise CheckpointError(f"{path_or_dir}: no ckpt_r*.npz found")
+    else:
+        candidates = [path_or_dir]
+    errors = []
+    for p in candidates:
+        try:
+            return load_checkpoint(p, like, verify=verify), p
+        except CheckpointError as e:
+            errors.append(str(e))
+    raise CheckpointError("no usable checkpoint: " + "; ".join(errors))
+
+
+def tree_digest(tree: Any) -> str:
+    """Canonical sha256 fingerprint of a pytree: path-sorted
+    (path, shape, dtype, raw bytes) per leaf. Two trees digest equal iff
+    they are bitwise-identical with the same structure — the comparison
+    primitive behind the checkpoint/resume equivalence gates."""
+    rows: List[Tuple[str, np.ndarray]] = []
+
+    def record(p, leaf):
+        rows.append((_path_str(p), np.asarray(leaf)))
+
+    jax.tree_util.tree_map_with_path(record, tree)
+    h = hashlib.sha256()
+    for key, arr in sorted(rows, key=lambda kv: kv[0]):
+        h.update(key.encode())
+        h.update(str(arr.shape).encode())
+        h.update(str(arr.dtype).encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()

@@ -1,0 +1,121 @@
+"""Property-based invariants of the fault-injection layer (hypothesis).
+
+Skips cleanly when hypothesis isn't installed (it is not baked into the
+repro container — same convention as tests/test_async_property.py).
+
+Invariants, each over randomized seeds/fault rates on a *static*
+scenario (no charging, so the energy ledger closes exactly):
+
+  energy conservation   fleet battery drained == round_energy metric,
+                        aborts included (a partial drain is still a
+                        drain — no energy is created or lost)
+  no resurrection       a dropped device never re-enters participation
+  corrupted ⊆ rejected  every corrupted-and-delivered update is caught
+                        by the screen when corruption is a minority
+  deadline monotone     a tighter deadline never cuts fewer devices
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import FLConfig, METHODS, ResilienceCfg  # noqa: E402
+from repro.core.policy import PolicyCfg  # noqa: E402
+from repro.core.round import make_round_body  # noqa: E402
+from repro.core.state import init_fleet_state  # noqa: E402
+from repro.launch.fl_run import build_task  # noqa: E402
+from repro.models.fl_models import make_fl_model  # noqa: E402
+from repro.sim.devices import build_fleet  # noqa: E402
+from repro.sim.dynamics import Scenario, init_env_state  # noqa: E402
+from repro.sim.faults import FaultCfg  # noqa: E402
+
+N, K = 10, 4
+
+_CACHE = {}
+
+
+def _setup():
+    if not _CACHE:
+        _CACHE["model"] = make_fl_model("cnn@mnist", small=True)
+        _CACHE["fleet"] = build_fleet(N, seed=0, init_energy_mean=0.3)
+        cx, cy, _ = build_task("cnn@mnist", N, 0.8, per_client=16,
+                               n_test=32)
+        _CACHE["cx"], _CACHE["cy"] = cx, cy
+        _CACHE["cfg"] = FLConfig(n_select=K, batch_size=4, probe_size=4,
+                                 lr=0.05, uplink_bits=16e6,
+                                 policy=PolicyCfg(H0=2, H_max=6))
+    return _CACHE
+
+
+def _one_round(seed, faults: FaultCfg, resilience=None):
+    """Run a single round body on fresh state; return (metrics,
+    e_before, e_after, dropped_before, dropped_after)."""
+    s = _setup()
+    cfg = s["cfg"]
+    if resilience is not None:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, resilience=resilience)
+    sc = Scenario(name="prop", static=True, faults=faults)
+    body = make_round_body(s["model"], cfg, METHODS["rewafl"], sc)
+    params = s["model"].init(jax.random.PRNGKey(0))
+    state = init_fleet_state(s["fleet"], H0=cfg.policy.H0)
+    env = init_env_state(s["fleet"], sc)
+    e0 = np.asarray(state.residual_energy, np.float64)
+    d0 = np.asarray(state.dropped)
+    _, state2, _, m = body(params, state, env, s["fleet"], s["cx"],
+                           s["cy"], jax.random.PRNGKey(seed),
+                           jnp.asarray(0, jnp.int32))
+    e1 = np.asarray(state2.residual_energy, np.float64)
+    d1 = np.asarray(state2.dropped)
+    return m, e0, e1, d0, d1
+
+
+rates = st.sampled_from([0.0, 0.1, 0.3, 0.6, 0.9])
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=seeds, abort=rates, straggler=rates)
+def test_energy_conservation_under_aborts(seed, abort, straggler):
+    faults = FaultCfg(abort_rate=abort, straggler_rate=straggler)
+    m, e0, e1, _, _ = _one_round(seed, faults)
+    drained = float(np.sum(e0 - e1))
+    assert (e0 - e1 >= -1e-9).all()  # a static fleet never charges
+    np.testing.assert_allclose(drained, float(m["round_energy"]),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=seeds, abort=rates, corrupt=rates)
+def test_dropped_devices_stay_dropped(seed, abort, corrupt):
+    faults = FaultCfg(abort_rate=abort, corrupt_rate=corrupt)
+    _, _, _, d0, d1 = _one_round(seed, faults)
+    assert not np.any(d0 & ~d1)  # once dropped, always dropped
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=seeds, corrupt=st.sampled_from([0.1, 0.2, 0.3]))
+def test_corrupted_updates_are_rejected(seed, corrupt):
+    """With minority corruption the median norm stays honest, so every
+    corrupted-and-delivered update is screened out (the screen may
+    additionally reject honest outliers — ⊇, not ==)."""
+    m, *_ = _one_round(seed, FaultCfg(corrupt_rate=corrupt))
+    assert int(m["n_rejected"]) >= int(m["n_corrupted"])
+    assert np.isfinite(float(m["global_loss"]))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=seeds, frac=st.sampled_from([0.2, 0.5, 0.9]))
+def test_deadline_cut_monotone(seed, frac):
+    """cuts(tight deadline) >= cuts(loose deadline) on the same draws."""
+    faults = FaultCfg(straggler_rate=0.5, straggler_mult=20.0)
+    m0, *_ = _one_round(seed, faults)
+    lat = float(m0["round_latency"])
+    loose, tight = lat * max(frac, 0.5) * 2.0, lat * frac
+    m_loose, *_ = _one_round(seed, faults, ResilienceCfg(deadline_s=loose))
+    m_tight, *_ = _one_round(seed, faults, ResilienceCfg(deadline_s=tight))
+    assert int(m_tight["n_deadline_cut"]) >= int(m_loose["n_deadline_cut"])
+    assert float(m_tight["round_latency"]) <= tight * (1 + 1e-5)

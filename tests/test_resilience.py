@@ -1,0 +1,395 @@
+"""Chaos/resilience subsystem tests (sim.faults + core.resilience +
+the async slot TTL): config validation, the robust screen's unit
+semantics (NaN / norm-outlier rejection, no false positives on clean
+cohorts), fault-injection integration on the chaos scenarios (counters,
+screen keeps the loss finite under corruption, health totals), round
+deadlines (cut monotonicity, latency clamp), slot-TTL expiry/retry
+conservation, and the async strict-trigger liveness regression
+(a terminal sub-M residue must still land)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AsyncCfg, FLConfig, METHODS, ResilienceCfg,
+                        TelemetryCfg, screen_updates)
+from repro.core.async_agg import expire_and_retry, push_cohort
+from repro.core.policy import PolicyCfg
+from repro.core.resilience import delta_norms, masked_median
+from repro.core.round import make_async_round_body, make_round_body
+from repro.core.state import init_async_state, init_fleet_state
+from repro.launch import engine as eng
+from repro.launch.fl_run import build_task
+from repro.models.fl_models import make_fl_model
+from repro.obs.health import HealthCfg
+from repro.sim.devices import build_fleet
+from repro.sim.dynamics import SCENARIOS, Scenario, init_env_state
+from repro.sim.faults import FaultCfg, fault_draws
+
+N, K = 10, 4
+
+FAULT_KEYS = ("n_aborted", "n_lost", "n_corrupted", "n_straggler")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = make_fl_model("cnn@mnist", small=True)
+    fleet = build_fleet(N, seed=0, init_energy_mean=0.3)
+    cx, cy, _ = build_task("cnn@mnist", N, 0.8, per_client=16, n_test=32)
+    cfg = FLConfig(n_select=K, batch_size=4, probe_size=4, lr=0.05,
+                   uplink_bits=16e6, policy=PolicyCfg(H0=2, H_max=6))
+    return model, fleet, cx, cy, cfg
+
+
+def static_faults(**kw) -> Scenario:
+    """A static-paper twin with fault injection on — isolates the chaos
+    layer from the dynamics processes (no charging/churn/channel)."""
+    return Scenario(name="test-faults", static=True, faults=FaultCfg(**kw))
+
+
+def _run(setup, *, scenario=None, cfg=None, rounds=6, chunk=2,
+         async_cfg=None, health=None, telemetry=None):
+    model, fleet, cx, cy, base_cfg = setup
+    return eng.run_rounds(
+        model, fleet, cx, cy, cfg or base_cfg, METHODS["rewafl"],
+        rounds=rounds, key=jax.random.PRNGKey(7),
+        params=model.init(jax.random.PRNGKey(0)), scenario=scenario,
+        env_key=jax.random.PRNGKey(3),
+        ecfg=eng.EngineCfg(chunk_size=chunk, async_cfg=async_cfg,
+                           health=health,
+                           telemetry=telemetry or TelemetryCfg()))
+
+
+# ------------------------------------------------------- config contracts
+
+def test_fault_cfg_validation():
+    with pytest.raises(ValueError):
+        FaultCfg(abort_rate=1.5)
+    with pytest.raises(ValueError):
+        FaultCfg(loss_rate=-0.1)
+    with pytest.raises(ValueError):
+        FaultCfg(straggler_rate=0.1, straggler_mult=0.5)
+    with pytest.raises(ValueError):
+        FaultCfg(corrupt_scale=0.0)
+    assert not FaultCfg().enabled
+    assert FaultCfg(abort_rate=0.01).enabled
+    assert FaultCfg(straggler_rate=0.01).enabled
+
+
+def test_resilience_cfg_validation():
+    with pytest.raises(ValueError):
+        ResilienceCfg(deadline_s=0.0)
+    with pytest.raises(ValueError):
+        ResilienceCfg(screen="sometimes")
+    with pytest.raises(ValueError):
+        ResilienceCfg(norm_mult=1.0)
+    r = ResilienceCfg()
+    assert r.screen_on(True) and not r.screen_on(False)  # auto
+    assert ResilienceCfg(screen="on").screen_on(False)
+    assert not ResilienceCfg(screen="off").screen_on(True)
+
+
+def test_chaos_scenarios_registered():
+    for name in ("lossy-uplink", "flaky-fleet"):
+        sc = SCENARIOS[name]
+        assert sc.faults.enabled and sc.dynamic
+    assert not SCENARIOS["static-paper"].faults.enabled
+
+
+def test_fault_draws_are_a_prng_side_channel():
+    """The fault draws fold a salt off the round key — the base stream
+    (what selection/training split) is untouched, and the draws are
+    deterministic in the key."""
+    key = jax.random.PRNGKey(11)
+    d1, d2 = fault_draws(key, N), fault_draws(key, N)
+    for a, b in zip(d1, d2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # a different round key gives different draws
+    d3 = fault_draws(jax.random.PRNGKey(12), N)
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(d1, d3))
+
+
+# ------------------------------------------------------ screen unit tests
+
+def _cohort(deltas):
+    """Tiny (K, 3) single-leaf cohort around a zero global model."""
+    g = {"w": jnp.zeros((3,), jnp.float32)}
+    c = {"w": jnp.asarray(deltas, jnp.float32)}
+    return g, c
+
+
+def test_masked_median():
+    v = jnp.asarray([3.0, 1.0, 2.0, 9.0])
+    assert float(masked_median(v, jnp.ones(4, bool))) == 2.0
+    assert float(masked_median(v, jnp.asarray([False, True, False, True]))) \
+        == 1.0
+    assert float(masked_median(v, jnp.zeros(4, bool))) == 0.0
+
+
+def test_screen_rejects_nan_and_norm_outliers():
+    g, c = _cohort([[1.0, 0, 0],        # honest
+                    [np.nan, 0, 0],     # non-finite
+                    [1e6, 0, 0],        # norm blow-up
+                    [0.8, 0.1, 0]])     # honest
+    w = jnp.ones((4,), jnp.float32)
+    clean, new_w, reject = screen_updates(g, c, w, norm_mult=10.0)
+    np.testing.assert_array_equal(np.asarray(reject),
+                                  [False, True, True, False])
+    np.testing.assert_array_equal(np.asarray(new_w), [1, 0, 0, 1])
+    # rejected rows are θ (zero delta) — no NaN survives to aggregation
+    assert np.isfinite(np.asarray(clean["w"])).all()
+    np.testing.assert_array_equal(np.asarray(clean["w"])[1], [0, 0, 0])
+    # honest rows pass through bit-untouched
+    np.testing.assert_array_equal(np.asarray(clean["w"])[0],
+                                  np.asarray(c["w"])[0])
+
+
+def test_screen_ignores_zero_weight_slots():
+    """Weight-0 slots (dead pads, failed/lost devices) are not
+    candidates: never rejected, never anchoring the median."""
+    g, c = _cohort([[1.0, 0, 0], [1e9, 0, 0], [1.2, 0, 0], [0.9, 0, 0]])
+    w = jnp.asarray([1.0, 0.0, 1.0, 1.0])  # the blow-up slot is dead
+    clean, new_w, reject = screen_updates(g, c, w, norm_mult=10.0)
+    assert not bool(reject.any())
+    np.testing.assert_array_equal(np.asarray(new_w), np.asarray(w))
+
+
+def test_screen_clean_cohort_no_false_positives():
+    g, c = _cohort([[1.0, 0, 0], [0.9, 0.2, 0], [1.1, 0, 0.1],
+                    [0.7, 0.3, 0]])
+    w = jnp.ones((4,), jnp.float32)
+    clean, new_w, reject = screen_updates(g, c, w, norm_mult=10.0)
+    assert not bool(reject.any())
+    for a, b in zip(jax.tree.leaves(clean), jax.tree.leaves(c)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_delta_norms():
+    g, c = _cohort([[3.0, 4.0, 0], [0, 0, 0], [1, 0, 0], [0, 2, 0]])
+    np.testing.assert_allclose(np.asarray(delta_norms(g, c)),
+                               [5.0, 0.0, 1.0, 2.0], rtol=1e-6)
+
+
+# --------------------------------------------- fault-injection integration
+
+def test_fault_counters_and_finite_loss_under_corruption(setup):
+    """The acceptance scenario: corruption on, screen auto-on — the
+    final params and loss stay finite, the corrupted updates are all
+    rejected (rejected == corrupted round-for-round at this seed), and
+    the health report carries nonzero rejected totals."""
+    sc = static_faults(abort_rate=0.2, corrupt_rate=0.3,
+                       straggler_rate=0.3)
+    res = _run(setup, scenario=sc, health=HealthCfg())
+    h = res.history
+    for k in FAULT_KEYS + ("n_rejected",):
+        assert k in h, k
+    assert int(np.sum(h["n_corrupted"])) > 0
+    np.testing.assert_array_equal(np.asarray(h["n_rejected"]),
+                                  np.asarray(h["n_corrupted"]))
+    assert np.isfinite(np.asarray(h["global_loss"])).all()
+    for leaf in jax.tree.leaves(res.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+    # report-only health totals, and chaos never flips ok by itself
+    assert res.health.metrics["n_rejected_total"] > 0
+    assert res.health.metrics["n_corrupted_total"] == \
+        res.health.metrics["n_rejected_total"]
+    # upload loss is gated on the bad channel — inert on static scenarios
+    assert int(np.sum(h["n_lost"])) == 0
+
+
+def test_aborts_drain_partial_energy(setup):
+    """An aborted participant burns strictly less than its full round
+    cost but strictly more than nothing. The fault draws are a PRNG
+    side channel, so round 0 of an abort run shares selections and
+    costs with the abort-free run — after that, state feedback diverges
+    the streams, so compare the single shared round."""
+    base = _run(setup, scenario=static_faults(straggler_rate=0.01),
+                rounds=1, chunk=1)
+    ab = _run(setup, scenario=static_faults(abort_rate=0.9,
+                                            straggler_rate=0.01),
+              rounds=1, chunk=1)
+    np.testing.assert_array_equal(np.asarray(base.history["selected"]),
+                                  np.asarray(ab.history["selected"]))
+    e_base = float(np.asarray(base.history["round_energy"])[0])
+    e_ab = float(np.asarray(ab.history["round_energy"])[0])
+    assert int(np.asarray(ab.history["n_aborted"])[0]) > 0
+    assert 0.0 < e_ab < e_base
+
+
+def test_dropped_devices_never_resurrect_static(setup):
+    """On a static scenario, dropout is permanent even under chaos: the
+    per-round dropped count is nondecreasing."""
+    res = _run(setup, scenario=static_faults(abort_rate=0.3,
+                                             corrupt_rate=0.2), rounds=8)
+    nd = np.asarray(res.history["n_dropped"])
+    assert (np.diff(nd) >= 0).all()
+
+
+def test_lossy_uplink_loses_updates(setup):
+    """On the dynamic lossy-uplink scenario the Gilbert–Elliott bad
+    state actually loses uploads."""
+    res = _run(setup, scenario=SCENARIOS["lossy-uplink"])
+    assert int(np.sum(res.history["n_lost"])) > 0
+    assert int(np.sum(res.history["n_straggler"])) > 0
+
+
+def test_screen_on_clean_run_is_inert(setup):
+    """screen='on' with zero faults: no rejections at this seed and the
+    history matches the unscreened run exactly (the screen only traces
+    masked ops that reduce to identity on clean cohorts)."""
+    model, fleet, cx, cy, cfg = setup
+    scfg = dataclasses.replace(cfg, resilience=ResilienceCfg(screen="on"))
+    plain = _run(setup)
+    screened = _run(setup, cfg=scfg)
+    assert int(np.sum(screened.history["n_rejected"])) == 0
+    for k in ("global_loss", "round_energy", "n_participating"):
+        np.testing.assert_array_equal(np.asarray(plain.history[k]),
+                                      np.asarray(screened.history[k]), k)
+    for a, b in zip(jax.tree.leaves(plain.params),
+                    jax.tree.leaves(screened.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------- round deadline
+
+def test_deadline_cuts_stragglers_and_clamps_latency(setup):
+    model, fleet, cx, cy, cfg = setup
+    sc = static_faults(straggler_rate=0.5, straggler_mult=20.0)
+    base = _run(setup, scenario=sc)
+    lat = np.asarray(base.history["round_latency"], np.float64)
+    deadline = float(np.median(lat))  # cuts some rounds' stragglers
+    dcfg = dataclasses.replace(cfg,
+                               resilience=ResilienceCfg(deadline_s=deadline))
+    res = _run(setup, scenario=sc, cfg=dcfg)
+    h = res.history
+    assert int(np.sum(h["n_deadline_cut"])) > 0
+    # latency is clamped in f32 — allow the representation gap
+    assert (np.asarray(h["round_latency"], np.float64)
+            <= deadline * (1.0 + 1e-5)).all()
+
+
+def test_deadline_cut_monotone_in_deadline(setup):
+    """A tighter deadline never cuts fewer devices (same PRNG stream up
+    to the first divergence — compare round 0, which shares selections
+    and straggler draws across deadlines)."""
+    model, fleet, cx, cy, cfg = setup
+    sc = static_faults(straggler_rate=0.5, straggler_mult=20.0)
+    body_lat = _run(setup, scenario=sc, rounds=1, chunk=1)
+    lat = float(np.asarray(body_lat.history["round_latency"])[0])
+    cuts = []
+    for d in (lat * 2.0, lat * 0.6, lat * 0.2):
+        dcfg = dataclasses.replace(cfg,
+                                   resilience=ResilienceCfg(deadline_s=d))
+        r = _run(setup, scenario=sc, cfg=dcfg, rounds=1, chunk=1)
+        cuts.append(int(np.asarray(r.history["n_deadline_cut"])[0]))
+    assert cuts == sorted(cuts)
+
+
+# ------------------------------------------------------- async TTL + retry
+
+def test_expire_and_retry_unit():
+    """Slot TTL mechanics: overdue slots get their remaining delay
+    backed off up to max_retries, then expire (slot freed, counted);
+    conservation holds with the expiry term."""
+    params = {"w": jnp.zeros((2,), jnp.float32)}
+    ast = init_async_state(params, 6, 4)
+    ast, n = push_cohort(ast, {"w": jnp.zeros((2, 2), jnp.float32)},
+                         jnp.asarray([0, 1], jnp.int32),
+                         jnp.ones(2, bool), jnp.ones(2, jnp.float32),
+                         jnp.asarray([100.0, 1.0], jnp.float32))
+    assert int(n) == 2
+    kw = dict(ttl=10.0, max_retries=2, retry_backoff=0.5)
+    ast, info = expire_and_retry(ast, **kw)          # 100 -> 50
+    assert (int(info["n_retried"]), int(info["n_expired"])) == (1, 0)
+    ast, info = expire_and_retry(ast, **kw)          # 50 -> 25
+    assert (int(info["n_retried"]), int(info["n_expired"])) == (1, 0)
+    ast, info = expire_and_retry(ast, **kw)          # retries exhausted
+    assert (int(info["n_retried"]), int(info["n_expired"])) == (0, 1)
+    occ = int(jnp.sum(ast.slot_live))
+    assert occ == 1                                   # the 1 s slot lives
+    assert int(ast.n_expired) == 1
+    assert int(ast.n_dispatched) == int(ast.n_landed) + int(
+        ast.n_expired) + occ
+    # the fast slot was never touched
+    ast, info = expire_and_retry(ast, **kw)
+    assert (int(info["n_retried"]), int(info["n_expired"])) == (0, 0)
+
+
+def test_async_cfg_ttl_validation():
+    with pytest.raises(ValueError):
+        AsyncCfg(buffer_m=2, ttl=0.0)
+    with pytest.raises(ValueError):
+        AsyncCfg(buffer_m=2, ttl=1.0, max_retries=-1)
+    with pytest.raises(ValueError):
+        AsyncCfg(buffer_m=2, ttl=1.0, retry_backoff=1.0)
+
+
+def test_async_ttl_engine_counters(setup):
+    """Engine-level TTL: a straggler-heavy async run with a tight TTL
+    reports retries/expiries and keeps the buffer conserved."""
+    sc = static_faults(straggler_rate=0.5, straggler_mult=50.0)
+    res = _run(setup, scenario=sc,
+               async_cfg=AsyncCfg(buffer_m=2, ttl=200.0, max_retries=1,
+                                  retry_backoff=0.5))
+    h = res.history
+    assert "n_retried" in h and "n_expired" in h
+    assert int(np.sum(h["n_retried"])) + int(np.sum(h["n_expired"])) > 0
+    ast = res.async_state
+    occ = int(jnp.sum(ast.slot_live))
+    assert int(ast.n_dispatched) == int(ast.n_landed) + int(
+        ast.n_expired) + occ
+
+
+# ------------------------------------- strict-trigger liveness regression
+
+def test_async_strict_trigger_residue_lands(setup):
+    """Regression for the `pending >= M` deadlock: a sub-M residue left
+    in the buffer when a round pushes NOTHING (here: every participant
+    aborts) must still land instead of parking forever. Round 0 (fault-
+    free body, M=8 > K) parks a 4-update residue; round 1 (abort-all
+    body, n_pushed=0) used to leave it pending — the relaxed trigger
+    lands it."""
+    model, fleet, cx, cy, cfg = setup
+    acfg = AsyncCfg(buffer_m=2 * K)  # trigger no cohort can reach
+    push_body = make_async_round_body(
+        model, cfg, METHODS["rewafl"],
+        Scenario(name="nofault", static=True), acfg)
+    stall_body = make_async_round_body(
+        model, cfg, METHODS["rewafl"], static_faults(abort_rate=1.0), acfg)
+    params = model.init(jax.random.PRNGKey(0))
+    state = init_fleet_state(fleet, H0=cfg.policy.H0)
+    env = init_env_state(fleet, Scenario(name="nofault", static=True))
+    astate = init_async_state(params, N, acfg.slots(K))
+    key = jax.random.PRNGKey(7)
+    key, k0 = jax.random.split(key)
+    params, state, astate, env, m0 = push_body(
+        params, state, astate, env, fleet, cx, cy, k0,
+        jnp.asarray(0, jnp.int32))
+    residue = int(m0["n_pending"])
+    assert 0 < residue < 2 * K          # parked below the trigger
+    assert int(m0["n_landed"]) == 0
+    key, k1 = jax.random.split(key)
+    params, state, astate, env, m1 = stall_body(
+        params, state, astate, env, fleet, cx, cy, k1,
+        jnp.asarray(1, jnp.int32))
+    assert int(m1["n_aborted"]) == int(np.sum(np.asarray(m1["n_participating"])))
+    assert int(m1["n_landed"]) == residue   # the residue landed
+    assert int(m1["n_pending"]) == 0
+    assert int(astate.n_dispatched) == int(astate.n_landed)
+
+
+def test_async_nonstuck_trigger_unchanged(setup):
+    """The liveness fix is a no-op whenever the round pushed something:
+    M=K async remains bitwise sync-equivalent (covered by
+    test_async_engine) and at M<K the per-round land counts still never
+    exceed the pushes plus prior residue."""
+    res = _run(setup, async_cfg=AsyncCfg(buffer_m=2))
+    h = res.history
+    ast = res.async_state
+    occ = int(jnp.sum(ast.slot_live))
+    assert int(ast.n_dispatched) == int(ast.n_landed) + occ
+    assert occ < 2  # always drained below the trigger
+    assert (np.asarray(h["n_pending"]) < 2).all()
