@@ -27,6 +27,16 @@ static-analysis job records in BENCH_jaxpr.json without enumerating
 the scenario matrix. A glob expands over *baseline* keys carrying the
 metric (a glob matching nothing is reported and counts as a gate
 failure — a renamed key family must not silently un-gate itself).
+
+`--min-spec KEY:METRIC:FLOOR` gates an *absolute* floor on the fresh
+run, independent of the baseline — for acceptance criteria that are a
+property of the code, not of the runner (e.g. the fused selection
+pass must stay ≥ 1.5× the XLA composition:
+`--min-spec fused_select_S100000:speedup_vs_xla:1.5`). A ratio spec
+can't express this: on a ratio gate, a baseline that itself slipped
+below the floor would keep passing. The key must exist in the fresh
+run — a bench that stops emitting a min-gated row fails the gate.
+
 The legacy single-group flags still work:
 
   python -m benchmarks.check_regression BENCH_engine.json \
@@ -42,6 +52,18 @@ from typing import Optional, Sequence, Tuple
 
 # (keys or None for all-carrying, metric, direction, max_drop)
 Spec = Tuple[Optional[Sequence[str]], str, str, float]
+# (key, metric, floor) — absolute fresh-run floor, baseline-independent
+MinSpec = Tuple[str, str, float]
+
+
+def parse_min_spec(text: str) -> MinSpec:
+    """Parse a KEY:METRIC:FLOOR absolute-floor gate."""
+    parts = text.split(":")
+    if len(parts) != 3:
+        raise ValueError(
+            f"bad --min-spec {text!r}: want KEY:METRIC:FLOOR")
+    key, metric, floor_s = parts
+    return key, metric, float(floor_s)
 
 
 def parse_spec(text: str) -> Spec:
@@ -127,10 +149,28 @@ def _check_group(base, fresh, keys, metric: str, max_drop: float,
     return failures
 
 
+def _check_min(fresh, key: str, metric: str, floor: float,
+               fresh_path: str) -> int:
+    """Absolute fresh-run floor. A missing key FAILS (unlike the ratio
+    groups' warn-and-skip): an acceptance floor that silently un-gates
+    itself when the bench row disappears is no gate at all."""
+    if not _carries(fresh, key, metric):
+        print(f"FAIL {key}.{metric}: min-gated key missing from fresh "
+              f"run {fresh_path}")
+        return 1
+    v = float(fresh[key][metric])
+    ok = v >= floor
+    print(f"{'OK' if ok else 'FAIL'} {key}.{metric}: fresh={_fmt(v)} "
+          f"(absolute floor {floor:g})")
+    return 0 if ok else 1
+
+
 def check_specs(baseline_path: str, fresh_path: str,
-                specs: Sequence[Spec]) -> int:
-    """Gate every spec group; report ALL violations, then exit non-zero
-    if any group failed."""
+                specs: Sequence[Spec],
+                min_specs: Sequence[MinSpec] = ()) -> int:
+    """Gate every spec group (ratio vs baseline) and every min-spec
+    (absolute fresh-run floor); report ALL violations, then exit
+    non-zero if any gate failed."""
     with open(baseline_path) as f:
         base = json.load(f)["results"]
     with open(fresh_path) as f:
@@ -139,6 +179,8 @@ def check_specs(baseline_path: str, fresh_path: str,
     for keys, metric, direction, max_drop in specs:
         failures += _check_group(base, fresh, keys, metric, max_drop,
                                  direction, baseline_path, fresh_path)
+    for key, metric, floor in min_specs:
+        failures += _check_min(fresh, key, metric, floor, fresh_path)
     if failures:
         print(f"# {failures} metric(s) regressed beyond tolerance")
     return 1 if failures else 0
@@ -161,6 +203,11 @@ def main() -> None:
                          "scan_round_S100:device_rounds_s:higher:0.30 — "
                          "one invocation gates every group and reports "
                          "all failures")
+    ap.add_argument("--min-spec", action="append", default=[],
+                    metavar="KEY:METRIC:FLOOR",
+                    help="repeatable absolute floor on the FRESH run "
+                         "(baseline-independent), e.g. "
+                         "fused_select_S100000:speedup_vs_xla:1.5")
     ap.add_argument("--keys", default=None,
                     help="legacy single group: comma-separated result "
                          "keys (default: every baseline key carrying "
@@ -177,10 +224,13 @@ def main() -> None:
     args = ap.parse_args()
     if args.spec:
         specs = [parse_spec(s) for s in args.spec]
+    elif args.min_spec and args.keys is None:
+        specs = []          # min-spec-only invocation: no default group
     else:
         keys = args.keys.split(",") if args.keys else None
         specs = [(keys, args.metric, args.direction, args.max_drop)]
-    sys.exit(check_specs(args.baseline, args.fresh, specs))
+    min_specs = [parse_min_spec(s) for s in args.min_spec]
+    sys.exit(check_specs(args.baseline, args.fresh, specs, min_specs))
 
 
 if __name__ == "__main__":

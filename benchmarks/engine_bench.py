@@ -30,6 +30,12 @@ the `core.resilience` robust screen auto-enabled); `fault_overhead` is
 the fractional us_per_round cost vs the paired same-scale static row —
 the CI bench-gate bounds its throughput like the async row.
 
+The `fused_select_S*` rows time the fused utility→top-K→FedAvg pass
+(`kernels/rewafl_select.select_aggregate`) against the XLA reference
+composition at S ∈ {10k, 100k} (plus 1M in full sweeps); CI gates the
+fused path's `device_rounds_s` ratio AND the absolute acceptance floor
+`speedup_vs_xla ≥ 1.5` at S=100k via `check_regression --min-spec`.
+
 The `engine_phases_S*` rows (repro.obs) run a short campaign through
 `run_rounds` under a span tracer + fleet-health monitors and report
 per-phase wall attribution — compile / dispatch / history-drain / eval
@@ -48,8 +54,10 @@ check_regression invocation so all failures report together):
   python -m benchmarks.check_regression BENCH_engine.json \
       /tmp/bench_fresh.json \
       --spec scan_round_S100,async_round_S100,fault_round_S100:device_rounds_s:higher:0.30 \
+      --spec 'fused_select_*:device_rounds_s:higher:0.30' \
       --spec campaign_grid_4x5:grid_wall_s:lower:0.30 \
-      --spec campaign_grid_4x5,engine_phases_S100:compile_s:lower:0.75
+      --spec campaign_grid_4x5,engine_phases_S100:compile_s:lower:0.75 \
+      --min-spec fused_select_S100000:speedup_vs_xla:1.5
 """
 from __future__ import annotations
 
@@ -163,6 +171,66 @@ def measure_engine(S: int, scenario: str = "static-paper", *,
             "timed_chunks": timed_chunks}
 
 
+def measure_fused_select(S: int, *, P: int = 64, k: int = 20,
+                         eps: float = 0.1, n: int = 10) -> Dict:
+    """Fused utility→top-K→FedAvg pass vs the XLA reference composition
+    at fleet scale S — the traced selection hot path the campaign-grid
+    engine compiles (`core.round` traced dispatch, `kernel_backend`).
+
+    Both backends run the identical composition — REWAFL utility from
+    the `UtilityInputs` leaves, traced-ε ε-greedy selection, mask →
+    K-row gather → `kernels/fedavg` weighted reduction — and differ
+    only in the selection lowering: 'xla' answers the two rank queries
+    with the (S,) stable-argsort rank space (`_desc_rank`, O(S log S)),
+    the fused path with the static-k_cap `lax.top_k` candidate emission
+    (`kernels/rewafl_select.select_traced`). ISSUE 10's acceptance
+    gates `speedup_vs_xla ≥ 1.5` at S=100k via CI `--min-spec`."""
+    from repro.core import utility as util
+    from repro.kernels.fedavg import ops as fedavg_ops
+    from repro.kernels.rewafl_select import ops as rsel
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+    ui = util.UtilityInputs(
+        stat=jax.random.uniform(ks[0], (S,)) * 3.0,
+        t=jax.random.uniform(ks[1], (S,)) * 2.0 + 0.1,
+        e=jax.random.uniform(ks[2], (S,)) * 0.05 + 0.01,
+        residual=jax.random.uniform(ks[3], (S,)) * 0.5 + 0.1,
+        e0=jnp.full((S,), 0.05))
+    available = jax.random.uniform(ks[4], (S,)) < 0.8
+    deltas = jax.random.normal(ks[5], (S, P), jnp.float32)
+    weights = jax.random.uniform(ks[6], (S,)) + 0.5
+    sel_key = ks[7]
+    eps_t = jnp.asarray(eps, jnp.float32)
+
+    def one(backend: str) -> float:
+        def pass_(kk):
+            utils = util.rewafl_utility_from(ui, T_round=1.0, alpha=2.0,
+                                             beta=2.0)
+            mask = rsel.select_traced(kk, utils, k, available, eps_t,
+                                      backend=backend)
+            idx = jnp.nonzero(mask, size=k, fill_value=0)[0]
+            live = jnp.arange(k) < mask.sum()
+            w = weights[idx] * live
+            wn = w / jnp.maximum(w.sum(), 1e-9)
+            return mask, fedavg_ops.weighted_aggregate(deltas[idx], wn)
+
+        f = jax.jit(pass_)
+        jax.block_until_ready(f(sel_key))  # compile
+        t0 = time.time()
+        for _ in range(n):
+            out = f(sel_key)
+        jax.block_until_ready(out[1])
+        return (time.time() - t0) / n * 1e6
+
+    us_xla = one("xla")
+    us_fused = one("pallas")
+    return {"S": S, "P": P, "k": k, "eps": eps,
+            "us_fused": us_fused, "us_xla": us_xla,
+            "device_rounds_s": S / us_fused * 1e6,
+            "xla_device_rounds_s": S / us_xla * 1e6,
+            "speedup_vs_xla": us_xla / us_fused}
+
+
 def measure_host_bytes(S: int = 10_000, rounds: int = 8,
                        chunk: int = 2) -> Dict:
     """Host-side history footprint, dense vs streaming, at fleet scale S.
@@ -174,19 +242,30 @@ def measure_host_bytes(S: int = 10_000, rounds: int = 8,
     of the dense path (the streaming footprint is R-independent). The
     projected columns extrapolate to the mega-fleet regime the ROADMAP
     targets (S=1M, R=500), where the dense per-device history alone is
-    ~2.5 GB per metric pair and streaming stays O(S)."""
-    from repro.core import FLConfig, METHODS, TelemetryCfg
+    ~2.5 GB per metric pair and streaming stays O(S).
+
+    The carry_bytes_* columns report the per-campaign scan-carry
+    footprint of the FleetState/EnvState leaves at this S, full-precision
+    vs `EngineCfg.compact_carry` (bf16 float leaves) — the saving the
+    compact-carry mode buys per grid cell at mega-fleet scale."""
+    from repro.core import (FLConfig, METHODS, TelemetryCfg,
+                            init_fleet_state)
     from repro.core.policy import PolicyCfg
-    from repro.launch.engine import EngineCfg, run_rounds
+    from repro.launch.engine import (EngineCfg, _compact_pair, run_rounds)
     from repro.launch.fl_run import build_task
     from repro.models.fl_models import make_fl_model
     from repro.sim.devices import build_fleet
+    from repro.sim.dynamics import init_env_state
 
     model = make_fl_model("cnn@mnist", small=True)
     cfg = FLConfig(n_select=20, batch_size=2, probe_size=2, lr=0.05,
                    uplink_bits=16e6, policy=PolicyCfg(H0=2, H_max=4))
     fleet = build_fleet(S, seed=0, init_energy_mean=0.3)
     cx, cy, _ = build_task("cnn@mnist", S, 0.8, per_client=2, n_test=16)
+
+    def tree_bytes(*trees):
+        return sum(int(jnp.asarray(leaf).nbytes)
+                   for t in trees for leaf in jax.tree.leaves(t))
 
     def one(streaming: bool):
         ecfg = EngineCfg(chunk_size=chunk,
@@ -207,7 +286,14 @@ def measure_host_bytes(S: int = 10_000, rounds: int = 8,
     dense_total, dense_per_dev = one(streaming=False)
     stream_total, _ = one(streaming=True)
     dense_rate = dense_per_dev / max(rounds, 1)        # bytes per round
+    state0 = init_fleet_state(fleet, H0=cfg.policy.H0)
+    env0 = init_env_state(fleet, None)
+    carry_full = tree_bytes(state0, env0)
+    carry_compact = tree_bytes(*_compact_pair(state0, env0))
     return {"S": S, "rounds": rounds,
+            "carry_bytes_f32": carry_full,
+            "carry_bytes_compact": carry_compact,
+            "carry_saving_frac": 1.0 - carry_compact / carry_full,
             "dense_bytes": dense_total,
             "streaming_bytes": stream_total,
             "dense_per_device_bytes_per_round": dense_rate,
@@ -356,16 +442,25 @@ def run(scales=SCALES, dynamic_scenario: Optional[str] = DYNAMIC_SCENARIO,
         out_path: str = OUT_PATH, timed_chunks: int = 1,
         grid: bool = True, grid_per_method: bool = True,
         streaming: bool = True, async_rows: bool = True,
-        phases: bool = True, fault_rows: bool = True):
+        phases: bool = True, fault_rows: bool = True,
+        fused_rows: bool = True):
     rows = []
     results: Dict[str, Dict] = {}
-    # 3 timed chunks at the largest scale: its static row doubles as the
-    # paired baseline for the dynamics-overhead ratio (CPU wall-clock
-    # drifts ±20% across a long process, so the ratio needs back-to-back
-    # samples — and the 10k build+compile is too expensive to repeat)
+    # any scale that serves as the paired baseline of an overhead ratio
+    # (dynamic / async / fault rows all divide by the same-scale static
+    # row) is measured with the SAME timed_chunks=3 the overhead rows
+    # use: best-of-3 vs single-shot would bias every ratio downward on
+    # a contended host. Non-paired scales keep the caller's setting.
+    paired = set()
+    if dynamic_scenario is not None:
+        paired.add(max(scales))
+    if async_rows:
+        paired |= {min(scales), max(scales)}
+    if fault_rows:
+        paired.add(min(scales))
     for S in scales:
-        many = S == max(scales) and dynamic_scenario is not None
-        r = measure_engine(S, timed_chunks=3 if many else timed_chunks)
+        r = measure_engine(
+            S, timed_chunks=3 if S in paired else timed_chunks)
         results[f"scan_round_S{S}"] = r
         rows.append((f"engine/scan_round_S{S}", r["us_per_round"],
                      f"rounds_s={r['rounds_s']:.2f};"
@@ -413,6 +508,22 @@ def run(scales=SCALES, dynamic_scenario: Optional[str] = DYNAMIC_SCENARIO,
                      r["us_per_round"],
                      f"rounds_s={r['rounds_s']:.2f};"
                      f"dyn_overhead={overhead:+.3f}"))
+    if fused_rows:
+        # fused utility→top-K→FedAvg pass vs the XLA reference
+        # composition (kernels/rewafl_select). Fixed scales independent
+        # of --scales: the S=100k row carries the ISSUE-10 acceptance
+        # (speedup_vs_xla ≥ 1.5, CI --min-spec); the S=1M row only runs
+        # in full sweeps (it allocates a 256 MB delta stack)
+        fused_scales = (10_000, 100_000) + (
+            (1_000_000,) if 10_000 in scales else ())
+        for S in fused_scales:
+            r = measure_fused_select(S)
+            results[f"fused_select_S{S}"] = r
+            rows.append((f"engine/fused_select_S{S}",
+                         r["us_fused"],
+                         f"us_xla={r['us_xla']:.0f};"
+                         f"device_rounds_s={r['device_rounds_s']:.0f};"
+                         f"speedup_vs_xla={r['speedup_vs_xla']:.2f}x"))
     if grid:
         g = measure_campaign_grid(per_method=grid_per_method)
         results["campaign_grid_4x5"] = g
@@ -508,6 +619,9 @@ def main() -> None:
     ap.add_argument("--no-fault", action="store_true",
                     help="skip the fault-injection overhead row "
                          "(fault_round_S<min scale>)")
+    ap.add_argument("--no-fused", action="store_true",
+                    help="skip the fused selection-pass rows "
+                         "(fused_select_S*)")
     ap.add_argument("--out", default=OUT_PATH,
                     help="output JSON path (default BENCH_engine.json)")
     ap.add_argument("--timed-chunks", type=int, default=3,
@@ -531,7 +645,8 @@ def main() -> None:
         streaming=not args.no_streaming,
         async_rows=not args.no_async,
         phases=not args.no_phases,
-        fault_rows=not args.no_fault)
+        fault_rows=not args.no_fault,
+        fused_rows=not args.no_fused)
 
 
 if __name__ == "__main__":

@@ -15,6 +15,7 @@ from repro.kernels.flash_attention import flash_attention as fl_k, ref as fl_ref
 from repro.kernels.stat_util import ops as su_ops
 
 ENGINE_SCALES = (100, 1_000, 10_000)
+FUSED_SCALES = (10_000, 100_000, 1_000_000)
 
 
 def _time(fn, *args, n=20):
@@ -92,6 +93,18 @@ def run():
     err = float(jnp.abs(got - fl_ref.attention(q, k, v, causal=True)).max())
     rows.append(("kernels/flash_attn_interp_256", us_i,
                  f"max_err_vs_ref={err:.2e};blocks=128x128"))
+
+    # fused utility→top-K→FedAvg selection pass vs the XLA reference
+    # composition (kernels/rewafl_select): the ISSUE-10 hot path. The
+    # engine_bench rows of the same name feed the CI gate; these are the
+    # full microbench sweep including the 1M-device scale.
+    from benchmarks.engine_bench import measure_fused_select
+    for S in FUSED_SCALES:
+        r = measure_fused_select(S)
+        rows.append((f"kernels/fused_select_S{S}", r["us_fused"],
+                     f"us_xla={r['us_xla']:.0f};"
+                     f"device_rounds_s={r['device_rounds_s']:.0f};"
+                     f"speedup_vs_xla={r['speedup_vs_xla']:.2f}x"))
     _engine_rows(rows)
     emit(rows)
     return rows

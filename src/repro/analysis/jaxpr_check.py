@@ -25,8 +25,10 @@ and asserts the invariants the `jit(scan)` engine depends on:
                     throughput drop.
 
 Tracing is abstract — no kernel runs, no real data loads — so the full
-28-cell matrix (7 scenarios x {sync,async} x {dense,streaming}) traces
-in ~10 s on CPU, cheap enough for the CI static-analysis job. The chaos
+32-cell matrix (7 scenarios x {sync,async} x {dense,streaming}, plus
+static-paper x {sync,async} x {dense,streaming} under the forced-pallas
+fused-selection lowering) traces in ~10 s on CPU, cheap enough for the
+CI static-analysis job. The chaos
 scenarios (`lossy-uplink`, `flaky-fleet`) trace the fault-injection +
 robust-screen gates (and, in their async cells, the slot-TTL
 expire/retry path), so chaos-path op-count growth gates in CI exactly
@@ -176,7 +178,8 @@ class HarnessCfg:
 
 
 def build_cell(scenario_name: Optional[str], aggregation: str,
-               telemetry: str, hc: HarnessCfg = HarnessCfg()):
+               telemetry: str, kernel_backend: str = "auto",
+               hc: HarnessCfg = HarnessCfg()):
     """Construct (chunk_fn, args, carry_slice, body_fn, body_args) for
     one matrix cell. Imports are deferred so `repro.analysis` stays
     importable without triggering engine/model imports (the AST linter
@@ -201,7 +204,8 @@ def build_cell(scenario_name: Optional[str], aggregation: str,
     model = make_cnn((8, 8, 1), 4, c1=2, c2=2, d_fc=8)
     fleet = build_fleet(S)
     cfg = FLConfig(n_select=K, batch_size=4, probe_size=4,
-                   policy=PolicyCfg(H0=2, H_max=4))
+                   policy=PolicyCfg(H0=2, H_max=4),
+                   kernel_backend=kernel_backend)
     cx = jnp.zeros((S, n, 8, 8, 1))
     cy = jnp.zeros((S, n), jnp.int32)
     params = model.init(jax.random.PRNGKey(0))
@@ -245,18 +249,25 @@ def build_cell(scenario_name: Optional[str], aggregation: str,
 
 
 def cell_name(scenario: Optional[str], aggregation: str,
-              telemetry: str) -> str:
-    return f"{aggregation}_{telemetry}_{scenario or 'none'}"
+              telemetry: str, kernel_backend: str = "auto") -> str:
+    base = f"{aggregation}_{telemetry}_{scenario or 'none'}"
+    # the default ("auto") resolves to the XLA reference on the pinned
+    # CPU CI runner, so only a forced backend earns a suffix — keeping
+    # the historical cell names (and their baselines) stable
+    if kernel_backend in ("auto", "xla"):
+        return base
+    return f"{base}_{kernel_backend}"
 
 
 def check_cell(scenario: Optional[str], aggregation: str, telemetry: str,
+               kernel_backend: str = "auto",
                hc: HarnessCfg = HarnessCfg()) -> CellReport:
     """Trace one matrix cell and run every contract check against it."""
-    cell = cell_name(scenario, aggregation, telemetry)
+    cell = cell_name(scenario, aggregation, telemetry, kernel_backend)
     findings: List[ContractFinding] = []
     try:
         chunk, args, carry_slice, body, body_args = build_cell(
-            scenario, aggregation, telemetry, hc)
+            scenario, aggregation, telemetry, kernel_backend, hc)
     except Exception as e:  # construction failed — report, don't crash
         return CellReport(cell, -1, -1, (ContractFinding(
             cell, "trace", f"harness construction failed: {e!r}"),))
@@ -295,27 +306,33 @@ def check_cell(scenario: Optional[str], aggregation: str, telemetry: str,
                       tuple(findings))
 
 
-def default_matrix() -> List[Tuple[Optional[str], str, str]]:
+def default_matrix() -> List[Tuple]:
     from repro.sim.dynamics.scenarios import SCENARIOS
-    cells: List[Tuple[Optional[str], str, str]] = []
+    cells: List[Tuple] = []
     for name in sorted(SCENARIOS):
         for agg in ("sync", "async"):
             for tel in ("dense", "streaming"):
                 cells.append((name, agg, tel))
+    # fused kernel_backend cells: the forced-pallas lowering swaps the
+    # rank-space argsort selection for the fused top_k+scatter emission,
+    # so its prim mix gets its own budget rows. One scenario suffices —
+    # the selection lowering is scenario-independent.
+    for agg in ("sync", "async"):
+        for tel in ("dense", "streaming"):
+            cells.append(("static-paper", agg, tel, "pallas"))
     return cells
 
 
-def check_contracts(cells: Optional[Sequence[Tuple[Optional[str], str,
-                                                   str]]] = None,
+def check_contracts(cells: Optional[Sequence[Tuple]] = None,
                     hc: HarnessCfg = HarnessCfg(),
                     progress=None) -> List[CellReport]:
     if cells is None:
         cells = default_matrix()
     reports = []
-    for scenario, agg, tel in cells:
+    for cell in cells:
         if progress is not None:
-            progress(cell_name(scenario, agg, tel))
-        reports.append(check_cell(scenario, agg, tel, hc))
+            progress(cell_name(*cell))
+        reports.append(check_cell(*cell, hc=hc))
     return reports
 
 

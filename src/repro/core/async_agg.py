@@ -205,7 +205,8 @@ def expire_and_retry(st: AsyncState, *, ttl: float, max_retries: int,
 
 def land_once(params, st: AsyncState, m_eff, *, staleness_power: float,
               server_lr: float = 1.0, sync_aggregate=None,
-              sync_pred=None) -> Tuple[Any, AsyncState, Dict[str, Any]]:
+              sync_pred=None, backend: Optional[str] = None
+              ) -> Tuple[Any, AsyncState, Dict[str, Any]]:
     """One buffered-aggregation attempt on the virtual clock.
 
     If at least `m_eff` live updates are pending, the clock advances to
@@ -224,6 +225,10 @@ def land_once(params, st: AsyncState, m_eff, *, staleness_power: float,
     sync `_fedavg` result on bit-identical inputs — instead of the
     delta-form aggregate, making M=K async runs reproduce the sync
     history bitwise. Only armed when server_lr == 1.0.
+
+    `backend` pins the weighted-aggregate lowering (resolved
+    FLConfig.kernel_backend — see kernels/fedavg/ops.py); None keeps
+    the op's attached-backend heuristic.
     """
     S = st.update_staleness.shape[0]
     arr = jnp.where(st.slot_live, st.slot_arrival, jnp.inf)
@@ -245,7 +250,8 @@ def land_once(params, st: AsyncState, m_eff, *, staleness_power: float,
 
     def general():
         def combine(g, d):
-            agg = fedavg_ops.weighted_aggregate(d, wn)  # (P,...)·(P,)->(...)
+            agg = fedavg_ops.weighted_aggregate(d, wn,
+                                                backend=backend)
             return jnp.where(has, (g + server_lr * agg).astype(g.dtype), g)
         return jax.tree.map(combine, params, st.slot_delta)
 

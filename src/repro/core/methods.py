@@ -79,6 +79,21 @@ SELECTOR_IDS = {"random": 0, "oort": 1, "autofl": 2, "rea": 3}
 POLICY_IDS = {"fixed": 0, "adah": 1, "rewa": 2}
 
 
+def selector_branches(builders: dict) -> tuple:
+    """Assemble the traced selection dispatch's `lax.switch` branch
+    tuple in canonical SELECTOR_IDS order from a name→score-builder
+    mapping. The round body (and any kernel-backend lowering of it)
+    supplies one builder per registered selector; a missing or extra
+    name fails at trace time instead of silently routing a branch id to
+    the wrong selector's scores."""
+    if set(builders) != set(SELECTOR_IDS):
+        raise ValueError(
+            f"selector branch names {sorted(builders)} != registry "
+            f"{sorted(SELECTOR_IDS)}")
+    return tuple(builders[name]
+                 for name in sorted(SELECTOR_IDS, key=SELECTOR_IDS.get))
+
+
 class MethodParams(NamedTuple):
     """Traced per-method parameters (all 0-d jnp scalars; stacked to (M,)
     leaves by `method_params_batch` for the method-axis vmap).

@@ -36,10 +36,15 @@ from repro.core import resilience as res
 from repro.core import selection as sel
 from repro.core import utility as util
 from repro.core.async_agg import AsyncCfg
-from repro.core.methods import MethodParams, MethodSpec
+from repro.core.methods import (
+    MethodParams,
+    MethodSpec,
+    selector_branches,
+)
 from repro.core.resilience import ResilienceCfg
 from repro.core.state import AsyncState, FleetState
 from repro.kernels.fedavg import ops as fedavg_ops
+from repro.kernels.rewafl_select import ops as rsel_ops
 from repro.models.fl_models import FLModel
 from repro.sim import faults as flt
 from repro.sim.devices import DeviceFleet
@@ -80,6 +85,13 @@ class FLConfig:
     # faults (core.resilience.ResilienceCfg)
     resilience: ResilienceCfg = dataclasses.field(
         default_factory=ResilienceCfg)
+    # hot-path lowering (kernels/rewafl_select/ops.py): 'xla' is the
+    # reference composition (golden histories are bitwise on it),
+    # 'pallas' the fused utility→top-K→FedAvg pass, 'auto' resolves per
+    # attached backend at trace time. On CPU both resolve to programs
+    # with identical masks; 'pallas' additionally swaps the traced-ε
+    # rank sort for the fused top-k emission.
+    kernel_backend: str = "auto"
 
 
 def _probe_losses(model: FLModel, params, cx, cy, probe: int) -> jax.Array:
@@ -115,14 +127,17 @@ def _local_sgd(model: FLModel, params, x, y, H, key, cfg: FLConfig):
     return jax.lax.fori_loop(0, cfg.policy.H_max, body, params)
 
 
-def _fedavg(global_params, client_params, weights):
-    """θ' = θ + Σ w_k·(θ_k − θ)/Σw — via the fedavg kernel op."""
+def _fedavg(global_params, client_params, weights, backend=None):
+    """θ' = θ + Σ w_k·(θ_k − θ)/Σw — via the fedavg kernel op. `backend`
+    pins the aggregation lowering (FLConfig.kernel_backend, resolved);
+    None keeps the op's legacy attached-backend heuristic."""
     wsum = jnp.maximum(jnp.sum(weights), 1e-9)
     wn = weights / wsum
     has = jnp.sum(weights) > 0
 
     def combine(g, c):
-        agg = fedavg_ops.weighted_aggregate(c, wn)  # (K,...)·(K,) -> (...)
+        agg = fedavg_ops.weighted_aggregate(c, wn,
+                                            backend=backend)
         return jnp.where(has, agg.astype(g.dtype), g)
 
     return jax.tree.map(combine, global_params, client_params)
@@ -188,6 +203,11 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
     screen_on = rcfg.screen_on(faults_on)
     chaos = faults_on or deadline_on      # delivery ≠ participation
     pcfg = cfg.policy
+    # hot-path lowering, resolved once at trace time: every selection /
+    # aggregation consumer below threads this through
+    # kernels/rewafl_select (kb == "xla" reproduces the pre-kernel
+    # graphs exactly — the golden-bitwise path)
+    kb = rsel_ops.resolve_backend(cfg.kernel_backend)
     if method is not None and method.policy == "fixed":
         # fixed-H baselines never exceed H0 — shrink the static loop bound
         # (the traced path cannot: its loop bound must cover every method)
@@ -277,19 +297,30 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
                     state.residual_energy, fleet.e0_reserve,
                     T_round=cfg.T_round, alpha=alpha, beta=beta)
 
+            def rea_inputs():
+                return util.UtilityInputs(
+                    stat, costs.t_total, costs.e_total,
+                    state.residual_energy, fleet.e0_reserve)
+
             if mp is None:
                 if method.selector == "random":
                     selected = sel_random()
                 elif method.selector == "oort":
-                    selected = sel.epsilon_greedy(k_sel, oort_utils(), K,
-                                                  available,
-                                                  method.exploration)
+                    selected = rsel_ops.select_mask(
+                        k_sel, K, available, method.exploration,
+                        scores=oort_utils(), backend=kb)
                 elif method.selector == "autofl":
-                    selected = sel.epsilon_greedy(k_sel, state.q_value, K,
-                                                  available,
-                                                  method.exploration)
-                else:  # "rea": Eqn (2) — REAFL / REAFL+LUPA / REWAFL
-                    selected = sel.top_k_select(rea_utils(), K, available)
+                    selected = rsel_ops.select_mask(
+                        k_sel, K, available, method.exploration,
+                        scores=state.q_value, backend=kb)
+                else:  # "rea": Eqn (2) — REAFL / REAFL+LUPA / REWAFL.
+                    # ε=0 ≡ pure top-K ranking; the pallas backend fuses
+                    # the utility math into the selection kernel from
+                    # the raw FleetState/EnvState-derived leaves
+                    selected = rsel_ops.select_mask(
+                        k_sel, K, available, 0.0, ui=rea_inputs(),
+                        T_round=cfg.T_round, alpha=alpha, beta=beta,
+                        backend=kb)
             else:
                 # one unified rank-space ε-greedy serves every selector:
                 # the switch (branch order = methods.SELECTOR_IDS) only
@@ -299,15 +330,22 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
                 # ranking). One sort-based mechanism to compile instead
                 # of four — masks stay bit-identical to the static
                 # branches above.
-                scores = jax.lax.switch(mp.selector_id, (
-                    lambda: jnp.zeros_like(stat),  # random: ε=1 ignores
-                    oort_utils,
-                    lambda: state.q_value,
-                    rea_utils,
-                ))
-                selected = sel.epsilon_greedy_traced(k_sel, scores, K,
-                                                     available,
-                                                     mp.exploration)
+                scores = jax.lax.switch(
+                    mp.selector_id,
+                    selector_branches({
+                        "random": lambda: jnp.zeros_like(stat),  # ε=1
+                        "oort": oort_utils,
+                        "autofl": lambda: state.q_value,
+                        "rea": rea_utils,
+                    }))
+                # kb == "pallas" swaps the (S,) stable-argsort rank for
+                # the fused lax.top_k candidate emission — same masks
+                # (shared tie rule), so compile-once grids keep their
+                # bitwise parity with the static branches above
+                selected = rsel_ops.select_traced(k_sel, scores, K,
+                                                  available,
+                                                  mp.exploration,
+                                                  backend=kb)
 
         # --- feasibility: selected devices without enough battery fail ---
         feasible = costs.e_total < (state.residual_energy - fleet.e0_reserve)
@@ -388,7 +426,7 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
             ok_k = deliver_k
         if acfg is None:
             with jax.named_scope("round.aggregation"):
-                new_params = _fedavg(params, client_params, weights)
+                new_params = _fedavg(params, client_params, weights, kb)
         else:
             # ---- async dispatch / land (core.async_agg) -----------------
             # Dispatch: the cohort snapshots θ now; its deltas enter the
@@ -439,8 +477,20 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
                 # attempts so terminal partial cohorts still land.
                 pend_after = jnp.sum(astate.slot_live.astype(jnp.int32))
                 stuck = (n_pushed == 0) & (pend_after > 0)
+                # under-K relaxation at the sync-like trigger (M = K):
+                # an under-K cohort (availability < K) entering an EMPTY
+                # buffer would otherwise park until the fleet recovers —
+                # but M=K is exactly the regime sync FedAvg aggregates
+                # every cohort immediately. Landing it keeps the virtual
+                # clock moving and (server_lr=1) arms the bitwise sync
+                # fast path: pend_before == 0 and n_landed == n_pushed.
+                # Gated on m_eff == K so genuine buffering (M < K drains
+                # sub-cohorts, M > K accumulates across rounds) is
+                # untouched.
+                fresh_under = ((pend_before == 0) & (n_pushed > 0)
+                               & (n_pushed < m_eff) & (m_eff == K))
                 m_land = jnp.where(
-                    stuck,
+                    stuck | fresh_under,
                     jnp.maximum(jnp.minimum(m_eff, pend_after), 1), m_eff)
                 # Land: fixed number of masked aggregation attempts,
                 # enough to drain the dispatch back below M. The first
@@ -455,7 +505,8 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
                 for j in range(n_lands):
                     sync_agg = sync_pred = None
                     if j == 0 and acfg.server_lr == 1.0:
-                        sync_agg = _fedavg(params, client_params, weights)
+                        sync_agg = _fedavg(params, client_params,
+                                           weights, kb)
                         sync_pred = (lambda n_landed:
                                      (pend_before == 0)
                                      & (n_landed == n_pushed))
@@ -463,7 +514,8 @@ def _build_round_body(model: FLModel, cfg: FLConfig,
                         new_params, astate, m_land,
                         staleness_power=acfg.staleness_power,
                         server_lr=acfg.server_lr,
-                        sync_aggregate=sync_agg, sync_pred=sync_pred)
+                        sync_aggregate=sync_agg, sync_pred=sync_pred,
+                        backend=kb)
                     n_agg = n_agg + info["did_aggregate"]
                     n_landed_r = n_landed_r + info["n_landed"]
                     stale_sum = stale_sum + info["stale_sum"]

@@ -105,6 +105,58 @@ def epsilon_greedy_traced(key: jax.Array, utils: jax.Array, k: int,
     return sel_x | sel_r
 
 
+# --------------------------------------------- fused rank-space emission
+#
+# The argsort in `_desc_rank` is the traced path's scaling cliff: a full
+# stable O(S log S) sort to answer a top-k question with k ≪ S. The fused
+# emission asks `lax.top_k` for a static k_cap ≥ k candidates once and
+# scatters the first (traced) k of them — same masks, no (S,) rank array.
+# `kernels/rewafl_select` uses these as its CPU lowering; on TPU the same
+# candidate-merge runs inside the Pallas kernel.
+
+def topk_rank_mask(scores: jax.Array, k_live: jax.Array,
+                   k_cap: int) -> jax.Array:
+    """Mask of the first `k_live` entries of `lax.top_k(scores, k_cap)`.
+    Bit-identical to `_desc_rank(scores) < k_live` for 0 ≤ k_live ≤ k_cap
+    (lax.top_k and the stable descending argsort share the
+    tie-toward-lower-index rule) without materialising ranks."""
+    S = scores.shape[-1]
+    if k_cap <= 0:
+        return jnp.zeros((S,), bool)
+    _, idx = jax.lax.top_k(scores, k_cap)
+    live = jnp.arange(k_cap, dtype=jnp.int32) < k_live
+    # dead candidate slots scatter to the OOB index S and are dropped
+    return jnp.zeros((S,), bool).at[jnp.where(live, idx, S)].set(
+        True, mode="drop")
+
+
+def top_k_select_traced_fused(utils: jax.Array, k: jax.Array,
+                              available: jax.Array,
+                              k_cap: int) -> jax.Array:
+    """`top_k_select_traced` via the fused emission: identical masks for
+    any traced 0 ≤ k ≤ k_cap (k_cap is the static selection budget)."""
+    masked = jnp.where(available, utils, NEG)
+    return topk_rank_mask(masked, k, k_cap) & available
+
+
+def epsilon_greedy_traced_fused(key: jax.Array, utils: jax.Array, k: int,
+                                available: jax.Array,
+                                eps: jax.Array) -> jax.Array:
+    """`epsilon_greedy_traced` with both rank queries served by the fused
+    emission (k_cap = k bounds both quotas). Same PRNG use, same quota
+    rule, bit-identical masks."""
+    k = min(k, available.shape[-1])
+    if k <= 0:
+        return jnp.zeros(available.shape, bool)
+    k_explore = jnp.clip(jnp.round(eps * k).astype(jnp.int32), 0, k)
+    k_explore = jnp.where(eps > 0, jnp.maximum(k_explore, 1), 0)
+    sel_x = top_k_select_traced_fused(utils, k - k_explore, available, k)
+    rest = available & ~sel_x
+    scores = jax.random.uniform(key, available.shape)
+    sel_r = top_k_select_traced_fused(scores, k_explore, rest, k)
+    return sel_x | sel_r
+
+
 def temporal_uncertainty(stat: jax.Array, round_idx: jax.Array,
                          last_round: jax.Array) -> jax.Array:
     """Oort's decoupled staleness bonus: long-neglected devices get their

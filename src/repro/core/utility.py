@@ -10,6 +10,8 @@ device whose round energy would dip into its reserve.
 """
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
 
@@ -65,6 +67,26 @@ def rewafl_utility(stat: jax.Array, t: jax.Array, e: jax.Array,
     return (stat
             * latency_utility(t, T_round, alpha)
             * energy_utility(residual, e0, e, beta))
+
+
+class UtilityInputs(NamedTuple):
+    """The FleetState/EnvState leaves Eqn (2) reads, bundled so the fused
+    kernel path (`kernels/rewafl_select`) can compute the REWAFL utility
+    tile-by-tile from raw leaves instead of consuming a materialised (S,)
+    utility array. All five are (S,) f32."""
+    stat: jax.Array       # statistical utility |B|·sqrt(mean loss²)
+    t: jax.Array          # predicted round latency t(i,r)  [s]
+    e: jax.Array          # predicted round energy  e(i,r)  [J]
+    residual: jax.Array   # residual battery energy E_i^r   [J]
+    e0: jax.Array         # reserve threshold E0            [J]
+
+
+def rewafl_utility_from(ui: UtilityInputs, *, T_round: float,
+                        alpha, beta) -> jax.Array:
+    """Eqn (2) evaluated from bundled leaves — the reference emission the
+    fused kernel's in-tile utility math must match."""
+    return rewafl_utility(ui.stat, ui.t, ui.e, ui.residual, ui.e0,
+                          T_round=T_round, alpha=alpha, beta=beta)
 
 
 def autofl_reward(loss_drop: jax.Array, e: jax.Array, *,

@@ -25,9 +25,21 @@ def _use_pallas() -> bool:
 
 
 def weighted_aggregate(stack: jax.Array, weights: jax.Array,
-                       *, interpret: bool | None = None) -> jax.Array:
-    """out = Σ_k w_k·stack[k] for stack (K, ...) of any shape/dtype."""
-    if interpret is None and not _use_pallas():
+                       *, interpret: bool | None = None,
+                       backend: str | None = None) -> jax.Array:
+    """out = Σ_k w_k·stack[k] for stack (K, ...) of any shape/dtype.
+
+    `backend` pins the lowering (`FLConfig.kernel_backend`, resolved):
+    'xla' forces the pure-jnp reference (the golden bitwise path),
+    'pallas' runs the kernel where it can lower (TPU, or interpret=True
+    in tests) and falls back to the reference elsewhere so CPU tier-1
+    stays green. None keeps the legacy attached-backend heuristic."""
+    if backend == "xla":
+        return ref.weighted_aggregate(stack, weights)
+    if backend == "pallas":
+        if not (bool(interpret) or _use_pallas()):
+            return ref.weighted_aggregate(stack, weights)
+    elif interpret is None and not _use_pallas():
         return ref.weighted_aggregate(stack, weights)
     K = stack.shape[0]
     flat = stack.reshape(K, -1)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the fused utility→top-K→FedAvg pass.
+
+This is the *unfused* composition the kernel replaces: materialise the
+(S,) REWAFL utility, rank it into an (S,) selection mask, then reduce the
+dense (S, P) delta stack under that mask. Every fused backend must match
+these outputs (masks bitwise on CPU, aggregate within float tolerance).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import selection as sel
+from repro.core import utility as util
+
+
+def select_ref(key: jax.Array, k: int, available: jax.Array,
+               eps: float, ui: util.UtilityInputs, *, T_round: float,
+               alpha, beta) -> jax.Array:
+    """(S,) ε-greedy selection mask over the Eqn (2) utility."""
+    utils = util.rewafl_utility_from(ui, T_round=T_round, alpha=alpha,
+                                     beta=beta)
+    return sel.epsilon_greedy(key, utils, k, available, eps)
+
+
+def select_aggregate_ref(key: jax.Array, k: int, available: jax.Array,
+                         eps: float, ui: util.UtilityInputs,
+                         deltas: jax.Array, weights: jax.Array, *,
+                         T_round: float, alpha,
+                         beta) -> Tuple[jax.Array, jax.Array]:
+    """mask (S,) + weight-normalised FedAvg of the selected delta rows,
+    computed the dense way: out = Σ_i wn_i·deltas[i] over ALL S rows with
+    unselected weights zeroed (the HBM round-trip the kernel fuses away).
+    Returns (mask, aggregate (P,) f32)."""
+    mask = select_ref(key, k, available, eps, ui, T_round=T_round,
+                      alpha=alpha, beta=beta)
+    coef = jnp.where(mask, weights, 0.0).astype(jnp.float32)
+    wn = coef / jnp.maximum(coef.sum(), 1e-9)
+    out = jnp.tensordot(wn, deltas.astype(jnp.float32), axes=1)
+    return mask, out

@@ -136,6 +136,15 @@ class EngineCfg:
     checkpoint_every: Optional[int] = None
     checkpoint_dir: Optional[str] = None
     resume: Optional[str] = None
+    # carry-compaction: hold the FleetState/EnvState float leaves as
+    # bfloat16 inside the scan carry (expand → round math in f32 →
+    # recompact every round). Halves the float carry bytes per fleet
+    # device — the engine_bench `telemetry_host_bytes` rows report the
+    # saving — at the cost of bf16 rounding of the carried statistics
+    # (residual energy, cached utilities, bandit values, diurnal phase).
+    # Off by default: the default path is byte-identical to not having
+    # the flag, keeping golden histories bitwise.
+    compact_carry: bool = False
 
 
 # --------------------------------------------------------------- sharding
@@ -168,6 +177,71 @@ def _copy_tree(tree):
     return jax.tree.map(lambda x: jnp.asarray(x).copy(), tree)
 
 
+# ---------------------------------------------------- carry compaction
+
+# the f32 leaves squeezed to bf16 when EngineCfg.compact_carry is on.
+# int/bool leaves (H, u, last_round, dropped, counters, channel/plug/
+# online masks) are already minimal and stay untouched.
+_COMPACT_FLEET = ("residual_energy", "last_stat", "last_local_loss",
+                  "last_ecp", "last_energy", "q_value", "g_loss")
+_COMPACT_ENV = ("phase_h",)
+
+
+def _cast_leaves(t, names, dtype):
+    return t._replace(**{n: getattr(t, n).astype(dtype) for n in names})
+
+
+def _compact_pair(state, env):
+    return (_cast_leaves(state, _COMPACT_FLEET, jnp.bfloat16),
+            _cast_leaves(env, _COMPACT_ENV, jnp.bfloat16))
+
+
+def _expand_pair(state, env):
+    return (_cast_leaves(state, _COMPACT_FLEET, jnp.float32),
+            _cast_leaves(env, _COMPACT_ENV, jnp.float32))
+
+
+def _compact_round_body(round_body, async_mode: bool):
+    """Round body operating on a bf16-compacted state/env carry: expand
+    to f32, run the (unchanged, f32) round math, recompact. Params and
+    AsyncState pass through untouched — only the fleet-statistics carry
+    is squeezed."""
+    if async_mode:
+        def body(p, s, a, e, *args):
+            s, e = _expand_pair(s, e)
+            p, s, a, e, m = round_body(p, s, a, e, *args)
+            s, e = _compact_pair(s, e)
+            return p, s, a, e, m
+
+        return body
+
+    def body(p, s, e, *args):
+        s, e = _expand_pair(s, e)
+        p, s, e, m = round_body(p, s, e, *args)
+        s, e = _compact_pair(s, e)
+        return p, s, e, m
+
+    return body
+
+
+def _compact_chunk(chunk, async_mode: bool):
+    """Keep the chunk's external interface full-precision: compact the
+    state/env arguments on entry (so the scan carry holds bf16 leaves)
+    and expand the outputs on exit. Callers (run_rounds, checkpointing)
+    never see a compacted pytree. Arg/output positions are fixed by the
+    chunk variants: state at 1, env at 2 (sync) / 3 (async)."""
+    ei = 3 if async_mode else 2
+
+    def wrapped(*args):
+        args = list(args)
+        args[1], args[ei] = _compact_pair(args[1], args[ei])
+        out = list(chunk(*args))
+        out[1], out[ei] = _expand_pair(out[1], out[ei])
+        return tuple(out)
+
+    return wrapped
+
+
 # ------------------------------------------------------------ chunked scan
 
 def _strip_per_device(m: Dict, collect_per_device: bool, streaming: bool):
@@ -186,7 +260,24 @@ def _strip_per_device(m: Dict, collect_per_device: bool, streaming: bool):
 
 def _chunk_body(round_body, length: int, collect_per_device: bool,
                 telemetry: Optional[TelemetryCfg] = None,
-                async_mode: bool = False):
+                async_mode: bool = False, compact: bool = False):
+    """`_chunk_variants` plus the optional bf16 carry compaction
+    (`EngineCfg.compact_carry`): with `compact` the scan carry holds the
+    bf16-squeezed state/env while the chunk's own signature stays
+    full-precision. `compact=False` returns the variant closure
+    untouched — bitwise-identical to the pre-flag engine."""
+    if not compact:
+        return _chunk_variants(round_body, length, collect_per_device,
+                               telemetry, async_mode)
+    chunk = _chunk_variants(_compact_round_body(round_body, async_mode),
+                            length, collect_per_device, telemetry,
+                            async_mode)
+    return _compact_chunk(chunk, async_mode)
+
+
+def _chunk_variants(round_body, length: int, collect_per_device: bool,
+                    telemetry: Optional[TelemetryCfg] = None,
+                    async_mode: bool = False):
     """R-round scan body: carry (params, state, env, key); fleet/cx/cy
     are loop-invariant arguments threaded to the closure-free round body;
     ys = metric pytree.
@@ -315,7 +406,8 @@ def make_chunk_fn(model: FLModel, cfg: FLConfig, method: MethodSpec, *,
                   chunk_size: int = 8, collect_per_device: bool = True,
                   donate: bool = False, scenario: Optional[Scenario] = None,
                   telemetry: Optional[TelemetryCfg] = None,
-                  async_cfg: Optional[AsyncCfg] = None):
+                  async_cfg: Optional[AsyncCfg] = None,
+                  compact_carry: bool = False):
     """jitted chunk(params, state, env, fleet, cx, cy, key, start_round)
     -> (params', state', env', key', history) running `chunk_size` rounds
     on device. Closure-free like the round body: one compiled chunk
@@ -327,15 +419,20 @@ def make_chunk_fn(model: FLModel, cfg: FLConfig, method: MethodSpec, *,
     (see `core.metrics` for building/draining the carry).
     An `async_cfg` switches to the buffered-aggregation round body and
     inserts an `AsyncState` argument/output after `state`:
-    chunk(params, state, astate, env, ...) -> (..., astate', ...)."""
+    chunk(params, state, astate, env, ...) -> (..., astate', ...).
+    `compact_carry` squeezes the state/env float leaves to bf16 inside
+    the scan carry (`EngineCfg.compact_carry`); the chunk's arguments
+    and outputs stay full-precision either way."""
     if async_cfg is not None:
         body = make_async_round_body(model, cfg, method, scenario,
                                      async_cfg)
         chunk = _chunk_body(body, chunk_size, collect_per_device,
-                            telemetry, async_mode=True)
+                            telemetry, async_mode=True,
+                            compact=compact_carry)
     else:
         body = make_round_body(model, cfg, method, scenario)
-        chunk = _chunk_body(body, chunk_size, collect_per_device, telemetry)
+        chunk = _chunk_body(body, chunk_size, collect_per_device, telemetry,
+                            compact=compact_carry)
     donate_argnums = (0, 1) if donate else ()
     return jax.jit(chunk, donate_argnums=donate_argnums)
 
@@ -587,7 +684,7 @@ def run_rounds(model: FLModel, fleet: DeviceFleet, cx, cy, cfg: FLConfig,
                 collect_per_device=ecfg.collect_per_device,
                 donate=ecfg.donate, scenario=scenario,
                 telemetry=tcfg if streaming else None,
-                async_cfg=acfg)
+                async_cfg=acfg, compact_carry=ecfg.compact_carry)
         return chunk_fns[length]
 
     hh = _HostHistory(rounds, round_axis=0)

@@ -181,7 +181,8 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
            health: Optional[HealthCfg] = None,
            checkpoint_every: Optional[int] = None,
            checkpoint_dir: Optional[str] = None,
-           resume: Optional[str] = None) -> RunResult:
+           resume: Optional[str] = None,
+           kernel_backend: str = "auto") -> RunResult:
     """Run one FL campaign.
 
     engine="scan" (default) runs rounds in compiled `lax.scan` chunks via
@@ -235,6 +236,13 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
     end), logs threshold violations as WARNINGs and attaches the
     `HealthReport` to `RunResult.health`.
 
+    `kernel_backend` pins the selection/aggregation lowering
+    (`FLConfig.kernel_backend`, see docs/kernels.md): "xla" is the
+    reference composition (golden-bitwise), "pallas" the fused
+    utility→top-K→FedAvg pass (`kernels/rewafl_select`), "auto"
+    (default) resolves to pallas on TPU and xla elsewhere — so CPU runs
+    stay bitwise-golden without asking.
+
     `checkpoint_every=N` (scan engine only) serializes the FULL scan
     carry to `checkpoint_dir/ckpt_r{round:08d}.npz` (+ sha256 sidecar)
     every N completed rounds; `resume=PATH` (file or directory —
@@ -266,6 +274,8 @@ def run_fl(task: str = "cnn@mnist", method: str = "rewafl", *,
                      FLConfig(n_select=n_select, alpha=alpha, beta=beta))
     if probe_every != 1:
         cfg = dataclasses.replace(cfg, probe_every=probe_every)
+    if kernel_backend != cfg.kernel_backend:
+        cfg = dataclasses.replace(cfg, kernel_backend=kernel_backend)
     spec = METHODS[method]
     if task == "lstm@shakespeare":
         eval_fn = jax.jit(lambda p: model.accuracy(p, test))
@@ -451,6 +461,13 @@ def main() -> None:
     ap.add_argument("--beta", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--engine", default="scan", choices=("scan", "loop"))
+    ap.add_argument("--kernel-backend", default="auto",
+                    choices=("xla", "pallas", "auto"),
+                    help="selection/aggregation lowering "
+                         "(FLConfig.kernel_backend): xla = reference "
+                         "composition (golden-bitwise), pallas = fused "
+                         "utility→top-K→FedAvg pass, auto = pallas on "
+                         "TPU else xla (docs/kernels.md)")
     ap.add_argument("--chunk-size", type=int, default=8)
     ap.add_argument("--fleet-shards", type=int, default=None)
     ap.add_argument("--scenario", default="static-paper",
@@ -536,7 +553,8 @@ def main() -> None:
                  async_delay=args.async_delay,
                  trace=args.trace, health=hcfg,
                  checkpoint_every=args.checkpoint_every,
-                 checkpoint_dir=args.checkpoint_dir, resume=args.resume)
+                 checkpoint_dir=args.checkpoint_dir, resume=args.resume,
+                 kernel_backend=args.kernel_backend)
     if res.spans is not None:
         log.info("%s", format_span_table(res.spans))
         log.info("trace written to %s", args.trace)

@@ -1,0 +1,360 @@
+"""Fused utility→top-K→FedAvg pass (`kernels/rewafl_select`): traced
+rank-emission mask equivalence vs the argsort reference (incl. under-K
+availability and the ε ∈ {0, 1} edges, plus a hypothesis property test
+when hypothesis is installed), interpret-mode kernel parity vs the
+pure-jnp oracle, engine-level xla↔pallas parity across the scenario ×
+aggregation × telemetry matrix, the async under-K landing relaxation,
+and the bf16 compact-carry engine option."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AsyncCfg, FLConfig, METHODS, TelemetryCfg,
+                        init_fleet_state)
+from repro.core import selection as sel
+from repro.core import utility as util
+from repro.core.policy import PolicyCfg
+from repro.kernels.rewafl_select import ops as rsel_ops
+from repro.kernels.rewafl_select import ref as rsel_ref
+from repro.kernels.rewafl_select import rewafl_select as rsel_kernel
+from repro.launch import engine as eng
+from repro.launch.fl_run import build_task
+from repro.models.fl_models import make_fl_model
+from repro.sim.devices import build_fleet
+from repro.sim.dynamics import get_scenario
+
+N, K = 10, 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = make_fl_model("cnn@mnist", small=True)
+    fleet = build_fleet(N, seed=0, init_energy_mean=0.3)
+    cx, cy, _ = build_task("cnn@mnist", N, 0.8, per_client=16, n_test=32)
+    cfg = FLConfig(n_select=K, batch_size=4, probe_size=4, lr=0.05,
+                   uplink_bits=16e6, policy=PolicyCfg(H0=2, H_max=6))
+    return model, fleet, cx, cy, cfg
+
+
+# ------------------------------------ traced fused emission ≡ argsort ref
+
+
+def _instance(seed, S, p_avail=0.8):
+    key = jax.random.PRNGKey(seed)
+    ks, ka = jax.random.split(key)
+    scores = jax.random.uniform(ks, (S,)) * 10
+    avail = jax.random.uniform(ka, (S,)) < p_avail
+    return scores, avail
+
+
+@pytest.mark.parametrize("eps", [0.0, 0.37, 1.0])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_traced_fused_mask_bitwise(seed, eps):
+    """`epsilon_greedy_traced_fused` (lax.top_k + scatter) must emit the
+    exact mask of `epsilon_greedy_traced` (stable argsort rank): both tie
+    toward the lower index, so equality is bitwise, not approximate."""
+    scores, avail = _instance(seed, 64)
+    key = jax.random.PRNGKey(100 + seed)
+    eps_t = jnp.asarray(eps, jnp.float32)
+    ref = sel.epsilon_greedy_traced(key, scores, 8, avail, eps_t)
+    got = sel.epsilon_greedy_traced_fused(key, scores, 8, avail, eps_t)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_traced_fused_under_k_availability():
+    """Fewer available devices than K: both emissions select exactly the
+    available set, never pad with unavailable indices."""
+    scores = jnp.arange(32.0)
+    avail = jnp.zeros(32, bool).at[jnp.array([3, 17, 29])].set(True)
+    key = jax.random.PRNGKey(5)
+    for eps in (0.0, 0.5, 1.0):
+        eps_t = jnp.asarray(eps, jnp.float32)
+        ref = sel.epsilon_greedy_traced(key, scores, 8, avail, eps_t)
+        got = sel.epsilon_greedy_traced_fused(key, scores, 8, avail,
+                                              eps_t)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+        assert np.asarray(got).sum() == 3
+        assert not (np.asarray(got) & ~np.asarray(avail)).any()
+
+
+def test_traced_fused_duplicate_scores_tie_rule():
+    """All-equal scores is the worst case for a tie rule mismatch: the
+    shared toward-lower-index rule must keep the masks identical."""
+    scores = jnp.ones(48)
+    avail = jnp.ones(48, bool)
+    for seed in range(4):
+        key = jax.random.PRNGKey(seed)
+        eps_t = jnp.asarray(0.25, jnp.float32)
+        ref = sel.epsilon_greedy_traced(key, scores, 6, avail, eps_t)
+        got = sel.epsilon_greedy_traced_fused(key, scores, 6, avail,
+                                              eps_t)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_topk_rank_mask_equals_rank_threshold():
+    """`topk_rank_mask(scores, k, cap) == (_desc_rank(scores) < k)` for
+    every traced k in [0, cap] — the identity the fused emission rests
+    on."""
+    scores, _ = _instance(7, 40, p_avail=1.0)
+    for k in range(9):
+        got = sel.topk_rank_mask(scores, jnp.asarray(k, jnp.int32), 8)
+        ref = sel._desc_rank(scores) < k
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_traced_fused_mask_property():
+    """Property test (hypothesis, skipped where not installed): for any
+    scores/availability/ε/seed the fused emission's mask equals the
+    argsort reference's bitwise."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(
+        seed=st.integers(0, 2**31 - 1),
+        s=st.integers(1, 96),
+        k=st.integers(1, 12),
+        eps=st.floats(0.0, 1.0, allow_nan=False),
+        p_avail=st.floats(0.0, 1.0, allow_nan=False),
+    )
+    @hyp.settings(max_examples=60, deadline=None)
+    def prop(seed, s, k, eps, p_avail):
+        scores, avail = _instance(seed, s, p_avail)
+        key = jax.random.PRNGKey(seed ^ 0x5eed)
+        kk = min(k, s)
+        eps_t = jnp.asarray(eps, jnp.float32)
+        ref = sel.epsilon_greedy_traced(key, scores, kk, avail, eps_t)
+        got = sel.epsilon_greedy_traced_fused(key, scores, kk, avail,
+                                              eps_t)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+    prop()
+
+
+# ------------------------------------- interpret-mode kernel vs oracle
+
+
+def _ui(seed, S):
+    key = jax.random.PRNGKey(seed)
+    u = [jax.random.uniform(jax.random.fold_in(key, i), (S,))
+         for i in range(5)]
+    return util.UtilityInputs(
+        stat=u[0] * 3, t=u[1] * 2 + 0.1, e=u[2] * 0.05 + 0.01,
+        residual=u[3] * 0.5 + 0.1, e0=jnp.full((S,), 0.05)), \
+        u[4] < 0.8
+
+
+@pytest.mark.parametrize("eps", [0.0, 0.25, 1.0])
+def test_kernel_interpret_mask_matches_oracle(eps):
+    """The Pallas kernel (interpret mode on CPU) must reproduce the
+    oracle's selection mask exactly — same utility math, same candidate
+    ranking, same ε-greedy split."""
+    ui, avail = _ui(11, 256)
+    key = jax.random.PRNGKey(42)
+    got = rsel_ops.select_mask(key, 8, avail, eps, ui=ui, T_round=1.0,
+                               alpha=2.0, beta=2.0, backend="pallas",
+                               interpret=True)
+    ref = rsel_ref.select_ref(key, 8, avail, eps, ui, T_round=1.0,
+                              alpha=2.0, beta=2.0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_kernel_interpret_tiled_grid_merge():
+    """Multi-tile grid (block_s < S): the sequential running-state merge
+    across tiles must produce the same selected set as the flat kernel
+    and the oracle."""
+    ui, avail = _ui(13, 384)
+    key = jax.random.PRNGKey(3)
+    rnd = jax.random.uniform(key, (384,))
+    kw = dict(k_exploit=6, k_explore=2, T_round=1.0, alpha=2.0, beta=2.0,
+              interpret=True)
+    args = (ui.stat, ui.t, ui.e, ui.residual, ui.e0,
+            avail.astype(jnp.float32), rnd)
+    idx_t, live_t = rsel_kernel.select_topk(*args, block_s=128, **kw)
+    idx_f, live_f = rsel_kernel.select_topk(*args, block_s=384, **kw)
+    m_t = rsel_ops._mask_from_slots(idx_t, live_t, 384)
+    m_f = rsel_ops._mask_from_slots(idx_f, live_f, 384)
+    np.testing.assert_array_equal(np.asarray(m_t), np.asarray(m_f))
+
+
+def test_kernel_interpret_select_aggregate_matches_oracle():
+    """Full fused pass in interpret mode: mask bitwise vs the oracle,
+    aggregate within float tolerance (K-row gather-reduce vs the dense
+    masked S-row reduction reorders the summation)."""
+    S, P = 256, 48
+    ui, avail = _ui(17, S)
+    key = jax.random.PRNGKey(9)
+    deltas = jax.random.normal(jax.random.fold_in(key, 1), (S, P))
+    weights = jax.random.uniform(jax.random.fold_in(key, 2), (S,)) + 0.5
+    mask_k, agg_k = rsel_ops.select_aggregate(
+        key, 8, avail, 0.25, ui, deltas, weights, T_round=1.0,
+        alpha=2.0, beta=2.0, backend="pallas", interpret=True)
+    mask_r, agg_r = rsel_ref.select_aggregate_ref(
+        key, 8, avail, 0.25, ui, deltas, weights, T_round=1.0,
+        alpha=2.0, beta=2.0)
+    np.testing.assert_array_equal(np.asarray(mask_k), np.asarray(mask_r))
+    np.testing.assert_allclose(np.asarray(agg_k), np.asarray(agg_r),
+                               atol=1e-5)
+
+
+def test_select_aggregate_under_k_and_empty():
+    """k larger than the available set, and k == 0: the fused pass must
+    mirror the oracle's behaviour, not crash or pad with dead rows."""
+    S, P = 64, 16
+    ui, _ = _ui(23, S)
+    avail = jnp.zeros(S, bool).at[jnp.array([5, 40])].set(True)
+    key = jax.random.PRNGKey(1)
+    deltas = jax.random.normal(key, (S, P))
+    weights = jnp.ones((S,))
+    mask_k, agg_k = rsel_ops.select_aggregate(
+        key, 8, avail, 0.0, ui, deltas, weights, T_round=1.0, alpha=2.0,
+        beta=2.0, backend="pallas", interpret=True)
+    mask_r, agg_r = rsel_ref.select_aggregate_ref(
+        key, 8, avail, 0.0, ui, deltas, weights, T_round=1.0, alpha=2.0,
+        beta=2.0)
+    np.testing.assert_array_equal(np.asarray(mask_k), np.asarray(mask_r))
+    assert np.asarray(mask_k).sum() == 2
+    np.testing.assert_allclose(np.asarray(agg_k), np.asarray(agg_r),
+                               atol=1e-5)
+    mask0, agg0 = rsel_ops.select_aggregate(
+        key, 0, avail, 0.0, ui, deltas, weights, T_round=1.0, alpha=2.0,
+        beta=2.0, backend="pallas", interpret=True)
+    assert not np.asarray(mask0).any() and not np.asarray(agg0).any()
+
+
+# ------------------------------- engine parity: kernel_backend matrix
+
+
+def _run_backend(setup, backend, *, scenario=None, async_cfg=None,
+                 telemetry=None, rounds=4):
+    model, fleet, cx, cy, cfg = setup
+    cfg = dataclasses.replace(cfg, kernel_backend=backend)
+    return eng.run_rounds(
+        model, fleet, cx, cy, cfg, METHODS["rewafl"], rounds=rounds,
+        key=jax.random.PRNGKey(7),
+        params=model.init(jax.random.PRNGKey(0)), scenario=scenario,
+        ecfg=eng.EngineCfg(chunk_size=2, async_cfg=async_cfg,
+                           telemetry=telemetry or TelemetryCfg()))
+
+
+@pytest.mark.parametrize("scenario_name,agg,tel", [
+    ("static-paper", "sync", "dense"),
+    ("static-paper", "async", "streaming"),
+    ("commuter-diurnal", "sync", "streaming"),
+    ("commuter-diurnal", "async", "dense"),
+])
+def test_engine_backend_parity(setup, scenario_name, agg, tel):
+    """xla vs pallas through the real engine: on CPU the pallas lowering
+    swaps only the selection emission (bitwise by the shared tie rule)
+    and the aggregation falls back to the reference, so selections match
+    exactly and the float trajectory within tolerance."""
+    scenario = get_scenario(scenario_name)
+    acfg = AsyncCfg(buffer_m=K) if agg == "async" else None
+    tcfg = TelemetryCfg(mode="streaming") if tel == "streaming" else None
+    a = _run_backend(setup, "xla", scenario=scenario, async_cfg=acfg,
+                     telemetry=tcfg)
+    b = _run_backend(setup, "pallas", scenario=scenario, async_cfg=acfg,
+                     telemetry=tcfg)
+    assert a.history.keys() == b.history.keys()
+    if "selected" in a.history:  # dense history; streaming reduces it
+        np.testing.assert_array_equal(np.asarray(a.history["selected"]),
+                                      np.asarray(b.history["selected"]))
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=1e-6)
+    for k in ("global_loss", "n_participating"):
+        if k in a.history:
+            np.testing.assert_allclose(np.asarray(a.history[k]),
+                                       np.asarray(b.history[k]),
+                                       atol=1e-6, err_msg=k)
+
+
+# ---------------------------------- async under-K landing (satellite 1)
+
+
+def test_async_under_k_fresh_cohort_lands(setup):
+    """A fleet that can never field K devices: at M=K the old strict
+    `pending >= M` trigger parked every fresh under-K cohort until a
+    second one accumulated; the relaxation lands it immediately, so the
+    very first round must aggregate."""
+    model, fleet, cx, cy, cfg = setup
+    state = init_fleet_state(fleet, H0=cfg.policy.H0)
+    # leave only 2 of N devices alive — cohorts of 2 < K = 4 forever
+    dropped = jnp.ones(N, bool).at[jnp.array([1, 6])].set(False)
+    state = state._replace(dropped=dropped)
+    res = eng.run_rounds(
+        model, fleet, cx, cy, cfg, METHODS["rewafl"], rounds=4,
+        key=jax.random.PRNGKey(7),
+        params=model.init(jax.random.PRNGKey(0)), state=state,
+        ecfg=eng.EngineCfg(chunk_size=2, async_cfg=AsyncCfg(buffer_m=K)))
+    landed = np.asarray(res.history["n_landed"])
+    assert landed[0] > 0, f"fresh under-K cohort parked: n_landed={landed}"
+    assert (landed > 0).all()
+    assert np.asarray(res.history["n_pending"])[-1] == 0
+
+
+def test_async_full_cohort_unaffected_by_relaxation(setup):
+    """The relaxation must never fire when the cohort fills the buffer:
+    async M=K with full availability stays bitwise-identical to the sync
+    engine (the tentpole fast-path contract)."""
+    model, fleet, cx, cy, cfg = setup
+    kw = dict(rounds=4, key=jax.random.PRNGKey(7),
+              params=model.init(jax.random.PRNGKey(0)))
+    sync = eng.run_rounds(model, fleet, cx, cy, cfg, METHODS["rewafl"],
+                          ecfg=eng.EngineCfg(chunk_size=2), **kw)
+    asyn = eng.run_rounds(model, fleet, cx, cy, cfg, METHODS["rewafl"],
+                          ecfg=eng.EngineCfg(chunk_size=2,
+                                             async_cfg=AsyncCfg(
+                                                 buffer_m=K)), **kw)
+    for x, y in zip(jax.tree.leaves(sync.params),
+                    jax.tree.leaves(asyn.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    np.testing.assert_array_equal(np.asarray(sync.history["selected"]),
+                                  np.asarray(asyn.history["selected"]))
+
+
+# --------------------------------------- compact carry (satellite 2)
+
+
+def test_compact_carry_off_is_bitwise(setup):
+    """compact_carry=False must leave the chunk closures untouched — the
+    run is bitwise-identical to the default EngineCfg."""
+    model, fleet, cx, cy, cfg = setup
+    kw = dict(rounds=4, key=jax.random.PRNGKey(7),
+              params=model.init(jax.random.PRNGKey(0)))
+    a = eng.run_rounds(model, fleet, cx, cy, cfg, METHODS["rewafl"],
+                       ecfg=eng.EngineCfg(chunk_size=2), **kw)
+    b = eng.run_rounds(model, fleet, cx, cy, cfg, METHODS["rewafl"],
+                       ecfg=eng.EngineCfg(chunk_size=2,
+                                          compact_carry=False), **kw)
+    for x, y in zip(jax.tree.leaves((a.params, a.state)),
+                    jax.tree.leaves((b.params, b.state))):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("use_async", [False, True])
+def test_compact_carry_on_runs_and_approximates(setup, use_async):
+    """compact_carry=True: the scan carry holds bf16 fleet/env floats but
+    the external interface stays f32, and the trajectory tracks the f32
+    run within bf16 tolerance."""
+    model, fleet, cx, cy, cfg = setup
+    acfg = AsyncCfg(buffer_m=K) if use_async else None
+    kw = dict(rounds=4, key=jax.random.PRNGKey(7),
+              params=model.init(jax.random.PRNGKey(0)))
+    a = eng.run_rounds(model, fleet, cx, cy, cfg, METHODS["rewafl"],
+                       ecfg=eng.EngineCfg(chunk_size=2, async_cfg=acfg),
+                       **kw)
+    b = eng.run_rounds(model, fleet, cx, cy, cfg, METHODS["rewafl"],
+                       ecfg=eng.EngineCfg(chunk_size=2, async_cfg=acfg,
+                                          compact_carry=True), **kw)
+    assert b.state.residual_energy.dtype == jnp.float32
+    assert b.rounds_run == a.rounds_run
+    # bf16 has ~3 decimal digits; the 4-round trajectory stays close
+    np.testing.assert_allclose(
+        np.asarray(b.history["global_loss"]),
+        np.asarray(a.history["global_loss"]), rtol=0.05, atol=0.05)
+    np.testing.assert_allclose(np.asarray(b.state.residual_energy),
+                               np.asarray(a.state.residual_energy),
+                               rtol=0.02, atol=0.01)
